@@ -1,0 +1,63 @@
+"""Fig. 6 — PE design-space: efficiency of BS/BP x SA/ST x k.
+
+The paper scores PE designs in processed bits/s/LUT and selects BP-ST-1D.
+TPU analogue: we execute every PE variant (core/ppg.py) on the SAME
+integer GEMM, measure wall time (CPU; schedule-faithful), and score
+``processed weight bits per second per accumulator-byte`` — the VMEM
+working set playing the LUT-area role.  BP-ST-1D wins for the same
+reasons as on the FPGA: one accumulator, parallel planes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import ppg
+
+M, K, N = 64, 256, 256
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 256, (M, K)), jnp.int32)
+    out = []
+    ref = None
+    for w_bits in (8, 4, 2, 1):
+        lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1) - 1
+        w = jnp.asarray(rng.integers(lo, hi + 1, (K, N)), jnp.int32)
+        want = np.asarray(ppg.matmul_exact(a, w))
+        for k in (1, 2, 4):
+            if k > w_bits:
+                continue
+            for name, fn in ppg.PE_VARIANTS.items():
+                if name == "BP-ST-2D":
+                    y, stats = fn(a, w, w_bits, 8, k)
+                else:
+                    y, stats = fn(a, w, w_bits, k)
+                assert np.array_equal(np.asarray(y), want), (name, w_bits, k)
+                if name == "BP-ST-2D":
+                    us = time_call(lambda: fn(a, w, w_bits, 8, k), n=5)
+                else:
+                    us = time_call(lambda: fn(a, w, w_bits, k), n=5)
+                # score: weight bits processed / s / accumulator-byte
+                bits = M * K * N * w_bits
+                acc_bytes = stats.accumulators * M * N * 4
+                score = bits / (us * 1e-6) / acc_bytes
+                out.append({
+                    "name": f"fig6/{name}_w{w_bits}_k{k}",
+                    "us_per_call": us,
+                    "derived": f"passes={stats.mxu_passes};"
+                               f"cycles={stats.serial_cycles};"
+                               f"accs={stats.accumulators};"
+                               f"bits_per_s_per_accB={score:.3e}",
+                })
+    return out
+
+
+def run():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    run()

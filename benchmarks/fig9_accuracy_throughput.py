@@ -1,0 +1,89 @@
+"""Fig. 9 — accuracy vs throughput across word-lengths (QAT, toy scale).
+
+ImageNet at full scale is not available offline, so the accuracy axis is
+reproduced as a *trend* on a learnable synthetic task (class-conditional
+Gaussian blobs, data/pipeline.SyntheticImages) with the reduced ResNet-18
+under the SAME LSQ QAT path used everywhere else: FP > w4 ~ FP > w2 > w1,
+matching the paper's ordering.  The throughput axis is the DSE roofline
+frames/s at each deployment point (same numbers as Table IV/V).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro import configs
+from repro.core.dse import choose_tile
+from repro.core.precision import PrecisionPolicy
+from repro.data.pipeline import SyntheticImages
+from repro.models import resnet as R
+from repro.optim import adamw_init, adamw_update
+
+
+def _accuracy_for(policy, steps=60, batch=32, seed=0):
+    api = configs.get("resnet18", reduced=True, policy=policy)
+    cfg = api.cfg
+    params = api.init_params(jax.random.PRNGKey(seed))
+    state = R.init_bn_state(R.specs(cfg))
+    opt = adamw_init(params)
+    pipe = SyntheticImages(n_classes=cfg.n_classes, img_size=cfg.img_size,
+                           global_batch=batch, seed=seed)
+
+    @jax.jit
+    def step(params, state, opt, images, labels):
+        def loss_fn(p):
+            logits, new_st = R.apply_with_state(cfg, p, state, images,
+                                                policy, training=True)
+            lf = logits.astype(jnp.float32)
+            ll = jax.nn.log_softmax(lf)[jnp.arange(labels.shape[0]), labels]
+            return -ll.mean(), new_st
+        (loss, new_st), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_p, new_opt = adamw_update(grads, opt, params, lr=3e-3)
+        return new_p, new_st, new_opt, loss
+
+    for i in range(steps):
+        b = pipe.batch_at(i)
+        params, state, opt, loss = step(params, state, opt,
+                                        jnp.asarray(b["images"]),
+                                        jnp.asarray(b["labels"]))
+    # eval on fresh batches
+    correct = total = 0
+    for i in range(steps, steps + 4):
+        b = pipe.batch_at(i)
+        logits, _ = R.apply_with_state(cfg, params, state,
+                                       jnp.asarray(b["images"]), policy,
+                                       training=False)
+        correct += int((jnp.argmax(logits, -1) == jnp.asarray(b["labels"])).sum())
+        total += b["labels"].shape[0]
+    return correct / total
+
+
+def rows(steps=60):
+    api = configs.get("resnet18")
+    gemms = api.gemm_workload(1)
+    out = []
+    for wq in ("FP", 4, 2, 1):
+        pol = (PrecisionPolicy(quantize=False) if wq == "FP"
+               else PrecisionPolicy(inner_bits=wq, k=min(wq, 4)))
+        acc = _accuracy_for(pol, steps=steps)
+        if wq == "FP":
+            fps = ""
+        else:
+            choice = choose_tile(gemms, w_bits=wq, k=min(wq, 4))
+            fps = f"{1.0 / choice.total_time_s:.0f}"
+        out.append({
+            "name": f"fig9/resnet18_w{wq}",
+            "us_per_call": "",
+            "derived": f"toy_acc={acc:.3f};fps={fps}",
+        })
+    return out
+
+
+def run():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Microbenchmark of the mpmm paths (wall-clock, this host).
+
+CPU wall-times are NOT TPU projections — they validate the harness and
+give the relative plane-count scaling; the TPU numbers live in the
+roofline tables (EXPERIMENTS.md §Roofline, from the compiled dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import packing
+from repro.core.packing import PlaneFormat
+from repro.kernels.mpmm import ops
+
+M, K, N = 256, 1024, 1024
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int8)
+    af = jnp.asarray(rng.normal(size=(M, K)), jnp.bfloat16)
+    wf = jnp.asarray(rng.normal(size=(K, N)), jnp.bfloat16)
+    out = []
+
+    bf16 = jax.jit(lambda x, w: x @ w)
+    us = time_call(bf16, af, wf)
+    out.append({"name": "micro/bf16_matmul", "us_per_call": us,
+                "derived": f"gflops={2*M*K*N/us/1e3:.1f}"})
+
+    for w_bits, k in ((8, 8), (8, 2), (4, 4), (4, 2), (2, 2), (1, 1)):
+        lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1) - 1
+        w_int = jnp.asarray(rng.integers(lo, hi + 1, (K, N)), jnp.int32)
+        fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=K)
+        planes = packing.pack_planes(w_int, fmt, axis=-2)
+        gamma = jnp.full((1, N), 0.01, jnp.float32)
+        colsum = jnp.sum(w_int, axis=0, dtype=jnp.int32).reshape(1, N)
+        fn = jax.jit(lambda a_, p_, g_, c_: ops.mpmm(
+            a_, p_, g_, c_, fmt=fmt, impl="xla"))
+        us = time_call(fn, a, planes, gamma, colsum)
+        out.append({
+            "name": f"micro/mpmm_xla_w{w_bits}_k{k}",
+            "us_per_call": us,
+            "derived": f"planes={fmt.planes};"
+                       f"packed_MB={planes.size/2**20:.2f};"
+                       f"gops={2*M*K*N*fmt.planes/us/1e3:.1f}",
+        })
+    return out
+
+
+def run():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    run()

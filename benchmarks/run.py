@@ -1,0 +1,58 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``python -m benchmarks.run [--only fig6,tab3] [--fig9-steps N]``
+prints ``name,us_per_call,derived`` CSV (the harness contract).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    ("fig3", "benchmarks.fig3_dsp_energy"),
+    ("fig6", "benchmarks.fig6_pe_dse"),
+    ("fig7", "benchmarks.fig7_slice_energy"),
+    ("fig8", "benchmarks.fig8_bram"),
+    ("fig9", "benchmarks.fig9_accuracy_throughput"),
+    ("tab2", "benchmarks.tab2_pe_arrays"),
+    ("tab3", "benchmarks.tab3_footprint"),
+    ("tab4", "benchmarks.tab4_energy_frame"),
+    ("tab5", "benchmarks.tab5_sota"),
+    ("micro", "benchmarks.kernel_micro"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig6,tab3")
+    ap.add_argument("--fig9-steps", type=int, default=60)
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            if tag == "fig9":
+                emit(mod.rows(steps=args.fig9_steps))
+            else:
+                emit(mod.rows())
+        except Exception:
+            failures.append(tag)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Table II — chosen PE-array dimensions per CNN and operand slice.
+
+TPU mapping: the PE-array (H, W, D) choice becomes the Pallas tile
+(bm, bk, bn) choice; core/dse.choose_tile runs the same greedy sweep the
+paper describes (maximize Ops/resource under the VMEM=BRAM budget).
+Paper reference rows included for comparison.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro import configs
+from repro.core.dse import choose_tile
+
+PAPER_TABLE2 = {
+    ("resnet18", 1): (7, 3, 32, 672),
+    ("resnet18", 2): (7, 5, 37, 1295),
+    ("resnet18", 4): (7, 4, 66, 1848),
+    ("resnet50", 1): (7, 3, 33, 693),
+    ("resnet50", 2): (7, 5, 37, 1295),
+    ("resnet50", 4): (7, 4, 71, 1988),
+}
+
+
+def rows():
+    out = []
+    for arch in ("resnet18", "resnet50", "resnet152"):
+        api = configs.get(arch)
+        gemms = api.gemm_workload(1)
+        for k in (1, 2, 4):
+            choice = choose_tile(gemms, w_bits=max(k, 1), k=k)
+            ref = PAPER_TABLE2.get((arch if arch != "resnet152" else
+                                    "resnet50", k))
+            bm, bk, bn = choice.tile.as_tuple()
+            out.append({
+                "name": f"tab2/{arch}_k{k}",
+                "us_per_call": "",
+                "derived": f"tile={bm}x{bk}x{bn};"
+                           f"util={choice.mean_utilization:.3f};"
+                           f"vmem_kB={choice.vmem_bytes/1024:.0f};"
+                           f"model_time_ms={choice.total_time_s*1e3:.2f};"
+                           f"paper_HWD={'x'.join(map(str, ref[:3])) if ref else 'n/a'}",
+            })
+    return out
+
+
+def run():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Table V — state-of-the-art comparison (throughput head-to-head).
+
+The paper compares GOps/s and frames/s against [15][26][27][34] on the
+same CNNs.  We report our DSE-model throughput for ResNet-50/152 at the
+paper's deployment points (w_Q=2, acts 8 bit), plus the TPU-roofline
+frames/s a single v5e chip would reach with the packed-plane path.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro import configs
+from repro.core.dse import choose_tile
+from repro.core.roofline import TPU_V5E
+
+PAPER_TABLE5 = [
+    ("this_work", "resnet50", 2, 938.33, 129.38),
+    ("this_work", "resnet152", 2, 1131.38, 51.19),
+    ("this_work", "resnet152", 8, 311.16, 14.08),
+    ("nguyen[27]", "resnet152", 8, 726.0, 32.1),
+    ("ma[15]", "resnet152", 16, 276.6, 12.23),
+    ("maki[34]", "resnet50", 1, 95.4, None),
+]
+
+
+def rows():
+    out = [{
+        "name": f"tab5/paper_{who}_{arch}_w{w}",
+        "us_per_call": "",
+        "derived": f"GOps_s={g};fps={f}",
+    } for who, arch, w, g, f in PAPER_TABLE5]
+
+    for arch, wq in (("resnet50", 2), ("resnet152", 2), ("resnet152", 8)):
+        api = configs.get(arch)
+        gemms = api.gemm_workload(1)
+        macs = sum(g.macs for g in gemms)
+        choice = choose_tile(gemms, w_bits=wq, k=min(wq, 4))
+        fps = 1.0 / choice.total_time_s
+        gops = 2 * macs * fps / 1e9
+        out.append({
+            "name": f"tab5/ours_tpu_{arch}_w{wq}",
+            "us_per_call": "",
+            "derived": f"GOps_s={gops:.0f};fps={fps:.0f};"
+                       f"bound={'compute' if choice.compute_s > choice.memory_s else 'memory'}",
+        })
+    return out
+
+
+def run():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    run()

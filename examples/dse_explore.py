@@ -1,0 +1,36 @@
+"""Run the paper's holistic DSE for an arbitrary workload (Fig. 2 flow).
+
+Blue box  : PE realization  — operand slice k, ST vs SA (core/ppg.py)
+Red box   : PE array dims   — Pallas tile (bm, bk, bn) under VMEM budget
+Green box : dataflow        — roofline over the whole network
+
+Run:  PYTHONPATH=src python examples/dse_explore.py [--arch yi-34b]
+"""
+import argparse
+
+from repro import configs
+from repro.core.dse import dse_sweep
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--arch", default="resnet18",
+                    choices=configs.ARCH_NAMES + configs.RESNET_NAMES)
+parser.add_argument("--w-bits", type=int, default=4, choices=(1, 2, 4, 8))
+parser.add_argument("--tokens", type=int, default=4096,
+                    help="tokens (LM) or batch (CNN) for the workload")
+args = parser.parse_args()
+
+api = configs.get(args.arch)
+gemms = api.gemm_workload(args.tokens)
+print(f"workload: {args.arch} @ w_Q={args.w_bits} — {len(gemms)} GEMM kinds, "
+      f"{sum(g.macs for g in gemms)/1e9:.1f} GMACs\n")
+print(f"{'k':>2} {'var':>4} {'tile':>14} {'util':>6} {'VMEM kB':>8} "
+      f"{'compute ms':>11} {'memory ms':>10} {'total ms':>9}")
+for c in dse_sweep(gemms, w_bits=args.w_bits):
+    bm, bk, bn = c.tile.as_tuple()
+    print(f"{c.k:>2} {c.variant:>4} {f'{bm}x{bk}x{bn}':>14} "
+          f"{c.mean_utilization:>6.3f} {c.vmem_bytes/1024:>8.0f} "
+          f"{c.compute_s*1e3:>11.3f} {c.memory_s*1e3:>10.3f} "
+          f"{c.total_time_s*1e3:>9.3f}")
+best = dse_sweep(gemms, w_bits=args.w_bits)[0]
+print(f"\nchosen: k={best.k} {best.variant.upper()} tile={best.tile.as_tuple()}"
+      f" — the BP-ST-1D analogue the paper selects (Fig. 6)")

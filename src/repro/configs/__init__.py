@@ -1,0 +1,55 @@
+"""Architecture configs: one module per assigned architecture (+ the
+paper's ResNets).  ``get(name)`` returns a ModelAPI; ``ARCH_NAMES`` is the
+assigned 10-arch pool."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+from repro.core.precision import PrecisionPolicy
+from repro.models.api import ModelAPI
+
+ARCH_NAMES = [
+    "granite-34b",
+    "granite-8b",
+    "nemotron-4-340b",
+    "yi-34b",
+    "mamba2-1.3b",
+    "chameleon-34b",
+    "olmoe-1b-7b",
+    "deepseek-v2-lite-16b",
+    "whisper-base",
+    "recurrentgemma-9b",
+]
+
+RESNET_NAMES = ["resnet18", "resnet50", "resnet152"]
+
+_MODULES = {
+    "granite-34b": "granite_34b",
+    "granite-8b": "granite_8b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "yi-34b": "yi_34b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "chameleon-34b": "chameleon_34b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "whisper-base": "whisper_base",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "resnet18": "resnet18",
+    "resnet50": "resnet50",
+    "resnet152": "resnet152",
+}
+
+
+def get(name: str, *, policy: Optional[PrecisionPolicy] = None,
+        reduced: bool = False) -> ModelAPI:
+    """Build the ModelAPI for an architecture.
+
+    reduced=True returns the same family at smoke-test scale (small
+    layers/width/experts, tiny vocab) — used by per-arch CPU smoke tests;
+    the FULL config is exercised only through the dry-run.
+    """
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.build(policy=policy, reduced=reduced)

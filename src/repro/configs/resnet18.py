@@ -1,0 +1,15 @@
+"""ResNet-18 — the paper's own benchmark CNN (Tables II-V, Fig. 9)."""
+from repro.core.precision import PrecisionPolicy
+from repro.models import resnet
+from repro.models.api import ModelAPI
+from repro.models.resnet import ResNetConfig
+
+FULL = ResNetConfig(name="resnet18", depth=18, n_classes=1000, img_size=224)
+REDUCED = ResNetConfig(name="resnet18-smoke", depth=18, n_classes=10,
+                       img_size=32)
+
+
+def build(policy=None, reduced=False):
+    return ModelAPI(name=FULL.name, family="cnn",
+                    cfg=REDUCED if reduced else FULL, mod=resnet,
+                    policy=policy or PrecisionPolicy(inner_bits=2, k=2))

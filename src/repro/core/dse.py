@@ -1,0 +1,230 @@
+"""Holistic design-space exploration (paper Section III, Fig. 2) on TPU.
+
+The paper's three boxes map onto TPU decisions:
+
+  blue  (PE DSE)        -> kernel variant (ST/SA x slice k): MXU passes
+                           P = ceil(w_Q/k), accumulator VMEM, packed bytes.
+  red   (PE-array DSE)  -> Pallas tile dims (bm, bk, bn): Eq. 1 N_PE
+                           becomes the tile MAC count, Eq. 2 BRAM_NPA
+                           becomes the VMEM working set, Eq. 3 U(l)
+                           becomes ceil-division tile-quantization waste.
+  green (dataflow)      -> per-layer roofline feedback: every candidate is
+                           scored by sum_l max(compute_s, memory_s) over
+                           the model's GEMM workload; bandwidth-infeasible
+                           points are discarded (the paper's roofline
+                           check), the throughput-optimal point is chosen.
+
+All candidates are enumerated exhaustively under the hardware constraints
+(VMEM capacity, MXU 128-alignment), exactly like the paper's greedy
+"explore all possible solutions, then compile the feasible ones".
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.packing import PlaneFormat, num_planes
+from repro.core.roofline import HW, TPU_V5E
+
+__all__ = [
+    "Gemm",
+    "TileCandidate",
+    "vmem_working_set",
+    "tile_utilization",
+    "gemm_time",
+    "choose_tile",
+    "dse_sweep",
+    "DseChoice",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Gemm:
+    """One GEMM of the workload: out[M,N] += act[M,K] @ w[K,N], `count` x.
+
+    layer_class 'boundary' layers run at 8 bit regardless of policy
+    (paper: first/last layers pinned).
+    """
+
+    name: str
+    m: int
+    k: int
+    n: int
+    count: int = 1
+    layer_class: str = "inner"
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n * self.count
+
+
+@dataclasses.dataclass(frozen=True)
+class TileCandidate:
+    bm: int
+    bk: int
+    bn: int
+
+    def as_tuple(self) -> Tuple[int, int, int]:
+        return (self.bm, self.bk, self.bn)
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def vmem_working_set(
+    tile: TileCandidate, fmt: PlaneFormat, variant: str = "st"
+) -> int:
+    """Eq. 2 analogue: bytes of VMEM live per tile step (double-buffered).
+
+    BRAM_partial-sums -> accumulator tile(s); BRAM_activations -> int8 act
+    tile; BRAM_weights -> packed digit-plane tile.  The paper's N/w_Q
+    factor appears as the packed-weight byte count (bk * w_Q/8 per column).
+    """
+    p = fmt.planes
+    f = fmt.digits_per_byte
+    act = tile.bm * tile.bk                      # int8
+    wgt = p * _ceil(tile.bk, f) * tile.bn        # uint8 packed planes
+    accs = (p if variant == "sa" else 1) * tile.bm * tile.bn * 4
+    out = tile.bm * tile.bn * 4
+    scales = 2 * tile.bn * 8                     # gamma + colsum blocks
+    return 2 * (act + wgt) + accs + out + scales  # 2x: double buffering
+
+
+def tile_utilization(g: Gemm, tile: TileCandidate) -> float:
+    """Eq. 3 analogue: ideal MACs / padded MACs (ceil-division waste)."""
+    padded = (
+        _ceil(g.m, tile.bm) * tile.bm
+        * _ceil(g.k, tile.bk) * tile.bk
+        * _ceil(g.n, tile.bn) * tile.bn
+    )
+    return (g.m * g.k * g.n) / padded
+
+
+def _mxu_efficiency(tile: TileCandidate) -> float:
+    """Fraction of the 128x128 MXU (and 8-deep sublanes) a tile feeds."""
+    eff_k = tile.bk / (_ceil(tile.bk, 128) * 128)
+    eff_n = tile.bn / (_ceil(tile.bn, 128) * 128)
+    eff_m = tile.bm / (_ceil(tile.bm, 8) * 8)
+    return eff_k * eff_n * eff_m
+
+
+def gemm_time(
+    g: Gemm,
+    tile: TileCandidate,
+    fmt: PlaneFormat,
+    hw: HW = TPU_V5E,
+    variant: str = "st",
+    a_bits: int = 8,
+) -> Tuple[float, float]:
+    """(compute_s, memory_s) for one GEMM under this tile/format.
+
+    Compute: P MXU passes over the padded loop nest at int8 peak.
+    Memory:  tiled-matmul HBM traffic with the tile's temporal reuse —
+    activations re-read per N-tile, packed weights re-read per M-tile
+    (the paper's P_actual), outputs written once.
+    """
+    p = fmt.planes
+    gm, gk, gn = _ceil(g.m, tile.bm), _ceil(g.k, tile.bk), _ceil(g.n, tile.bn)
+    padded_macs = gm * tile.bm * gk * tile.bk * gn * tile.bn
+    compute_s = (
+        g.count * 2.0 * padded_macs * p / (hw.peak_ops_int8 * _mxu_efficiency(tile))
+    )
+    act_bytes = g.m * g.k * 1 * gn               # int8 acts, re-read per bn tile
+    wgt_bytes = p * _ceil(g.k, fmt.digits_per_byte) * g.n * gm  # packed, per bm tile
+    out_bytes = g.m * g.n * 4
+    memory_s = g.count * (act_bytes + wgt_bytes + out_bytes) / hw.hbm_bw
+    return compute_s, memory_s
+
+
+def _tile_grid(hw: HW) -> Iterable[TileCandidate]:
+    bms = [8, 16, 32, 64, 128, 256, 512]
+    bks = [128, 256, 512, 1024, 2048]
+    bns = [128, 256, 512, 1024, 2048]
+    for bm, bk, bn in itertools.product(bms, bks, bns):
+        yield TileCandidate(bm, bk, bn)
+
+
+@dataclasses.dataclass
+class DseChoice:
+    """Output of the red+green boxes for one (model, policy) pair."""
+
+    tile: TileCandidate
+    k: int
+    variant: str
+    total_time_s: float
+    compute_s: float
+    memory_s: float
+    mean_utilization: float
+    vmem_bytes: int
+    n_candidates: int
+
+    def row(self) -> Dict[str, object]:
+        return dataclasses.asdict(self) | {"tile": self.tile.as_tuple()}
+
+
+def choose_tile(
+    gemms: Sequence[Gemm],
+    *,
+    w_bits: int,
+    k: int,
+    variant: str = "st",
+    hw: HW = TPU_V5E,
+    vmem_budget: Optional[float] = None,
+) -> DseChoice:
+    """Red box: pick (bm,bk,bn) minimizing the model's roofline time."""
+    budget = vmem_budget if vmem_budget is not None else 0.5 * hw.vmem_bytes
+    fmt_inner = PlaneFormat(w_bits=w_bits, k=k, k_dim=1)
+    fmt_bound = PlaneFormat(w_bits=8, k=min(k, 8), k_dim=1)
+    best: Optional[DseChoice] = None
+    n_cand = 0
+    for tile in _tile_grid(hw):
+        ws = vmem_working_set(tile, fmt_inner, variant)
+        if ws > budget:
+            continue  # infeasible: does not fit VMEM (the HWC gate, Fig. 2)
+        n_cand += 1
+        tot_c = tot_m = 0.0
+        utils = []
+        for g in gemms:
+            fmt = fmt_bound if g.layer_class == "boundary" else fmt_inner
+            c, m = gemm_time(g, tile, fmt, hw, variant)
+            tot_c += c
+            tot_m += m
+            utils.append(tile_utilization(g, tile))
+        total = max(tot_c, tot_m)  # green box: roofline over the whole net
+        if best is None or total < best.total_time_s:
+            best = DseChoice(
+                tile=tile, k=k, variant=variant, total_time_s=total,
+                compute_s=tot_c, memory_s=tot_m,
+                mean_utilization=sum(utils) / max(len(utils), 1),
+                vmem_bytes=ws, n_candidates=0,
+            )
+    if best is None:
+        raise ValueError("no feasible tile under the VMEM budget")
+    best.n_candidates = n_cand
+    return best
+
+
+def dse_sweep(
+    gemms: Sequence[Gemm],
+    *,
+    w_bits: int,
+    slices: Sequence[int] = (1, 2, 4, 8),
+    variants: Sequence[str] = ("st", "sa"),
+    hw: HW = TPU_V5E,
+) -> List[DseChoice]:
+    """Blue+red+green: sweep operand slice k and consolidation variant.
+
+    Returns choices sorted by total model time (best first) — the Table II
+    analogue.  k > w_bits wastes PPG capacity (idle plane bits) exactly as
+    in the paper; those points remain in the sweep to show the penalty.
+    """
+    out = []
+    for k, variant in itertools.product(slices, variants):
+        try:
+            out.append(choose_tile(gemms, w_bits=w_bits, k=k, variant=variant, hw=hw))
+        except ValueError:
+            continue
+    return sorted(out, key=lambda c: c.total_time_s)

@@ -1,0 +1,36 @@
+"""Process-local tracing flags.
+
+``force_unroll`` is used by the dry-run cost probes: XLA's
+``cost_analysis()`` counts a while-loop body ONCE (not x trip count), so
+any scanned loop (layers, attention KV chunks, SSM chunks) hides its
+true cost.  The probes lower a 1-unit and a 2-unit model with every scan
+unrolled to straightline HLO, giving exact per-unit costs that are then
+extrapolated to the full depth (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_local = threading.local()
+
+__all__ = ["dryrun_unroll", "force_unroll", "scan_unroll_arg"]
+
+
+def dryrun_unroll() -> bool:
+    return getattr(_local, "unroll", False)
+
+
+def scan_unroll_arg():
+    """Value for jax.lax.scan(..., unroll=...) at a loop call site."""
+    return True if dryrun_unroll() else 1
+
+
+@contextlib.contextmanager
+def force_unroll(on: bool = True):
+    old = getattr(_local, "unroll", False)
+    _local.unroll = on
+    try:
+        yield
+    finally:
+        _local.unroll = old

@@ -1,0 +1,188 @@
+"""Reference implementations of the paper's PE taxonomy (Section III-A).
+
+The paper (following Camus et al. [30]) spans the PE design space along
+four dimensions; we implement each point as a pure-jnp integer matmul so
+that (a) the Pallas kernel has a bit-exact oracle per variant and (b) the
+DSE cost model (core/dse.py) can attach cycle/pass/storage statistics that
+mirror the FPGA design trade-offs:
+
+  * input processing:  Bit-Parallel (BP)  vs  Bit-Serial (BS, k bits/cycle)
+  * consolidation:     Sum-Together (ST, adder tree inside the PE)
+                       vs Sum-Apart (SA, per-partial-product accumulators)
+  * scaling:           1D (only weights sliced; activations full width N)
+                       vs 2D (both operands sliced into k x k PPGs)
+  * operand slice:     k in {1, 2, 4, 8}
+
+All variants compute the same integer GEMM  acts[M,K] @ weights[K,N]
+(int32 exact); they differ in *schedule*, which is what the stats capture.
+BS has no TPU realization (the MXU cannot trade latency for area) and is
+kept for cost-model completeness only — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+__all__ = [
+    "PEStats",
+    "matmul_bp_st_1d",
+    "matmul_bp_sa_1d",
+    "matmul_bp_st_2d",
+    "matmul_bs_st_1d",
+    "matmul_exact",
+    "PE_VARIANTS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PEStats:
+    """Schedule statistics of one PE variant executing one GEMM.
+
+    mxu_passes:    number of full int8 GEMM passes (TPU cost analogue of
+                   the per-PPG area on the FPGA).
+    serial_cycles: cycles per MAC for bit-serial schedules (1 for BP).
+    accumulators:  live accumulator tensors (SA keeps one per plane —
+                   the register overhead the paper charges SA with).
+    plane_bytes:   HBM bytes of the packed weight operand.
+    """
+
+    mxu_passes: int
+    serial_cycles: int
+    accumulators: int
+    plane_bytes: int
+
+
+def _dot_i32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Integer dot with int32 accumulation (MXU semantics)."""
+    return jax.lax.dot_general(
+        a.astype(jnp.int8) if a.dtype == jnp.int8 else a.astype(jnp.int32),
+        b.astype(jnp.int8) if b.dtype == jnp.int8 else b.astype(jnp.int32),
+        (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def matmul_exact(a_int: jax.Array, w_int: jax.Array) -> jax.Array:
+    """Ground-truth integer GEMM in int32."""
+    return _dot_i32(a_int.astype(jnp.int32), w_int.astype(jnp.int32))
+
+
+def matmul_bp_st_1d(
+    a_int: jax.Array, w_int: jax.Array, w_bits: int, k: int
+) -> Tuple[jax.Array, PEStats]:
+    """Bit-Parallel Sum-Together 1D — the design the paper selects (Fig. 6b).
+
+    Weights are sliced into P = ceil(w_bits/k) planes; activations stay at
+    full width. The adder tree = shift-add over the plane axis folded into
+    a single accumulator (one int32 tile on TPU).
+    """
+    planes = packing.split_planes(w_int, w_bits, k)  # (P, K, N)
+    p = planes.shape[0]
+    acc = jnp.zeros(a_int.shape[:-1] + (w_int.shape[-1],), jnp.int32)
+    for i in range(p):  # unrolled adder tree: single running accumulator
+        acc = acc + (_dot_i32(a_int.astype(jnp.int32), planes[i]) << (k * i))
+    stats = PEStats(
+        mxu_passes=p,
+        serial_cycles=1,
+        accumulators=1,
+        plane_bytes=packing.packed_weight_bytes(w_int.shape[-2], w_int.shape[-1], w_bits, k),
+    )
+    return acc, stats
+
+
+def matmul_bp_sa_1d(
+    a_int: jax.Array, w_int: jax.Array, w_bits: int, k: int
+) -> Tuple[jax.Array, PEStats]:
+    """Bit-Parallel Sum-Apart 1D: each plane its own accumulator, combined last.
+
+    Mathematically identical to ST; the schedule keeps P live partial-sum
+    tensors (the register overhead of SA) and defers the shift-add.
+    """
+    planes = packing.split_planes(w_int, w_bits, k)
+    p = planes.shape[0]
+    partials = [
+        _dot_i32(a_int.astype(jnp.int32), planes[i]) for i in range(p)
+    ]  # all live simultaneously
+    acc = jnp.zeros_like(partials[0])
+    for i in range(p):
+        acc = acc + (partials[i] << (k * i))
+    stats = PEStats(
+        mxu_passes=p,
+        serial_cycles=1,
+        accumulators=p,
+        plane_bytes=packing.packed_weight_bytes(w_int.shape[-2], w_int.shape[-1], w_bits, k),
+    )
+    return acc, stats
+
+
+def matmul_bp_st_2d(
+    a_int: jax.Array,
+    w_int: jax.Array,
+    w_bits: int,
+    a_bits: int,
+    k: int,
+) -> Tuple[jax.Array, PEStats]:
+    """Bit-Parallel Sum-Together 2D — BitFusion-style k x k PPGs [28].
+
+    Both operands are sliced; P_w * P_a partial GEMMs with shift 2^{k(p+q)}.
+    Activations are unsigned in the paper (Q_n = 0), so all activation
+    digit planes are unsigned; weight top plane is signed.
+    """
+    w_planes = packing.split_planes(w_int, w_bits, k)  # (Pw, K, N) top signed
+    # Unsigned activation digits: split via the same two's-complement path
+    # (activations are non-negative so every plane is already unsigned).
+    a_planes = packing.split_planes(a_int, a_bits + 1, k)[: packing.num_planes(a_bits, k)]
+    pw, pa = w_planes.shape[0], a_planes.shape[0]
+    acc = jnp.zeros(a_int.shape[:-1] + (w_int.shape[-1],), jnp.int32)
+    for q in range(pa):
+        for p in range(pw):
+            acc = acc + (_dot_i32(a_planes[q], w_planes[p]) << (k * (p + q)))
+    stats = PEStats(
+        mxu_passes=pw * pa,
+        serial_cycles=1,
+        accumulators=1,
+        plane_bytes=packing.packed_weight_bytes(w_int.shape[-2], w_int.shape[-1], w_bits, k),
+    )
+    return acc, stats
+
+
+def matmul_bs_st_1d(
+    a_int: jax.Array, w_int: jax.Array, w_bits: int, k: int
+) -> Tuple[jax.Array, PEStats]:
+    """Bit-Serial Sum-Together: weights streamed k bits/cycle (Fig. 4 left).
+
+    Implemented as a lax.scan over digit planes — the *schedule* is serial
+    (w_bits/k cycles per MAC), which the stats record; for k = 1 the
+    per-cycle multiply degenerates to an AND gate as in the paper.
+    """
+    planes = packing.split_planes(w_int, w_bits, k)  # (P, K, N)
+    p = planes.shape[0]
+    shifts = (2 ** (k * jnp.arange(p, dtype=jnp.int32)))
+
+    def step(acc, xs):
+        plane, shift = xs
+        acc = acc + _dot_i32(a_int.astype(jnp.int32), plane) * shift
+        return acc, None
+
+    acc0 = jnp.zeros(a_int.shape[:-1] + (w_int.shape[-1],), jnp.int32)
+    acc, _ = jax.lax.scan(step, acc0, (planes, shifts))
+    stats = PEStats(
+        mxu_passes=p,
+        serial_cycles=p,
+        accumulators=1,
+        plane_bytes=packing.packed_weight_bytes(w_int.shape[-2], w_int.shape[-1], w_bits, k),
+    )
+    return acc, stats
+
+
+PE_VARIANTS = {
+    "BP-ST-1D": matmul_bp_st_1d,
+    "BP-SA-1D": matmul_bp_sa_1d,
+    "BP-ST-2D": matmul_bp_st_2d,
+    "BS-ST-1D": matmul_bs_st_1d,
+}

@@ -1,0 +1,103 @@
+"""Precision policy: which word-length each layer gets (paper Section IV-C).
+
+The paper's rule set:
+  * activations: always 8 bit, unsigned (Eq. 5, Q_n = 0);
+  * first and last layer weights: pinned to 8 bit;
+  * all inner layer weights: w_Q in {1, 2, 4, 8} (layer-wise), optionally
+    per output channel (channel-wise);
+  * operand slice k in {1, 2, 4} (+8 = the fixed-width "DSP" reference).
+
+For the LM-family architectures of the assigned pool we map the rule
+"first/last layer" onto embeddings, the LM head, norms and any recurrence
+/state parameters (they are the accuracy-critical boundary layers); every
+inner projection (QKV/O, MLP, experts, SSM in/out projections) is an
+"inner" layer quantized to ``inner_bits``.
+
+``footprint_bytes`` reproduces Table III's memory-footprint accounting:
+packed parameter bytes at the policy's word-lengths vs the fp32 baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+__all__ = ["PrecisionPolicy", "LayerClass", "footprint_report"]
+
+VALID_WBITS = (1, 2, 4, 8)
+VALID_SLICES = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Hashable, static quantization policy for one deployment.
+
+    Attributes:
+      a_bits:        activation word-length N (paper: fixed 8).
+      inner_bits:    inner-layer weight word-length w_Q.
+      boundary_bits: first/last-layer weight word-length (paper: 8).
+      k:             operand slice of the PPG / digit plane width.
+      channel_wise:  per-output-channel step sizes gamma_w.
+      variant:       'st' (adder tree) or 'sa' (per-plane accumulators).
+      quantize:      False = fp baseline (the paper's "FP" rows).
+    """
+
+    a_bits: int = 8
+    inner_bits: int = 8
+    boundary_bits: int = 8
+    k: int = 4
+    channel_wise: bool = False
+    variant: str = "st"
+    quantize: bool = True
+
+    def __post_init__(self):
+        if self.quantize:
+            if self.inner_bits not in VALID_WBITS:
+                raise ValueError(f"inner_bits must be in {VALID_WBITS}")
+            if self.boundary_bits not in VALID_WBITS:
+                raise ValueError(f"boundary_bits must be in {VALID_WBITS}")
+            if self.k not in VALID_SLICES:
+                raise ValueError(f"operand slice k must be in {VALID_SLICES}")
+        if self.variant not in ("st", "sa"):
+            raise ValueError("variant must be 'st' or 'sa'")
+
+    def bits_for(self, layer_class: str) -> int:
+        """w_Q of a layer: 'inner' vs 'boundary' (first/last/norm/embed)."""
+        return self.inner_bits if layer_class == "inner" else self.boundary_bits
+
+    @property
+    def planes(self) -> int:
+        return -(-self.inner_bits // self.k)
+
+    def with_bits(self, inner_bits: int) -> "PrecisionPolicy":
+        return dataclasses.replace(self, inner_bits=inner_bits)
+
+
+class LayerClass:
+    INNER = "inner"
+    BOUNDARY = "boundary"
+
+
+def footprint_report(
+    param_counts: Mapping[str, int],
+    policy: PrecisionPolicy,
+) -> Dict[str, float]:
+    """Table III accounting.
+
+    param_counts: {'inner': n_inner_weights, 'boundary': n_boundary_weights}
+    Returns bytes for the quantized deployment, the fp32 baseline, and the
+    compression factor (paper column 4).
+    """
+    n_inner = int(param_counts.get("inner", 0))
+    n_bound = int(param_counts.get("boundary", 0))
+    fp_bytes = 4 * (n_inner + n_bound)
+    if not policy.quantize:
+        q_bytes = fp_bytes
+    else:
+        q_bytes = n_inner * policy.inner_bits / 8 + n_bound * policy.boundary_bits / 8
+    return {
+        "fp32_bytes": float(fp_bytes),
+        "quant_bytes": float(q_bytes),
+        "compression": fp_bytes / max(q_bytes, 1.0),
+        "inner_params": float(n_inner),
+        "boundary_params": float(n_bound),
+    }

@@ -1,0 +1,176 @@
+"""LSQ quantization (Esser et al. [10]) exactly as used by the paper, Eq. 5.
+
+    v_int  = round( clamp(v_FP / gamma, Q_n, Q_p) )
+    v_quant = v_int * gamma
+
+Activations are quantized *unsigned* (Q_n = 0, Q_p = 2^b - 1); weights are
+quantized *signed* (Q_n = -2^{b-1}, Q_p = 2^{b-1} - 1).  The step size
+``gamma`` is a trained parameter (QAT) with the LSQ gradient-scale
+``1 / sqrt(N * Q_p)``; the round/clamp pair uses a straight-through
+estimator.  All functions are pure and jit/vjp friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantSpec",
+    "qrange",
+    "init_step_size",
+    "grad_scale",
+    "round_ste",
+    "fake_quant",
+    "quantize_int",
+    "dequantize",
+    "act_spec",
+    "weight_spec",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How one tensor is quantized.
+
+    Attributes:
+      bits:        word-length b (1, 2, 4 or 8 in the paper).
+      signed:      signed two's-complement range (weights) vs unsigned
+                   (activations).
+      channel_axis: axis for per-channel step sizes (None = per-tensor).
+                   The paper supports layer-wise *and* channel-wise
+                   quantization; channel-wise uses the output-channel axis.
+    """
+
+    bits: int
+    signed: bool
+    channel_axis: Optional[int] = None
+
+    def __post_init__(self):
+        if self.bits < 1 or self.bits > 32:
+            raise ValueError(f"unsupported word-length: {self.bits}")
+        if self.bits == 1 and not self.signed:
+            # 1-bit activations are not used by the paper (activations are
+            # always 8 bit); 1-bit weights are the binary {-1, 0} LSQ corner.
+            pass
+
+
+def qrange(spec: QuantSpec) -> Tuple[int, int]:
+    """(Q_n, Q_p) clamp bounds of Eq. 5."""
+    if spec.signed:
+        return -(2 ** (spec.bits - 1)), 2 ** (spec.bits - 1) - 1
+    return 0, 2**spec.bits - 1
+
+
+def act_spec(bits: int = 8) -> QuantSpec:
+    """Paper IV-C: activations are unsigned, fixed 8 bit."""
+    return QuantSpec(bits=bits, signed=False, channel_axis=None)
+
+
+def weight_spec(bits: int, channel_axis: Optional[int] = None) -> QuantSpec:
+    """Paper IV-C: weights signed; per-channel axis optional."""
+    return QuantSpec(bits=bits, signed=True, channel_axis=channel_axis)
+
+
+def init_step_size(v: jax.Array, spec: QuantSpec) -> jax.Array:
+    """LSQ initialization: gamma = 2 * mean(|v|) / sqrt(Q_p).
+
+    Returns a scalar (per-tensor) or a vector over ``channel_axis``.
+    """
+    _, qp = qrange(spec)
+    qp = max(qp, 1)
+    if spec.channel_axis is None:
+        mean_abs = jnp.mean(jnp.abs(v))
+    else:
+        axes = tuple(a for a in range(v.ndim) if a != spec.channel_axis % v.ndim)
+        mean_abs = jnp.mean(jnp.abs(v), axis=axes)
+    gamma = 2.0 * mean_abs / jnp.sqrt(jnp.asarray(qp, v.dtype))
+    # Guard against all-zero tensors: a zero step size would make Eq. 5
+    # degenerate (division by zero).
+    return jnp.maximum(gamma, jnp.asarray(1e-9, v.dtype))
+
+
+def grad_scale(x: jax.Array, scale) -> jax.Array:
+    """Forward identity; backward multiplies the gradient by ``scale``.
+
+    LSQ scales the step-size gradient by 1/sqrt(N * Q_p) to balance it
+    against the weight gradients.
+    """
+    return x * scale + jax.lax.stop_gradient(x * (1.0 - scale))
+
+
+@jax.custom_vjp
+def round_ste(x: jax.Array) -> jax.Array:
+    """Round-to-nearest-even with a straight-through gradient.
+
+    custom_vjp instead of the classic ``x + stop_grad(round(x) - x)``:
+    the latter is 3 full-tensor passes (round, sub, add) in the HLO; this
+    is 1.  On the QAT train step that chain runs on every activation and
+    weight tensor (fwd + remat recompute), so it was a measurable slice
+    of the memory-roofline term (EXPERIMENTS.md §Perf).
+    """
+    return jnp.round(x)
+
+
+def _round_ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _round_ste_bwd(_, g):
+    return (g,)
+
+
+round_ste.defvjp(_round_ste_fwd, _round_ste_bwd)
+
+
+def _broadcast_gamma(gamma: jax.Array, v: jax.Array, spec: QuantSpec) -> jax.Array:
+    if spec.channel_axis is None:
+        return gamma
+    shape = [1] * v.ndim
+    shape[spec.channel_axis % v.ndim] = v.shape[spec.channel_axis % v.ndim]
+    return gamma.reshape(shape)
+
+
+def fake_quant(
+    v: jax.Array,
+    gamma: jax.Array,
+    spec: QuantSpec,
+    *,
+    train_gamma: bool = True,
+) -> jax.Array:
+    """Eq. 5 quant-dequant with LSQ gradients (QAT forward path).
+
+    Differentiable in both ``v`` (STE through round, exact through clamp)
+    and ``gamma`` (LSQ step-size gradient with the 1/sqrt(N*Q_p) scale).
+    """
+    qn, qp = qrange(spec)
+    if train_gamma:
+        n = v.size if spec.channel_axis is None else v.size // v.shape[spec.channel_axis % v.ndim]
+        gscale = 1.0 / jnp.sqrt(float(max(n, 1)) * float(max(qp, 1)))
+        gamma = grad_scale(gamma, gscale)
+    # Run the quant grid in the *input* dtype: integer codes up to 2^8
+    # are exact in bf16, and keeping activations in bf16 halves the
+    # elementwise HBM traffic of the QAT forward (EXPERIMENTS.md §Perf).
+    g = _broadcast_gamma(gamma, v, spec).astype(v.dtype)
+    vs = v / g
+    vc = jnp.clip(vs, qn, qp)
+    vbar = round_ste(vc)
+    return vbar * g
+
+
+def quantize_int(v: jax.Array, gamma: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Eq. 5 integer codes ``v_int`` (inference path; no gradients).
+
+    Returns int32 codes in [Q_n, Q_p].
+    """
+    qn, qp = qrange(spec)
+    g = _broadcast_gamma(gamma, v, spec)
+    return jnp.clip(jnp.round(v / g), qn, qp).astype(jnp.int32)
+
+
+def dequantize(v_int: jax.Array, gamma: jax.Array, spec: QuantSpec) -> jax.Array:
+    """v_quant = v_int * gamma."""
+    g = _broadcast_gamma(jnp.asarray(gamma), jnp.asarray(v_int, jnp.float32), spec)
+    return v_int.astype(jnp.float32) * g

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, SyntheticImages
+
+__all__ = ["SyntheticLM", "SyntheticImages"]

@@ -1,0 +1,76 @@
+"""flash_attention: jitted GQA wrapper over the Pallas forward kernel.
+
+Resolves GQA (kv heads < q heads) by gathering each q head's kv head —
+a view-cheap take on the head axis — so the kernel body is plain MHA.
+Pads ragged sequence lengths up to the block size with masked rows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flashattn import kernel as _kernel
+
+__all__ = ["flash_attention"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:  # pragma: no cover
+        return False
+
+
+def flash_attention(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, KV, D), KV divides H
+    v: jax.Array,            # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    interp = (not _on_tpu()) if interpret is None else interpret
+
+    if kv != h:  # GQA: replicate each kv head over its q-head group
+        group = h // kv
+        head_map = jnp.arange(h) // group
+        k = jnp.take(k, head_map, axis=2)
+        v = jnp.take(v, head_map, axis=2)
+
+    bq = min(block_q, _round_pow2(sq))
+    bk = min(block_k, _round_pow2(sk))
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        # padded KV rows sit at positions >= sk; causal masking already
+        # hides them from every real q row when q_offset+sq <= sk; for
+        # the non-causal case mask via a window trick is not enough, so
+        # we clamp with an explicit big-negative via position mask in the
+        # kernel (kv_pos > q_pos only applies when causal).  Simplest
+        # safe route: extend causal masking by treating pad as future.
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    out = _kernel.flash_fwd(
+        q, k, v, causal=causal or pad_k > 0, window=window,
+        q_offset=q_offset, softmax_scale=softmax_scale,
+        block_q=bq, block_k=bk, interpret=interp)
+    return out[:, :sq]
+
+
+def _round_pow2(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel: direct (materialized)
+softmax attention with the same masking semantics."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, H, D)
+    v: jax.Array,            # (B, Sk, H, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(sq)
+    kv_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

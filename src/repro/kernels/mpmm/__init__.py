@@ -1,0 +1,27 @@
+"""Mixed-precision matmul (mpmm) — the paper's precision-scalable PE array
+as a TPU kernel.
+
+The FPGA PE array of BP-ST-1D processing elements (Fig. 6b) maps to a
+Pallas matmul whose weight operand is stored as packed k-bit two's-
+complement digit planes (core/packing.py).  Each digit plane is one MXU
+pass; the Sum-Together adder tree is the shift-add accumulation across
+planes into a single int32 tile; the Sum-Apart variant keeps one
+accumulator per plane (paper Section III-A).
+"""
+from repro.kernels.mpmm.ops import (
+    mpmm,
+    quantize_activations,
+    prepare_weights,
+    MpmmParams,
+    TileShape,
+)
+from repro.kernels.mpmm import ref
+
+__all__ = [
+    "mpmm",
+    "quantize_activations",
+    "prepare_weights",
+    "MpmmParams",
+    "TileShape",
+    "ref",
+]

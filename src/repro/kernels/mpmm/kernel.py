@@ -1,0 +1,162 @@
+"""Pallas TPU kernel for the mixed-precision matmul (BP-ST/SA-1D PE array).
+
+Hardware mapping (DESIGN.md §2):
+
+  * PE array dims (H, W, D)  ->  BlockSpec tile (bm, bk, bn): the 3-D MAC
+    loop-nest tiling the paper's DSE optimizes (Eq. 1-3) becomes the VMEM
+    tile choice here.
+  * PPG operand slice k      ->  digit-plane width of the packed weights;
+    each plane is one int8 MXU pass.
+  * Sum-Together adder tree  ->  one int32 accumulator tile, shift-add
+    across planes (`variant='st'`).
+  * Sum-Apart registers      ->  one accumulator tile per plane, combined
+    in the epilogue (`variant='sa'`) -- P× the accumulator VMEM, exactly
+    the register overhead the paper charges SA with.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary") so the accumulator
+scratch carries across K steps.  Weights arrive as uint8 packed digit
+planes (P, K/(8//k), N); they are unpacked to int8 digits in VMEM --
+HBM->VMEM traffic is w_Q/8 of an int8 weight buffer, which is what turns
+word-length reduction into a memory-roofline win on TPU.
+
+Activations are int8 *biased* codes (s = u - act_zero); the unsigned
+correction act_zero * colsum(W) is folded into the epilogue.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import PlaneFormat
+
+__all__ = ["mpmm_pallas"]
+
+
+def _unpack_block(w_u8: jax.Array, fmt: PlaneFormat, bk: int) -> jax.Array:
+    """uint8 (P, bkp, bn) -> int8 digit planes (P, bk, bn) inside the kernel.
+
+    Digits are interleaved 8//k per byte along K (core/packing.pack_bits):
+    K index = byte_index * f + field_index.
+    """
+    f = fmt.digits_per_byte
+    k = fmt.k
+    mask = (1 << k) - 1
+    w32 = w_u8.astype(jnp.int32)  # (P, bkp, bn)
+    fields = [(w32 >> (k * i)) & mask for i in range(f)]
+    # (P, bkp, f, bn) -> (P, bk, bn): field index is minor within a byte.
+    digits = jnp.stack(fields, axis=2).reshape(w32.shape[0], bk, w32.shape[-1])
+    # Sign-extend the top plane (two's-complement, paper Fig. 1b).
+    top_bits = fmt.w_bits - fmt.k * (fmt.planes - 1)
+    sign_bit = 1 << (top_bits - 1)
+    top = digits[-1] & ((1 << top_bits) - 1)
+    top = jnp.where(top >= sign_bit, top - (1 << top_bits), top)
+    digits = jnp.concatenate([digits[:-1], top[None]], axis=0)
+    return digits.astype(jnp.int8)
+
+
+def _mpmm_kernel_st(
+    a_ref, w_ref, gamma_ref, colsum_ref, out_ref, acc_ref,
+    *, fmt: PlaneFormat, act_zero: int, n_k: int, bk: int, out_dtype,
+):
+    """Sum-Together: single int32 accumulator, shift-add over planes."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]  # (bm, bk) int8
+    digits = _unpack_block(w_ref[...], fmt, bk)  # (P, bk, bn) int8
+    acc = acc_ref[...]
+    for p in range(fmt.planes):
+        partial = jax.lax.dot_general(
+            a, digits[p], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc = acc + partial * (1 << (fmt.k * p))  # the adder tree
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        corrected = acc_ref[...] + act_zero * colsum_ref[...].astype(jnp.int32)
+        out_ref[...] = (
+            corrected.astype(jnp.float32) * gamma_ref[...].astype(jnp.float32)
+        ).astype(out_dtype)
+
+
+def _mpmm_kernel_sa(
+    a_ref, w_ref, gamma_ref, colsum_ref, out_ref, acc_ref,
+    *, fmt: PlaneFormat, act_zero: int, n_k: int, bk: int, out_dtype,
+):
+    """Sum-Apart: one accumulator per plane (P× VMEM), combined last."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    digits = _unpack_block(w_ref[...], fmt, bk)
+    for p in range(fmt.planes):  # partial sums stay apart
+        acc_ref[p, :, :] += jax.lax.dot_general(
+            a, digits[p], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        acc = jnp.zeros(out_ref.shape, jnp.int32)
+        for p in range(fmt.planes):  # deferred shift-add
+            acc = acc + acc_ref[p, :, :] * (1 << (fmt.k * p))
+        corrected = acc + act_zero * colsum_ref[...].astype(jnp.int32)
+        out_ref[...] = (
+            corrected.astype(jnp.float32) * gamma_ref[...].astype(jnp.float32)
+        ).astype(out_dtype)
+
+
+def mpmm_pallas(
+    a_biased: jax.Array,   # int8 (M, K), padded to (bm, bk) multiples
+    packed: jax.Array,     # uint8 (P, K//f, N), padded
+    gamma: jax.Array,      # f32 (1, N)
+    colsum: jax.Array,     # int32 (1, N)
+    *,
+    fmt: PlaneFormat,
+    act_zero: int,
+    tile: Tuple[int, int, int],
+    variant: str = "st",
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled pallas_call. Caller guarantees divisibility by the tile."""
+    m, kdim = a_biased.shape
+    p, kp, n = packed.shape
+    bm, bk, bn = tile
+    f = fmt.digits_per_byte
+    assert bk % f == 0, (bk, f)
+    bkp = bk // f
+    assert m % bm == 0 and kdim % bk == 0 and n % bn == 0, (a_biased.shape, packed.shape, tile)
+    assert kp * f == kdim, (kp, f, kdim)
+    grid = (m // bm, n // bn, kdim // bk)
+
+    kern = _mpmm_kernel_st if variant == "st" else _mpmm_kernel_sa
+    acc_shape = (bm, bn) if variant == "st" else (p, bm, bn)
+
+    return pl.pallas_call(
+        functools.partial(
+            kern, fmt=fmt, act_zero=act_zero, n_k=grid[2], bk=bk, out_dtype=out_dtype
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((p, bkp, bn), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM(acc_shape, jnp.int32)],
+        interpret=interpret,
+    )(a_biased, packed, gamma, colsum)

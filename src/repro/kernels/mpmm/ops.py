@@ -1,0 +1,230 @@
+"""Public mixed-precision-matmul API: padding, impl dispatch, weight prep.
+
+Three implementations, all bit-exact to `ref.mpmm_ref`:
+
+  * ``pallas``: the TPU kernel (kernel.py).  interpret=True on CPU.
+  * ``xla``:    per-plane int8 dot_general + shift-add, weights unpacked
+                from the same uint8 buffers.  This is the path the
+                multi-pod dry-run lowers: the packed planes appear as real
+                HBM buffers (memory term ∝ w_Q/8) and each plane is one
+                int8 contraction (compute term ∝ ceil(w_Q/k)).
+  * ``auto``:   pallas on TPU, xla elsewhere.
+
+Weight preparation (``prepare_weights``) happens once at deployment —
+the FPGA analogue is loading a new CNN's weights without re-synthesizing
+the bitstream (the paper's on-the-fly word-length switch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, quant
+from repro.core.packing import PlaneFormat
+from repro.kernels.mpmm import kernel as _kernel
+from repro.kernels.mpmm import ref as _ref
+
+__all__ = [
+    "TileShape",
+    "MpmmParams",
+    "quantize_activations",
+    "prepare_weights",
+    "mpmm",
+    "mpmm_packed",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TileShape:
+    """Pallas tile (bm, bk, bn) — the PE-array-dims analogue (DESIGN.md §2)."""
+
+    bm: int = 128
+    bk: int = 128
+    bn: int = 128
+
+    def as_tuple(self) -> Tuple[int, int, int]:
+        return (self.bm, self.bk, self.bn)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MpmmParams:
+    """Deployed (packed) weights of one linear layer.
+
+    Arrays (pytree leaves):
+      planes: uint8 (P, ceil(K/(8//k)), N) packed digit planes.
+      colsum: int32 (1, N) column sums of the integer codes.
+      gamma:  f32   (1, N) combined scale gamma_a * gamma_w.
+    Static (aux data): the PlaneFormat and activation bias.
+    """
+
+    planes: jax.Array
+    colsum: jax.Array
+    gamma: jax.Array
+    fmt: PlaneFormat = dataclasses.field(metadata={"static": True})
+    act_zero: int = 128
+
+    def tree_flatten(self):
+        return (self.planes, self.colsum, self.gamma), (self.fmt, self.act_zero)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, fmt=aux[0], act_zero=aux[1])
+
+    @property
+    def hbm_bytes(self) -> int:
+        return int(self.planes.size) + 8 * int(self.colsum.size)
+
+
+def quantize_activations(
+    x: jax.Array, gamma_a: jax.Array, a_bits: int = 8
+) -> jax.Array:
+    """float -> biased int8 codes (u - 2^{a_bits-1}), u unsigned per Eq. 5."""
+    qp = 2**a_bits - 1
+    u = jnp.clip(jnp.round(x / gamma_a), 0, qp)
+    return (u - 2 ** (a_bits - 1)).astype(jnp.int8)
+
+
+def prepare_weights(
+    w: jax.Array,
+    gamma_w: jax.Array,
+    *,
+    w_bits: int,
+    k: int,
+    gamma_a: jax.Array,
+    a_bits: int = 8,
+    channel_wise: bool = False,
+) -> MpmmParams:
+    """Pack trained FP weights (K, N) for deployment.
+
+    gamma_w: scalar (per-tensor) or [N] (per-channel — the paper's
+    channel-wise quantization); gamma_a: scalar activation step size.
+    """
+    kdim, n = w.shape
+    spec = quant.weight_spec(w_bits, channel_axis=-1 if channel_wise else None)
+    w_int = quant.quantize_int(w, gamma_w, spec)  # int32 codes (K, N)
+    fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=kdim)
+    planes = packing.pack_planes(w_int, fmt, axis=-2)
+    colsum = jnp.sum(w_int, axis=0, dtype=jnp.int32).reshape(1, n)
+    gamma = (jnp.broadcast_to(jnp.asarray(gamma_w, jnp.float32), (n,))
+             * jnp.asarray(gamma_a, jnp.float32)).reshape(1, n)
+    return MpmmParams(
+        planes=planes, colsum=colsum, gamma=gamma, fmt=fmt,
+        act_zero=2 ** (a_bits - 1),
+    )
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    pw = [(0, 0)] * x.ndim
+    pw[axis] = (0, pad)
+    return jnp.pad(x, pw)
+
+
+def _xla_impl(
+    a_biased: jax.Array,
+    planes_u8: jax.Array,
+    gamma: jax.Array,
+    colsum: jax.Array,
+    fmt: PlaneFormat,
+    act_zero: int,
+    out_dtype,
+) -> jax.Array:
+    """Per-plane int8 contraction + shift-add (the ST adder tree in XLA)."""
+    digits = packing.unpack_planes(planes_u8, fmt, axis=-2)  # (P, K, N) int8
+    acc = None
+    for p in range(fmt.planes):
+        partial = jax.lax.dot_general(
+            a_biased, digits[p], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        shifted = partial * (1 << (fmt.k * p))
+        acc = shifted if acc is None else acc + shifted
+    corrected = acc + act_zero * colsum.astype(jnp.int32)
+    return (corrected.astype(jnp.float32) * gamma.astype(jnp.float32)).astype(out_dtype)
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:  # pragma: no cover
+        return False
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "act_zero", "tile", "variant", "impl", "out_dtype"),
+)
+def mpmm(
+    a_biased: jax.Array,
+    planes: jax.Array,
+    gamma: jax.Array,
+    colsum: jax.Array,
+    *,
+    fmt: PlaneFormat,
+    act_zero: int = 128,
+    tile: Optional[TileShape] = None,
+    variant: str = "st",
+    impl: str = "auto",
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """y[..., N] = gamma * ((a_biased + act_zero) @ W_int).
+
+    a_biased: int8 (..., K); planes: uint8 (P, Kp, N); gamma/colsum (1, N).
+    """
+    lead = a_biased.shape[:-1]
+    kdim = a_biased.shape[-1]
+    n = planes.shape[-1]
+    a2 = a_biased.reshape(-1, kdim)
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+
+    if impl == "xla":
+        out = _xla_impl(a2, planes, gamma, colsum, fmt, act_zero, out_dtype)
+        return out.reshape(*lead, n)
+
+    # pallas: pad every dim to the tile, then slice back.
+    t = tile or TileShape()
+    f = fmt.digits_per_byte
+    bm, bk, bn = t.bm, max(t.bk, f), t.bn
+    bk = bk + (-bk) % f
+    a_p = _pad_to(_pad_to(a2, 0, bm), 1, bk)
+    # pad K on packed axis in byte units; pad N.
+    planes_p = _pad_to(_pad_to(planes, 1, bk // f), 2, bn)
+    gamma_p = _pad_to(gamma, 1, bn)
+    colsum_p = _pad_to(colsum, 1, bn)
+    fmt_p = PlaneFormat(w_bits=fmt.w_bits, k=fmt.k,
+                        k_dim=planes_p.shape[1] * f, signed=fmt.signed)
+    out = _kernel.mpmm_pallas(
+        a_p, planes_p, gamma_p, colsum_p,
+        fmt=fmt_p, act_zero=act_zero, tile=(bm, bk, bn), variant=variant,
+        out_dtype=out_dtype, interpret=not _on_tpu(),
+    )
+    return out[: a2.shape[0], :n].reshape(*lead, n)
+
+
+def mpmm_packed(
+    x: jax.Array,
+    params: MpmmParams,
+    gamma_a: jax.Array,
+    *,
+    a_bits: int = 8,
+    tile: Optional[TileShape] = None,
+    variant: str = "st",
+    impl: str = "auto",
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Float-in/float-out convenience: quantize acts, run mpmm, dequant."""
+    a = quantize_activations(x, gamma_a, a_bits)
+    return mpmm(
+        a, params.planes, params.gamma, params.colsum,
+        fmt=params.fmt, act_zero=params.act_zero, tile=tile,
+        variant=variant, impl=impl, out_dtype=out_dtype,
+    )

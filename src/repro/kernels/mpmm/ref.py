@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for the mixed-precision matmul (bit-exact integer math).
+
+The contract shared by every implementation (ref / xla / pallas):
+
+    u_int[M,K]  : activation codes, unsigned in [0, 2^a_bits) stored as
+                  int8 *biased by act_zero* (s = u - act_zero), so the MXU
+                  sees a signed operand.  act_zero = 2^{a_bits-1} for the
+                  paper's unsigned activations, 0 for signed operands.
+    W_int[K,N]  : signed weight codes in [-2^{w-1}, 2^{w-1}) stored as
+                  packed k-bit digit planes (uint8, plane-major).
+    y[M,N]      = gamma_a * gamma_w * (u_int @ W_int)
+                = gamma   * ( (s @ W) + act_zero * colsum(W) )
+
+where colsum(W)[n] = sum_k W_int[k, n] is precomputed once per weight
+(int32[N]) — the TPU analogue of the zero-point correction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.packing import PlaneFormat
+
+__all__ = ["mpmm_ref", "mpmm_ref_codes", "colsum_from_packed"]
+
+
+def unpack_to_int(packed: jax.Array, fmt: PlaneFormat) -> jax.Array:
+    """Packed planes (P, K_packed, N) -> signed int32 weight codes (K, N)."""
+    planes = packing.unpack_planes(packed, fmt, axis=-2)  # (P, K, N) int8
+    return packing.combine_planes(planes, fmt.k)
+
+
+def colsum_from_packed(packed: jax.Array, fmt: PlaneFormat) -> jax.Array:
+    """int32[N] column sums of the integer weight codes."""
+    w_int = unpack_to_int(packed, fmt)
+    return jnp.sum(w_int, axis=-2).astype(jnp.int32)
+
+
+def mpmm_ref_codes(
+    a_biased: jax.Array,
+    packed: jax.Array,
+    fmt: PlaneFormat,
+    *,
+    act_zero: int,
+) -> jax.Array:
+    """Integer accumulator output (int32[M,N]) = u_int @ W_int.
+
+    a_biased: int8[M, K] = u - act_zero.
+    """
+    w_int = unpack_to_int(packed, fmt)  # (K, N) int32
+    u = a_biased.astype(jnp.int32) + act_zero
+    return jax.lax.dot_general(
+        u, w_int, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def mpmm_ref(
+    a_biased: jax.Array,
+    packed: jax.Array,
+    fmt: PlaneFormat,
+    gamma: jax.Array,
+    *,
+    act_zero: int,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Dequantized output: gamma * (u_int @ W_int).
+
+    gamma: scalar or [N] (per-output-channel, the paper's channel-wise case)
+           -- the *product* gamma_a * gamma_w.
+    """
+    acc = mpmm_ref_codes(a_biased, packed, fmt, act_zero=act_zero)
+    return (acc.astype(jnp.float32) * jnp.asarray(gamma, jnp.float32)).astype(out_dtype)

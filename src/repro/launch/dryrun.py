@@ -1,0 +1,396 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import (device count locks on first init).
+#   Only this entry point forces 512 placeholder devices; tests and
+#   benches see the real device list.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real step function (train_step for train
+shapes, prefill/decode for serve shapes), shards it over the production
+mesh with the logical-axis rules, and runs ``.lower().compile()`` with
+ShapeDtypeStruct stand-ins -- no arrays are ever allocated.  The compiled
+artifact yields:
+
+  * ``memory_analysis()``  -> per-device HBM demand (proves it fits),
+  * ``cost_analysis()``    -> HLO FLOPs / bytes for the roofline terms,
+  * compiled HLO text      -> collective wire bytes (roofline.py parser).
+
+Results are written as one JSON per cell under ``experiments/dryrun/`` so
+the EXPERIMENTS.md tables are regenerable.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --sweep            # all 40 cells, 1 mesh
+  python -m repro.launch.dryrun --sweep --multipod # the 2-pod pass
+  python -m repro.launch.dryrun --arch yi-34b --shape decode_32k \
+      --rules decode_seq   # hillclimb variant
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.core import flags
+from repro.core import roofline as rl
+from repro.core.precision import PrecisionPolicy
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.nn import partitioning as part
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+RULE_SETS = {
+    "baseline": (part.TRAIN_RULES, part.SERVE_RULES),
+    # Hillclimb variants (EXPERIMENTS.md §Perf):
+    "seq_shard": (part.TRAIN_RULES_SEQ, part.SERVE_RULES),        # SP train
+    "decode_seq": (part.TRAIN_RULES,
+                   {**part.SERVE_RULES, "seq": "model"}),         # shard KV seq
+    "decode_kvh": (part.TRAIN_RULES,
+                   {**part.SERVE_RULES, "kv_heads": "model"}),    # shard KV heads
+    "no_tp": (
+        {**part.TRAIN_RULES, "mlp": None, "heads": None, "vocab": None,
+         "experts": None, "embed": ("pod", "data", "model")},     # pure FSDP
+        part.SERVE_RULES),
+}
+
+
+def _policy_from(args) -> Optional[PrecisionPolicy]:
+    if args.w_bits is None and args.k is None and not args.fp_baseline:
+        return None  # arch default
+    if args.fp_baseline:
+        return PrecisionPolicy(quantize=False)
+    return PrecisionPolicy(inner_bits=args.w_bits or 4, k=args.k or (args.w_bits or 4))
+
+
+def _lower_step(api, shape: ShapeSpec, mesh, rules, *, donate: bool):
+    """Build + lower the right step function for this cell (no compile)."""
+    with part.axis_rules(rules, mesh):
+        in_specs = steps_lib.input_specs(api, shape)
+        in_axes = steps_lib.input_axes(api, shape)
+        batch_sh = part.tree_shardings(in_axes, mesh, rules)
+
+        if shape.kind == "train":
+            fn = steps_lib.make_train_step(api)
+            state_specs = steps_lib.train_state_specs(api)
+            state_sh = part.tree_shardings(
+                steps_lib.train_state_axes(api), mesh, rules)
+            jfn = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                          out_shardings=(state_sh, None),
+                          donate_argnums=(0,) if donate else ())
+            return jfn.lower(state_specs, in_specs)
+        if shape.kind == "prefill":
+            fn = steps_lib.make_prefill_fn(api)
+            params = api.abstract_params("serve")
+            p_sh = part.tree_shardings(api.param_axes("serve"), mesh, rules)
+            # pin the returned KV cache to its decode sharding (batch x
+            # kv_seq) — otherwise auto-sharding may leave the (L,B,S,KV,D)
+            # stack batch-sharded only (+10 GiB/device on chameleon).
+            try:
+                cache_sh = part.tree_shardings(api.cache_axes(), mesh, rules)
+                jfn = jax.jit(fn, in_shardings=(p_sh, batch_sh),
+                              out_shardings=(None, cache_sh))
+                return jfn.lower(params, in_specs)
+            except Exception:
+                # families whose prefill cache tree differs from the
+                # decode cache layout (recurrentgemma's raw scan states):
+                # fall back to auto out-sharding.
+                jfn = jax.jit(fn, in_shardings=(p_sh, batch_sh))
+                return jfn.lower(params, in_specs)
+        # decode
+        fn = steps_lib.make_decode_fn(api)
+        params = api.abstract_params("serve")
+        p_sh = part.tree_shardings(api.param_axes("serve"), mesh, rules)
+        cache_sh = batch_sh.pop("cache")
+        jfn = jax.jit(
+            fn,
+            in_shardings=(p_sh, cache_sh, batch_sh["tokens"],
+                          batch_sh["length"]),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,) if donate else (),
+        )
+        return jfn.lower(params, in_specs["cache"], in_specs["tokens"],
+                         in_specs["length"])
+
+
+def _extract(compiled) -> Dict[str, Any]:
+    """flops / bytes / collective wire bytes of one compiled artifact."""
+    ca = compiled.cost_analysis()
+    stats = rl.collective_wire_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "wire": stats.total_wire_bytes,
+        "coll_counts": dict(stats.counts),
+        "coll_wire": dict(stats.wire_bytes),
+    }
+
+
+def _probe_pair(api):
+    """(api_1unit, api_2unit, n_units) for scan-stacked models, else None.
+
+    XLA cost_analysis counts a while body ONCE; the probes lower a 1-unit
+    and a 2-unit model with every scan unrolled (core/flags.force_unroll)
+    so  total = F(1) + (n_units - 1) * (F(2) - F(1))  is exact for the
+    homogeneous scanned stack (embed/head/optimizer live in F(1)'s share).
+    """
+    cfg = api.cfg
+    if api.family == "cnn" or not getattr(cfg, "scan_layers", False):
+        return None
+
+    def clone(c):
+        a = dataclasses.replace(api, cfg=c)
+        a.microbatches = 1  # probe = one full-batch micro (cost-linear)
+        return a
+
+    if api.family == "hybrid":  # recurrentgemma: unit = (R,R,A) superblock
+        r = cfg.n_rem
+        return (clone(dataclasses.replace(cfg, n_layers=3 + r, scan_unroll=True)),
+                clone(dataclasses.replace(cfg, n_layers=6 + r, scan_unroll=True)),
+                cfg.n_super)
+    nd = getattr(cfg, "dense_first_n", 0)
+    return (clone(dataclasses.replace(cfg, n_layers=nd + 1, scan_unroll=True)),
+            clone(dataclasses.replace(cfg, n_layers=nd + 2, scan_unroll=True)),
+            cfg.n_layers - nd)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    rules_name: str = "baseline",
+    policy: Optional[PrecisionPolicy] = None,
+    donate: bool = True,
+    probes: bool = True,
+    cfg_overrides: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Lower+compile one cell; return the JSON-able record."""
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    api = configs.get(arch, policy=policy)
+    if cfg_overrides:
+        valid = {k: v for k, v in cfg_overrides.items()
+                 if hasattr(api.cfg, k)}
+        if valid:
+            api.cfg = dataclasses.replace(api.cfg, **valid)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(api, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": reason, "mesh": [list(a) for a in mesh_axes(mesh)],
+                "rules": rules_name}
+
+    train_rules, serve_rules = RULE_SETS[rules_name]
+    base = train_rules if shape.kind == "train" else serve_rules
+    rules = steps_lib.batch_rules_for(base, shape.global_batch, mesh)
+
+    # --- full-depth artifact: the compile/memory/schedule proof ------------
+    lowered = _lower_step(api, shape, mesh, rules, donate=donate)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    raw = _extract(compiled)
+
+    # --- cost probes: correct for while-body-counted-once -------------------
+    pair = _probe_pair(api)
+    if probes and pair is not None:
+        a1, a2, n_units = pair
+        with flags.force_unroll():
+            e1 = _extract(_lower_step(a1, shape, mesh, rules,
+                                      donate=False).compile())
+            e2 = _extract(_lower_step(a2, shape, mesh, rules,
+                                      donate=False).compile())
+        extra = n_units - 1
+        cost = {
+            "flops": e1["flops"] + extra * (e2["flops"] - e1["flops"]),
+            "bytes": e1["bytes"] + extra * (e2["bytes"] - e1["bytes"]),
+            "wire": e1["wire"] + extra * (e2["wire"] - e1["wire"]),
+            "coll_counts": {
+                k: int(e1["coll_counts"].get(k, 0) + extra *
+                       (e2["coll_counts"].get(k, 0) - e1["coll_counts"].get(k, 0)))
+                for k in set(e1["coll_counts"]) | set(e2["coll_counts"])},
+            "coll_wire": {
+                k: e1["coll_wire"].get(k, 0.0) + extra *
+                   (e2["coll_wire"].get(k, 0.0) - e1["coll_wire"].get(k, 0.0))
+                for k in set(e1["coll_wire"]) | set(e2["coll_wire"])},
+            "method": f"probe-extrapolated (1,2 -> {n_units} units, unrolled)",
+        }
+    else:
+        cost = dict(raw)
+        cost["method"] = "direct"
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    step_kind = "train" if shape.kind == "train" else "infer"
+    model_flops = api.model_flops(tokens=tokens, step=step_kind)
+
+    # Pallas flash attention is an opaque custom call to cost_analysis —
+    # add its (causal-aware) flops analytically so the compute term stays
+    # honest when attn_impl == 'flash'.
+    flash_flops = 0.0
+    if (getattr(api.cfg, "attn_impl", "xla") == "flash"
+            and shape.kind == "prefill"):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp = sizes.get("data", 1) * sizes.get("pod", 1)
+        tp = sizes.get("model", 1)
+        b_l = max(shape.global_batch // dp, 1)
+        h_l = max(api.cfg.n_heads // tp, 1)
+        n_attn = getattr(api.cfg, "n_super", None) or api.cfg.n_layers
+        win = getattr(api.cfg, "window", None)
+        sk_eff = min(win, shape.seq_len) if win else shape.seq_len / 2.0
+        flash_flops = (n_attn * 4.0 * b_l * h_l * shape.seq_len * sk_eff
+                       * api.cfg.hd)
+
+    hw = rl.TPU_V5E
+    compute_s = (cost["flops"] + flash_flops) / hw.peak_flops_bf16
+    memory_s = cost["bytes"] / hw.hbm_bw
+    collective_s = cost["wire"] / hw.ici_bw_per_chip
+    bound_s = max(compute_s, memory_s, collective_s)
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda t: t[1])[0]
+    chips = mesh.devices.size
+    useful = model_flops / (cost["flops"] * chips) if cost["flops"] else 0.0
+    frac = ((model_flops / chips / bound_s) / hw.peak_flops_bf16
+            if bound_s > 0 else 0.0)
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    # donated inputs alias outputs: HBM peak ~= max(arg, out) + temp
+    peak = max(mem["argument_bytes"], mem["output_bytes"]) + mem["temp_bytes"]
+    fits = peak <= hw.hbm_bytes
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "status": "ok",
+        "rules": rules_name,
+        "mesh": [list(a) for a in mesh_axes(mesh)],
+        "multi_pod": multi_pod,
+        "policy": {"quantize": api.policy.quantize,
+                   "inner_bits": api.policy.inner_bits, "k": api.policy.k},
+        "cost_method": cost["method"],
+        "flash_attn_flops_analytic": flash_flops,
+        "flops_per_device": cost["flops"],
+        "bytes_per_device": cost["bytes"],
+        "wire_bytes_per_device": cost["wire"],
+        "raw_uncorrected": {k: raw[k] for k in ("flops", "bytes", "wire")},
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": bound_s,
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "collectives": {
+            "counts": cost["coll_counts"],
+            "wire_bytes": cost["coll_wire"],
+        },
+        "memory": mem,
+        "hbm_peak_bytes": peak,
+        "fits_hbm": bool(fits),
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "t_total_s": round(time.time() - t0, 2),
+    }
+    return rec
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool, rules: str) -> pathlib.Path:
+    pod = "pod2" if multi_pod else "pod1"
+    return OUT_DIR / f"{arch}__{shape}__{pod}__{rules}.json"
+
+
+def run_one(args) -> int:
+    over = {}
+    if args.attn_impl:
+        over["attn_impl"] = args.attn_impl
+    if args.remat_policy:
+        over["remat_policy"] = args.remat_policy
+    rec = lower_cell(args.arch, args.shape, multi_pod=args.multipod,
+                     rules_name=args.rules, policy=_policy_from(args),
+                     cfg_overrides=over or None)
+    out = json.dumps(rec, indent=2)
+    print(out)
+    if not args.no_save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        cell_path(args.arch, args.shape, args.multipod,
+                  args.rules).write_text(out)
+    if rec["status"] == "ok":
+        print(f"\n[{args.arch} x {args.shape}] dominant={rec['dominant']} "
+              f"bound={rec['bound_s']:.4f}s roofline={rec['roofline_fraction']:.3f} "
+              f"peak_hbm={rec['hbm_peak_bytes']/2**30:.2f}GiB fits={rec['fits_hbm']}")
+    return 0
+
+
+def run_sweep(args) -> int:
+    """Each cell in a fresh subprocess: isolates compile-cache/memory and
+    lets a single bad cell fail without killing the sweep."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    cells = [(a, s) for a in configs.ARCH_NAMES for s in SHAPES]
+    failures = []
+    for arch, shape in cells:
+        p = cell_path(arch, shape, args.multipod, args.rules)
+        if p.exists() and not args.force:
+            print(f"[skip cached] {arch} x {shape}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--rules", args.rules]
+        if args.multipod:
+            cmd.append("--multipod")
+        print(f"[run] {arch} x {shape} (multipod={args.multipod})", flush=True)
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=args.cell_timeout)
+        if r.returncode != 0:
+            failures.append((arch, shape, r.stderr[-2000:]))
+            print(f"[FAIL] {arch} x {shape}\n{r.stderr[-2000:]}")
+        else:
+            print(r.stdout.splitlines()[-1] if r.stdout.splitlines() else "")
+    print(f"\nsweep done: {len(cells) - len(failures)}/{len(cells)} cells ok")
+    for arch, shape, err in failures:
+        print(f"  FAILED {arch} x {shape}")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=configs.ARCH_NAMES + configs.RESNET_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multipod", action="store_true",
+                    help="2x16x16 (512 chips) instead of 16x16")
+    ap.add_argument("--rules", default="baseline", choices=list(RULE_SETS))
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--force", action="store_true", help="re-run cached cells")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--w-bits", type=int, default=None, choices=(1, 2, 4, 8))
+    ap.add_argument("--k", type=int, default=None, choices=(1, 2, 4, 8))
+    ap.add_argument("--fp-baseline", action="store_true",
+                    help="unquantized bf16 deployment (paper's FP row)")
+    ap.add_argument("--attn-impl", default=None, choices=("xla", "flash"))
+    ap.add_argument("--remat-policy", default=None, choices=("full", "dots"))
+    ap.add_argument("--cell-timeout", type=int, default=3600)
+    args = ap.parse_args(argv)
+
+    if args.sweep:
+        return run_sweep(args)
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape required (or --sweep)")
+    return run_one(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

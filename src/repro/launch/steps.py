@@ -1,0 +1,209 @@
+"""Step-function builders shared by the drivers and the multi-pod dry-run.
+
+Everything here is mesh-agnostic: functions close over a ModelAPI and a
+PrecisionPolicy; sharding is applied by the caller through
+``in_shardings`` built from the logical-axes trees (``*_axes`` helpers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.api import ModelAPI
+from repro.nn import partitioning as part
+from repro.optim import (adamw_init, adamw_update, compress_decompress,
+                         compress_init, warmup_cosine)
+
+__all__ = [
+    "cross_entropy",
+    "make_train_step", "train_state_specs", "train_state_axes",
+    "make_prefill_fn", "make_decode_fn",
+    "input_specs", "input_axes", "batch_rules_for",
+]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE; stable in f32 regardless of logits dtype."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+# --------------------------------------------------------------------------
+# Train
+# --------------------------------------------------------------------------
+
+
+def make_train_step(api: ModelAPI, *, peak_lr: float = 3e-4,
+                    total_steps: int = 10_000,
+                    grad_compression: bool = False) -> Callable:
+    """train_step(state, batch) -> (state, metrics) with microbatch
+    gradient accumulation (api.microbatches).
+
+    grad_compression: int8 quantize-dequantize of DP gradients with
+    error feedback carried in state['gc'] (optim/compress.py) — the
+    paper's word-length reduction applied to the all-reduce traffic.
+    """
+    mb = max(api.microbatches, 1)
+
+    def loss_fn(params, tokens, labels, frames):
+        kw = {"frames": frames} if api.needs_frames else {}
+        logits = api.forward(params, tokens, mode="train", **kw)
+        return cross_entropy(logits, labels)
+
+    def train_step(state, batch):
+        params = state["params"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        frames = batch.get("frames")
+        b = tokens.shape[0]
+        assert b % mb == 0, (b, mb)
+
+        def micro(acc, xs):
+            tok, lab, frm = xs
+            loss, grads = jax.value_and_grad(loss_fn)(params, tok, lab, frm)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                               acc, grads)
+            return acc, loss
+
+        split = lambda x: (x.reshape(mb, b // mb, *x.shape[1:])
+                           if x is not None else None)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, tokens, labels, frames)
+            losses = loss[None]
+        else:
+            xs = (split(tokens), split(labels),
+                  split(frames) if frames is not None else
+                  jnp.zeros((mb, 0), jnp.float32))
+            grads, losses = jax.lax.scan(
+                lambda acc, x: micro(acc, (x[0], x[1],
+                                           x[2] if api.needs_frames else None)),
+                zeros, xs)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        new_state = {}
+        if grad_compression:
+            grads, new_state["gc"] = compress_decompress(grads, state["gc"])
+        lr = warmup_cosine(state["step"], peak_lr=peak_lr, total=total_steps)
+        new_params, new_opt = adamw_update(
+            grads, state["opt"], params, lr=lr)
+        metrics = {"loss": jnp.mean(losses), "lr": lr,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)))}
+        new_state.update({"params": new_params, "opt": new_opt,
+                          "step": state["step"] + 1})
+        return new_state, metrics
+
+    return train_step
+
+
+def train_state_specs(api: ModelAPI):
+    """Abstract TrainState (ShapeDtypeStructs) — dry-run input."""
+    params = api.abstract_params("train")
+    mom = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, api.opt_dtype), t)
+    return {"params": params,
+            "opt": {"m": mom(params), "v": mom(params),
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_axes(api: ModelAPI):
+    axes = api.param_axes("train")
+    return {"params": axes,
+            "opt": {"m": axes, "v": axes, "count": ()},
+            "step": ()}
+
+
+def init_train_state(api: ModelAPI, rng):
+    params = api.init_params(rng, "train")
+    return {"params": params,
+            "opt": adamw_init(params, state_dtype=api.opt_dtype),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# Serve
+# --------------------------------------------------------------------------
+
+
+def make_prefill_fn(api: ModelAPI, *, mode: str = "serve") -> Callable:
+    def prefill_fn(params, batch):
+        kw = {"frames": batch["frames"]} if api.needs_frames else {}
+        logits, cache = api.prefill(params, batch["tokens"], mode=mode, **kw)
+        return logits, cache
+    return prefill_fn
+
+
+def make_decode_fn(api: ModelAPI, *, mode: str = "serve") -> Callable:
+    def decode_fn(params, cache, tokens, length):
+        return api.decode_step(params, cache, tokens, length, mode=mode)
+    return decode_fn
+
+
+# --------------------------------------------------------------------------
+# Inputs
+# --------------------------------------------------------------------------
+
+
+def batch_rules_for(rules: Dict, global_batch: int, mesh) -> Dict:
+    """Shrink the 'batch' rule until it divides the global batch (the
+    long_500k batch=1 cell replicates instead of sharding)."""
+    entry = rules.get("batch")
+    cand = (entry,) if isinstance(entry, str) else tuple(entry or ())
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    picked = []
+    div = 1
+    for ax in cand:
+        s = sizes.get(ax)
+        if s and global_batch % (div * s) == 0:
+            picked.append(ax)
+            div *= s
+    new = dict(rules)
+    new["batch"] = tuple(picked) if picked else None
+    return new
+
+
+def input_specs(api: ModelAPI, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+               "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if api.needs_frames:
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, api.cfg.n_audio, api.cfg.d_model), jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if api.needs_frames:
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, api.cfg.n_audio, api.cfg.d_model), jnp.float32)
+        return out
+    # decode: one new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache": api.cache_specs(b, s),
+            "length": jax.ShapeDtypeStruct((), i32)}
+
+
+def input_axes(api: ModelAPI, shape: ShapeSpec) -> Dict[str, Any]:
+    """Logical axes matching input_specs."""
+    if shape.kind == "train":
+        out = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if api.needs_frames:
+            out["frames"] = ("batch", "frames", "act_embed")
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": ("batch", "seq")}
+        if api.needs_frames:
+            out["frames"] = ("batch", "frames", "act_embed")
+        return out
+    return {"tokens": ("batch", None),
+            "cache": api.cache_axes(),
+            "length": ()}

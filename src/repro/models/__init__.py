@@ -1,0 +1,7 @@
+"""Model zoo: the paper's ResNets + the 10 assigned LM-family architectures.
+
+Every model exposes the same functional API (models/api.py):
+  specs(mode) / forward / decode_step / cache_specs / gemm_workload /
+  model_flops / param_counts — so the launcher, dry-run, DSE and
+  benchmarks treat all architectures uniformly.
+"""

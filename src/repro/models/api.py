@@ -1,0 +1,96 @@
+"""Uniform model API: one façade over every architecture family.
+
+The launcher, dry-run, DSE, benchmarks and tests all program against
+this interface; adding an architecture = one config file registering a
+ModelAPI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.nn import param as nnp
+
+__all__ = ["ModelAPI"]
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    """Bundles a config with its family module's functions."""
+
+    name: str
+    family: str
+    cfg: Any
+    mod: Any                               # the family module
+    policy: PrecisionPolicy
+    needs_frames: bool = False             # whisper: stub audio frontend
+    microbatches: int = 1                  # train grad-accumulation factor
+    long_context_ok: bool = False          # may run long_500k
+    opt_dtype: Any = jnp.float32           # AdamW moment storage dtype
+
+    # --- specs -------------------------------------------------------------
+
+    def specs(self, mode: str):
+        return self.mod.specs(self.cfg, mode, self.policy)
+
+    def abstract_params(self, mode: str):
+        return nnp.abstract_params(self.specs(mode))
+
+    def init_params(self, rng, mode: str = "train"):
+        return nnp.init_params(self.specs(mode), rng)
+
+    def param_axes(self, mode: str):
+        return nnp.axes_tree(self.specs(mode))
+
+    # --- compute -----------------------------------------------------------
+
+    def forward(self, params, tokens, *, mode="train", impl="xla", **kw):
+        return self.mod.forward(self.cfg, params, tokens, self.policy,
+                                mode=mode, impl=impl, **kw)
+
+    def prefill(self, params, tokens, *, mode="serve", impl="xla", **kw):
+        return self.mod.prefill(self.cfg, params, tokens, self.policy,
+                                mode=mode, impl=impl, **kw)
+
+    def decode_step(self, params, cache, tokens, length, *, mode="serve",
+                    impl="xla"):
+        return self.mod.decode_step(self.cfg, params, cache, tokens, length,
+                                    self.policy, mode=mode, impl=impl)
+
+    def cache_specs(self, batch: int, max_len: int):
+        return self.mod.cache_specs(self.cfg, batch, max_len)
+
+    def cache_axes(self):
+        return self.mod.cache_axes(self.cfg)
+
+    # --- analysis ----------------------------------------------------------
+
+    def gemm_workload(self, tokens: int):
+        return self.mod.gemm_workload(self.cfg, tokens)
+
+    def model_flops(self, *, tokens: int, step: str) -> float:
+        return self.mod.model_flops(self.cfg, tokens=tokens, step=step)
+
+    def active_params(self) -> int:
+        return self.mod.active_params(self.cfg)
+
+    def total_params(self) -> int:
+        return self.mod.total_params(self.cfg)
+
+    def param_class_counts(self, mode: str = "train") -> Dict[str, int]:
+        """{'inner': n, 'boundary': n} weight counts for Table III."""
+        def classify(path: str) -> str:
+            p = path.lower()
+            if "embed" in p or "head" in p or "norm" in p or "'fc'" in p \
+                    or "stem" in p or "bn" in p or "ln" in p:
+                return "boundary"
+            if path.endswith("['w']"):
+                return "inner"
+            return "other"
+        counts = nnp.count_params(self.specs(mode), classify)
+        return {"inner": counts.get("inner", 0),
+                "boundary": counts.get("boundary", 0)}

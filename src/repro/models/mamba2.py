@@ -1,0 +1,179 @@
+"""Mamba-2 LM (SSD): attention-free, constant-state decode.
+
+Runs all four shapes including long_500k — the recurrent state is
+(B, H, N, P) regardless of context length (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dse import Gemm
+from repro.core.precision import PrecisionPolicy
+from repro.nn import layers as nnl
+from repro.nn import quantized as Q
+from repro.nn import ssm as nnssm
+from repro.nn.param import ParamSpec
+from repro.nn.partitioning import constrain
+from repro.nn.ssm import SSMConfig
+
+__all__ = ["Mamba2Config", "specs", "forward", "prefill", "decode_step",
+           "cache_specs", "gemm_workload", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    ssm: SSMConfig
+    scan_layers: bool = True
+    scan_unroll: bool = False
+    remat: bool = True
+    family: str = "ssm"
+
+
+def _stack(spec, lead, lead_axes):
+    return {k: (ParamSpec(shape=lead + v.shape, dtype=v.dtype,
+                          axes=lead_axes + v.axes, init=v.init, const=v.const)
+                if isinstance(v, ParamSpec) else _stack(v, lead, lead_axes))
+            for k, v in spec.items()}
+
+
+def specs(cfg: Mamba2Config, mode: str = "train",
+          policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
+    serve = mode == "serve"
+    lead = (cfg.n_layers,) if cfg.scan_layers else ()
+    lead_axes = ("layers",) if cfg.scan_layers else ()
+    return {
+        "embed": (nnl.embed_serve_spec(nnl.pad_vocab(cfg.vocab), cfg.d_model, policy)
+                  if serve else nnl.embed_spec(nnl.pad_vocab(cfg.vocab), cfg.d_model)),
+        "final_norm": nnl.rmsnorm_spec(cfg.d_model),
+        "head": (Q.qlinear_serve_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab),
+                                      axes=("embed", "vocab"),
+                                      layer_class="boundary", policy=policy)
+                 if serve else
+                 Q.qlinear_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab), axes=("embed", "vocab"),
+                                layer_class="boundary")),
+        "layers": {
+            "ln": _stack(nnl.rmsnorm_spec(cfg.d_model), lead, lead_axes),
+            "ssm": nnssm.ssm_spec(cfg.ssm, lead=lead, lead_axes=lead_axes,
+                                  serve=serve, policy=policy),
+        },
+    }
+
+
+def _run(cfg, params, x, policy, *, serve, impl, collect_state):
+    def body(carry, lp):
+        h = nnl.rmsnorm_apply(lp["ln"], carry)
+        o, st = nnssm.ssd_forward(lp["ssm"], h, policy, cfg.ssm,
+                                  serve=serve, impl=impl)
+        y = constrain(carry + o, ("batch", "seq", "act_embed"))
+        return y, st if collect_state else None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    return jax.lax.scan(fn, x, params["layers"],
+                        unroll=True if cfg.scan_unroll else 1)
+
+
+def _head(cfg, params, x, policy, serve, impl):
+    x = nnl.rmsnorm_apply(params["final_norm"], x)
+    if serve:
+        logits = Q.qlinear_serve_apply(params["head"], x, policy,
+                                       layer_class="boundary", impl=impl)
+    else:
+        logits = Q.qlinear_apply(params["head"], x, policy,
+                                 layer_class="boundary")
+    return logits[..., :cfg.vocab]  # drop TP vocab padding
+
+
+def _pad_to_chunk(x, chunk):
+    s = x.shape[1]
+    pad = (-s) % chunk
+    return (jnp.pad(x, ((0, 0), (0, pad), (0, 0))), s) if pad else (x, s)
+
+
+def forward(cfg, params, tokens, policy, *, mode="train", impl="xla"):
+    serve = mode == "serve"
+    x = (nnl.embed_serve_apply if serve else nnl.embed_apply)(
+        params["embed"], tokens)
+    x, s = _pad_to_chunk(x, cfg.ssm.chunk)
+    x, _ = _run(cfg, params, x, policy, serve=serve, impl=impl,
+                collect_state=False)
+    return _head(cfg, params, x[:, :s], policy, serve, impl)
+
+
+def prefill(cfg, params, tokens, policy, *, impl="xla", mode="serve"):
+    serve = mode == "serve"
+    x = (nnl.embed_serve_apply if serve else nnl.embed_apply)(
+        params["embed"], tokens)
+    x, s = _pad_to_chunk(x, cfg.ssm.chunk)
+    x, states = _run(cfg, params, x, policy, serve=serve, impl=impl,
+                     collect_state=True)
+    logits = _head(cfg, params, x[:, s - 1: s], policy, serve, impl)
+    return logits[:, 0, :], states
+
+
+def cache_specs(cfg: Mamba2Config, batch: int, max_len: int):
+    one = nnssm.ssm_state_spec(cfg.ssm, batch)
+    return {k: jax.ShapeDtypeStruct((cfg.n_layers,) + v.shape, v.dtype)
+            for k, v in one.items()}
+
+
+def cache_axes(cfg: Mamba2Config):
+    return {"ssm": ("layers", "batch", "heads", "state", None),
+            "conv": ("layers", "batch", None, "mlp")}
+
+
+def decode_step(cfg, params, cache, tokens, length, policy, *,
+                impl="xla", mode="serve"):
+    serve = mode == "serve"
+    x = (nnl.embed_serve_apply if serve else nnl.embed_apply)(
+        params["embed"], tokens)
+
+    def body(carry, xs):
+        lp, st = xs
+        h = nnl.rmsnorm_apply(lp["ln"], carry)
+        o, st = nnssm.ssd_decode_step(lp["ssm"], h, st, policy, cfg.ssm,
+                                      serve=serve, impl=impl)
+        return carry + o, st
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache),
+                                unroll=True if cfg.scan_unroll else 1)
+    logits = _head(cfg, params, x, policy, serve, impl)
+    return logits[:, 0, :], new_cache
+
+
+def gemm_workload(cfg: Mamba2Config, tokens: int):
+    s = cfg.ssm
+    d, di = cfg.d_model, s.d_inner
+    gn = s.n_groups * s.d_state
+    per = [
+        Gemm("in_xbc", tokens, d, di + 2 * gn),
+        Gemm("in_z", tokens, d, di),
+        Gemm("in_dt", tokens, d, s.n_heads),
+        Gemm("out", tokens, di, d),
+    ]
+    out = [dataclasses.replace(g, count=cfg.n_layers) for g in per]
+    out.append(Gemm("head", tokens, d, cfg.vocab, layer_class="boundary"))
+    return out
+
+
+def active_params(cfg: Mamba2Config) -> int:
+    s = cfg.ssm
+    per = (cfg.d_model * (s.d_inner + 2 * s.n_groups * s.d_state)
+           + cfg.d_model * s.d_inner + cfg.d_model * s.n_heads
+           + s.d_inner * cfg.d_model)
+    return per * cfg.n_layers + 2 * cfg.vocab * cfg.d_model
+
+
+total_params = active_params
+
+
+def model_flops(cfg, *, tokens: int, step: str) -> float:
+    mult = 6.0 if step == "train" else 2.0
+    return mult * active_params(cfg) * tokens

@@ -1,0 +1,359 @@
+"""RecurrentGemma (Griffin): RG-LRU blocks + local attention, 1 attn per
+3 layers (R, R, A).  Local window + constant-size recurrent state make it
+the second long_500k-capable architecture.
+
+Decode keeps a *ring-buffer* KV cache of exactly `window` slots for the
+attention layers (keys stored post-rope, so absolute positions never need
+recovering) — total decode state is O(window + d_rnn), independent of
+context length.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dse import Gemm
+from repro.core.precision import PrecisionPolicy
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn import quantized as Q
+from repro.nn import rglru as nnr
+from repro.nn.param import ParamSpec
+from repro.nn.partitioning import constrain
+from repro.nn.rglru import RGLRUConfig
+
+__all__ = ["RGConfig", "specs", "forward", "prefill", "decode_step",
+           "cache_specs", "gemm_workload", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RGConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    window: int = 2048
+    head_dim: Optional[int] = None
+    scan_layers: bool = True
+    scan_unroll: bool = False
+    attn_impl: str = "xla"
+    remat: bool = True
+    attn_chunk: int = 1024
+    family: str = "hybrid"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def rnn(self) -> RGLRUConfig:
+        return RGLRUConfig(d_model=self.d_model, d_rnn=self.d_model)
+
+    @property
+    def n_super(self) -> int:
+        return self.n_layers // 3
+
+    @property
+    def n_rem(self) -> int:
+        return self.n_layers - 3 * self.n_super
+
+
+def _stack(spec, lead, lead_axes):
+    return {k: (ParamSpec(shape=lead + v.shape, dtype=v.dtype,
+                          axes=lead_axes + v.axes, init=v.init, const=v.const)
+                if isinstance(v, ParamSpec) else _stack(v, lead, lead_axes))
+            for k, v in spec.items()}
+
+
+def _mlp_spec(cfg, *, lead, lead_axes, serve, policy):
+    mk = functools.partial(
+        Q.qlinear_serve_spec if serve else Q.qlinear_spec,
+        lead=lead, lead_axes=lead_axes)
+    kw = {"policy": policy} if serve else {}
+    return {
+        "gate": mk(cfg.d_model, cfg.d_ff, axes=("embed", "mlp"), **kw),
+        "up": mk(cfg.d_model, cfg.d_ff, axes=("embed", "mlp"), **kw),
+        "down": mk(cfg.d_ff, cfg.d_model, axes=("mlp", "act_embed"), **kw),
+    }
+
+
+def _r_layer_spec(cfg, *, lead, lead_axes, serve, policy):
+    return {
+        "ln1": _stack(nnl.rmsnorm_spec(cfg.d_model), lead, lead_axes),
+        "rnn": nnr.rglru_block_spec(cfg.rnn, lead=lead, lead_axes=lead_axes,
+                                    serve=serve, policy=policy),
+        "ln2": _stack(nnl.rmsnorm_spec(cfg.d_model), lead, lead_axes),
+        "mlp": _mlp_spec(cfg, lead=lead, lead_axes=lead_axes, serve=serve,
+                         policy=policy),
+    }
+
+
+def _a_layer_spec(cfg, *, lead, lead_axes, serve, policy):
+    return {
+        "ln1": _stack(nnl.rmsnorm_spec(cfg.d_model), lead, lead_axes),
+        "attn": attn.gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
+                              lead=lead, lead_axes=lead_axes, serve=serve,
+                              policy=policy),
+        "ln2": _stack(nnl.rmsnorm_spec(cfg.d_model), lead, lead_axes),
+        "mlp": _mlp_spec(cfg, lead=lead, lead_axes=lead_axes, serve=serve,
+                         policy=policy),
+    }
+
+
+def specs(cfg: RGConfig, mode: str = "train",
+          policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
+    serve = mode == "serve"
+    ns = cfg.n_super
+    lead, lax_ = ((ns,), ("layers",)) if cfg.scan_layers else ((), ())
+    tree = {
+        "embed": (nnl.embed_serve_spec(nnl.pad_vocab(cfg.vocab), cfg.d_model, policy)
+                  if serve else nnl.embed_spec(nnl.pad_vocab(cfg.vocab), cfg.d_model)),
+        "final_norm": nnl.rmsnorm_spec(cfg.d_model),
+        "head": (Q.qlinear_serve_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab),
+                                      axes=("embed", "vocab"),
+                                      layer_class="boundary", policy=policy)
+                 if serve else
+                 Q.qlinear_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab), axes=("embed", "vocab"),
+                                layer_class="boundary")),
+        # superblock = (R, R, A), scanned
+        "supers": {
+            "r1": _r_layer_spec(cfg, lead=lead, lead_axes=lax_, serve=serve,
+                                policy=policy),
+            "r2": _r_layer_spec(cfg, lead=lead, lead_axes=lax_, serve=serve,
+                                policy=policy),
+            "att": _a_layer_spec(cfg, lead=lead, lead_axes=lax_, serve=serve,
+                                 policy=policy),
+        },
+    }
+    for i in range(cfg.n_rem):  # leftover layers (pattern prefix: R, R)
+        tree[f"rem_{i}"] = _r_layer_spec(cfg, lead=(), lead_axes=(),
+                                         serve=serve, policy=policy)
+    return tree
+
+
+def _r_fwd(cfg, p, x, policy, serve, impl, h0=None):
+    h = nnl.rmsnorm_apply(p["ln1"], x)
+    o, st = nnr.rglru_block_forward(p["rnn"], h, policy, cfg.rnn,
+                                    serve=serve, impl=impl, h0=h0)
+    x = x + o
+    h = nnl.rmsnorm_apply(p["ln2"], x)
+    fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
+          if serve else Q.qlinear_apply)
+    g, u = fn(p["mlp"]["gate"], h, policy), fn(p["mlp"]["up"], h, policy)
+    x = x + fn(p["mlp"]["down"], nnl.swiglu_combine(g, u), policy)
+    return constrain(x, ("batch", "seq", "act_embed")), st
+
+
+def _a_fwd(cfg, p, x, policy, sin, cos, serve, impl):
+    h = nnl.rmsnorm_apply(p["ln1"], x)
+    o, kv = attn.gqa_prefill(p["attn"], h, policy, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv, head_dim=cfg.hd, sin=sin, cos=cos,
+                             window=cfg.window, serve=serve, impl=impl,
+                             chunk=cfg.attn_chunk, attn_impl=cfg.attn_impl)
+    x = x + o
+    h = nnl.rmsnorm_apply(p["ln2"], x)
+    fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
+          if serve else Q.qlinear_apply)
+    g, u = fn(p["mlp"]["gate"], h, policy), fn(p["mlp"]["up"], h, policy)
+    x = x + fn(p["mlp"]["down"], nnl.swiglu_combine(g, u), policy)
+    return constrain(x, ("batch", "seq", "act_embed")), kv
+
+
+def _run(cfg, params, x, policy, sin, cos, *, serve, impl, collect):
+    def body(carry, sp):
+        y, st1 = _r_fwd(cfg, sp["r1"], carry, policy, serve, impl)
+        y, st2 = _r_fwd(cfg, sp["r2"], y, policy, serve, impl)
+        y, kv = _a_fwd(cfg, sp["att"], y, policy, sin, cos, serve, impl)
+        out = (st1, st2, kv) if collect else None
+        return y, out
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, states = jax.lax.scan(fn, x, params["supers"],
+                             unroll=True if cfg.scan_unroll else 1)
+    rem_states = []
+    for i in range(cfg.n_rem):
+        x, st = _r_fwd(cfg, params[f"rem_{i}"], x, policy, serve, impl)
+        rem_states.append(st)
+    return x, (states, rem_states)
+
+
+def _head(cfg, params, x, policy, serve, impl):
+    x = nnl.rmsnorm_apply(params["final_norm"], x)
+    if serve:
+        logits = Q.qlinear_serve_apply(params["head"], x, policy,
+                                       layer_class="boundary", impl=impl)
+    else:
+        logits = Q.qlinear_apply(params["head"], x, policy,
+                                 layer_class="boundary")
+    return logits[..., :cfg.vocab]  # drop TP vocab padding
+
+
+def _embed(params, tokens, serve):
+    return (nnl.embed_serve_apply if serve else nnl.embed_apply)(
+        params["embed"], tokens)
+
+
+def forward(cfg, params, tokens, policy, *, mode="train", impl="xla"):
+    serve = mode == "serve"
+    b, s = tokens.shape
+    x = _embed(params, tokens, serve)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    sin, cos = nnl.rotary_cache(pos, cfg.hd)
+    x, _ = _run(cfg, params, x, policy, sin, cos, serve=serve, impl=impl,
+                collect=False)
+    return _head(cfg, params, x, policy, serve, impl)
+
+
+def prefill(cfg, params, tokens, policy, *, impl="xla", mode="serve"):
+    serve = mode == "serve"
+    b, s = tokens.shape
+    x = _embed(params, tokens, serve)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    sin, cos = nnl.rotary_cache(pos, cfg.hd)
+    x, (states, rem) = _run(cfg, params, x, policy, sin, cos, serve=serve,
+                            impl=impl, collect=True)
+    logits = _head(cfg, params, x[:, -1:, :], policy, serve, impl)
+    # Note: prefill keeps the full (B,S,KVH,D) keys; decode re-packs the
+    # last `window` slots into the ring buffer (launch/serve.py).
+    return logits[:, 0, :], (states, rem)
+
+
+def cache_specs(cfg: RGConfig, batch: int, max_len: int):
+    """Ring-buffer decode cache: O(window) per attention layer."""
+    ns, w = cfg.n_super, min(cfg.window, max_len)
+    rstate = nnr.rglru_state_spec(cfg.rnn, batch)
+    stack = lambda spec, n: {k: jax.ShapeDtypeStruct((n,) + v.shape, v.dtype)
+                             for k, v in spec.items()}
+    return {
+        "r1": stack(rstate, ns),
+        "r2": stack(rstate, ns),
+        "k": jax.ShapeDtypeStruct((ns, batch, w, cfg.n_kv, cfg.hd), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((ns, batch, w, cfg.n_kv, cfg.hd), jnp.bfloat16),
+        "rem": [stack(rstate, 1) for _ in range(cfg.n_rem)],
+    }
+
+
+def cache_axes(cfg: RGConfig):
+    r = {"h": ("layers", "batch", "mlp"), "conv": ("layers", "batch", None, "mlp")}
+    return {
+        "r1": r, "r2": r,
+        "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "rem": [r for _ in range(cfg.n_rem)],
+    }
+
+
+def _attn_ring_step(cfg, p, x, k_cache, v_cache, length, policy, sin, cos,
+                    serve, impl):
+    """One-token local attention against the ring buffer."""
+    b = x.shape[0]
+    w = k_cache.shape[1]
+    fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
+          if serve else Q.qlinear_apply)
+    h = nnl.rmsnorm_apply(p["ln1"], x)
+    q = fn(p["attn"]["q"], h, policy).reshape(b, 1, cfg.n_heads, cfg.hd)
+    k = fn(p["attn"]["k"], h, policy).reshape(b, 1, cfg.n_kv, cfg.hd)
+    v = fn(p["attn"]["v"], h, policy).reshape(b, 1, cfg.n_kv, cfg.hd)
+    q = nnl.apply_rotary(q, sin, cos)
+    k = nnl.apply_rotary(k, sin, cos)
+    slot = jnp.mod(length, w)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, slot, 0, 0))
+    valid_all = length >= w - 1
+    mask_len = jnp.where(valid_all, w, length + 1)
+    o = attn.decode_attention(q, k_cache, v_cache, mask_len)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.hd)
+    x = x + fn(p["attn"]["o"], o, policy)
+    h = nnl.rmsnorm_apply(p["ln2"], x)
+    g, u = fn(p["mlp"]["gate"], h, policy), fn(p["mlp"]["up"], h, policy)
+    x = x + fn(p["mlp"]["down"], nnl.swiglu_combine(g, u), policy)
+    return x, k_cache, v_cache
+
+
+def _r_step(cfg, p, x, st, policy, serve, impl):
+    h = nnl.rmsnorm_apply(p["ln1"], x)
+    o, st = nnr.rglru_block_step(p["rnn"], h, st, policy, cfg.rnn,
+                                 serve=serve, impl=impl)
+    x = x + o
+    h = nnl.rmsnorm_apply(p["ln2"], x)
+    fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
+          if serve else Q.qlinear_apply)
+    g, u = fn(p["mlp"]["gate"], h, policy), fn(p["mlp"]["up"], h, policy)
+    x = x + fn(p["mlp"]["down"], nnl.swiglu_combine(g, u), policy)
+    return x, st
+
+
+def decode_step(cfg, params, cache, tokens, length, policy, *,
+                impl="xla", mode="serve"):
+    serve = mode == "serve"
+    b = tokens.shape[0]
+    x = _embed(params, tokens, serve)
+    pos = jnp.broadcast_to(jnp.reshape(length, (1, 1)), (b, 1))
+    sin, cos = nnl.rotary_cache(pos, cfg.hd)
+
+    def body(carry, xs):
+        sp, st1, st2, kc, vc = xs
+        y, st1 = _r_step(cfg, sp["r1"], carry, st1, policy, serve, impl)
+        y, st2 = _r_step(cfg, sp["r2"], y, st2, policy, serve, impl)
+        y, kc, vc = _attn_ring_step(cfg, sp["att"], y, kc, vc, length,
+                                    policy, sin, cos, serve, impl)
+        return y, (st1, st2, kc, vc)
+
+    x, (r1, r2, kc, vc) = jax.lax.scan(
+        body, x, (params["supers"], cache["r1"], cache["r2"],
+                  cache["k"], cache["v"]),
+        unroll=True if cfg.scan_unroll else 1)
+    rem_states = []
+    for i in range(cfg.n_rem):
+        st = jax.tree.map(lambda a: a[0], cache["rem"][i])
+        x, st = _r_step(cfg, params[f"rem_{i}"], x, st, policy, serve, impl)
+        rem_states.append(jax.tree.map(lambda a: a[None], st))
+    logits = _head(cfg, params, x, policy, serve, impl)
+    new_cache = {"r1": r1, "r2": r2, "k": kc, "v": vc, "rem": rem_states}
+    return logits[:, 0, :], new_cache
+
+
+def gemm_workload(cfg: RGConfig, tokens: int):
+    d, dr, hd = cfg.d_model, cfg.rnn.d_rnn, cfg.hd
+    n_r = cfg.n_layers - cfg.n_super  # recurrent layers
+    n_a = cfg.n_super
+    out = [
+        Gemm("rnn_in", tokens, d, dr, count=2 * n_r),
+        Gemm("rnn_gates", tokens, dr, dr, count=2 * n_r),
+        Gemm("rnn_out", tokens, dr, d, count=n_r),
+        Gemm("attn_q", tokens, d, cfg.n_heads * hd, count=n_a),
+        Gemm("attn_kv", tokens, d, cfg.n_kv * hd, count=2 * n_a),
+        Gemm("attn_o", tokens, cfg.n_heads * hd, d, count=n_a),
+        Gemm("mlp", tokens, d, cfg.d_ff, count=3 * cfg.n_layers),
+        Gemm("head", tokens, d, cfg.vocab, layer_class="boundary"),
+    ]
+    return out
+
+
+def active_params(cfg: RGConfig) -> int:
+    d, dr, hd = cfg.d_model, cfg.rnn.d_rnn, cfg.hd
+    n_r = cfg.n_layers - cfg.n_super
+    n_a = cfg.n_super
+    n = n_r * (2 * d * dr + 2 * dr * dr + dr * d)
+    n += n_a * (d * cfg.n_heads * hd + 2 * d * cfg.n_kv * hd
+                + cfg.n_heads * hd * d)
+    n += cfg.n_layers * 3 * d * cfg.d_ff
+    n += 2 * cfg.vocab * d
+    return n
+
+
+total_params = active_params
+
+
+def model_flops(cfg, *, tokens: int, step: str) -> float:
+    mult = 6.0 if step == "train" else 2.0
+    return mult * active_params(cfg) * tokens

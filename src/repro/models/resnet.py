@@ -1,0 +1,307 @@
+"""Quantized ResNet-18/50/152 — the paper's own benchmark CNNs.
+
+Convolutions execute as im2col + the mixed-precision matmul (the paper's
+PE array processes CONV layers as GEMMs; Section III: "we focus on the
+processing of CONV layers").  First conv and the FC classifier are
+boundary layers (8 bit); every inner conv runs at w_Q.
+
+Identity-shortcut handling follows the paper's "identity-shortcut-
+connection mixed-precision CNNs": shortcuts stay in the activation
+domain (8 bit), projection shortcuts are quantized convs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dse import Gemm
+from repro.core.precision import PrecisionPolicy
+from repro.nn import layers as nnl
+from repro.nn import quantized as Q
+from repro.nn.param import ParamSpec
+
+__all__ = ["ResNetConfig", "RESNET_STAGES", "specs", "forward",
+           "gemm_workload", "model_flops", "init_bn_state"]
+
+RESNET_STAGES = {
+    18: ("basic", (2, 2, 2, 2)),
+    50: ("bottleneck", (3, 4, 6, 3)),
+    152: ("bottleneck", (3, 8, 36, 3)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str
+    depth: int
+    n_classes: int = 1000
+    img_size: int = 224
+    width: int = 64
+    family: str = "cnn"
+
+    @property
+    def block(self) -> str:
+        return RESNET_STAGES[self.depth][0]
+
+    @property
+    def stages(self) -> Tuple[int, ...]:
+        return RESNET_STAGES[self.depth][1]
+
+
+# --- im2col conv ------------------------------------------------------------
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: str
+           ) -> jax.Array:
+    """x (B,H,W,C) -> patches (B,H',W', kh*kw*C) matching HWIO weight layout."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches yields features ordered (C, kh, kw);
+    # reorder to (kh, kw, C) so a reshape of HWIO weights lines up.
+    b, ho, wo, f = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(b, ho, wo, c, kh * kw)
+    return jnp.swapaxes(patches, -1, -2).reshape(b, ho, wo, kh * kw * c)
+
+
+def qconv_spec(cin: int, cout: int, k: int, *, layer_class="inner",
+               name_axes=("embed", "mlp")) -> Dict:
+    return Q.qlinear_spec(k * k * cin, cout, axes=name_axes,
+                          layer_class=layer_class)
+
+
+def qconv_apply(p, x, policy, *, k: int, stride: int = 1, padding="SAME",
+                layer_class="inner", quantize_act=True):
+    cols = im2col(x, k, k, stride, padding)
+    return Q.qlinear_apply({kk: v for kk, v in p.items() if kk != Q.QMARK},
+                           cols, policy, layer_class=layer_class,
+                           quantize_act=quantize_act)
+
+
+# --- batch norm -------------------------------------------------------------
+
+
+def bn_spec(c: int) -> Dict:
+    return {
+        "scale": ParamSpec(shape=(c,), axes=("act_embed",), init="ones"),
+        "bias": ParamSpec(shape=(c,), axes=("act_embed",), init="zeros"),
+    }
+
+
+def init_bn_state(specs_tree):
+    """Running-stats state tree parallel to every bn param subtree."""
+    out = {}
+    for k, v in specs_tree.items():
+        if isinstance(v, dict):
+            if "scale" in v and "bias" in v and len(v) == 2:
+                c = v["scale"].shape[0]
+                out[k] = {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+            else:
+                sub = init_bn_state(v)
+                if sub:
+                    out[k] = sub
+    return out
+
+
+def bn_apply(p, state, x, *, training: bool, momentum: float = 0.9):
+    xf = x.astype(jnp.float32)
+    if training:
+        mean = jnp.mean(xf, axis=(0, 1, 2))
+        var = jnp.var(xf, axis=(0, 1, 2))
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    y = (xf - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new_state
+
+
+# --- blocks -----------------------------------------------------------------
+
+
+def _basic_spec(cin, cout, stride):
+    s = {
+        "conv1": qconv_spec(cin, cout, 3), "bn1": bn_spec(cout),
+        "conv2": qconv_spec(cout, cout, 3), "bn2": bn_spec(cout),
+    }
+    if stride != 1 or cin != cout:
+        s["proj"] = qconv_spec(cin, cout, 1)
+        s["bn_proj"] = bn_spec(cout)
+    return s
+
+
+def _bottleneck_spec(cin, cmid, stride):
+    cout = 4 * cmid
+    s = {
+        "conv1": qconv_spec(cin, cmid, 1), "bn1": bn_spec(cmid),
+        "conv2": qconv_spec(cmid, cmid, 3), "bn2": bn_spec(cmid),
+        "conv3": qconv_spec(cmid, cout, 1), "bn3": bn_spec(cout),
+    }
+    if stride != 1 or cin != cout:
+        s["proj"] = qconv_spec(cin, cout, 1)
+        s["bn_proj"] = bn_spec(cout)
+    return s
+
+
+def _block_channels(cfg: ResNetConfig):
+    """Yield (stage, block, cin, cmid/cout, stride)."""
+    expansion = 4 if cfg.block == "bottleneck" else 1
+    cin = cfg.width
+    for si, n_blocks in enumerate(cfg.stages):
+        cmid = cfg.width * (2 ** si)
+        for bi in range(n_blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            yield si, bi, cin, cmid, stride
+            cin = cmid * expansion
+
+
+def specs(cfg: ResNetConfig, mode: str = "train",
+          policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
+    del mode  # resnet serves via the same QAT tree (packed offline)
+    tree: Dict = {
+        "stem": qconv_spec(3, cfg.width, 7, layer_class="boundary"),
+        "bn_stem": bn_spec(cfg.width),
+        "fc": Q.qlinear_spec(cfg.width * 8
+                             * (4 if cfg.block == "bottleneck" else 1),
+                             cfg.n_classes, axes=("embed", "vocab"),
+                             layer_class="boundary"),
+    }
+    mk = _bottleneck_spec if cfg.block == "bottleneck" else _basic_spec
+    for si, bi, cin, cmid, stride in _block_channels(cfg):
+        tree[f"s{si}b{bi}"] = mk(cin, cmid, stride)
+    return tree
+
+
+def _basic_fwd(p, st, x, policy, stride, training):
+    h = qconv_apply(p["conv1"], x, policy, k=3, stride=stride)
+    h, st1 = bn_apply(p["bn1"], st["bn1"], h, training=training)
+    h = jax.nn.relu(h)
+    h = qconv_apply(p["conv2"], h, policy, k=3)
+    h, st2 = bn_apply(p["bn2"], st["bn2"], h, training=training)
+    new_st = {"bn1": st1, "bn2": st2}
+    if "proj" in p:
+        x = qconv_apply(p["proj"], x, policy, k=1, stride=stride)
+        x, stp = bn_apply(p["bn_proj"], st["bn_proj"], x, training=training)
+        new_st["bn_proj"] = stp
+    return jax.nn.relu(x + h), new_st
+
+
+def _bottleneck_fwd(p, st, x, policy, stride, training):
+    h = qconv_apply(p["conv1"], x, policy, k=1)
+    h, st1 = bn_apply(p["bn1"], st["bn1"], h, training=training)
+    h = jax.nn.relu(h)
+    h = qconv_apply(p["conv2"], h, policy, k=3, stride=stride)
+    h, st2 = bn_apply(p["bn2"], st["bn2"], h, training=training)
+    h = jax.nn.relu(h)
+    h = qconv_apply(p["conv3"], h, policy, k=1)
+    h, st3 = bn_apply(p["bn3"], st["bn3"], h, training=training)
+    new_st = {"bn1": st1, "bn2": st2, "bn3": st3}
+    if "proj" in p:
+        x = qconv_apply(p["proj"], x, policy, k=1, stride=stride)
+        x, stp = bn_apply(p["bn_proj"], st["bn_proj"], x, training=training)
+        new_st["bn_proj"] = stp
+    return jax.nn.relu(x + h), new_st
+
+
+def apply_with_state(cfg: ResNetConfig, params, state, images, policy,
+                     *, training: bool = False):
+    """images (B,H,W,3) -> (logits (B,classes), new bn state)."""
+    x = qconv_apply(params["stem"], images, policy, k=7, stride=2,
+                    layer_class="boundary", quantize_act=False)
+    x, st_stem = bn_apply(params["bn_stem"], state["bn_stem"], x,
+                          training=training)
+    x = jax.nn.relu(x)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    new_state = {"bn_stem": st_stem}
+    fwd = _bottleneck_fwd if cfg.block == "bottleneck" else _basic_fwd
+    for si, bi, cin, cmid, stride in _block_channels(cfg):
+        key = f"s{si}b{bi}"
+        x, st = fwd(params[key], state[key], x, policy, stride, training)
+        new_state[key] = st
+    x = jnp.mean(x, axis=(1, 2))
+    logits = Q.qlinear_apply(
+        {k: v for k, v in params["fc"].items() if k != Q.QMARK}, x, policy,
+        layer_class="boundary")
+    return logits, new_state
+
+
+def forward(cfg: ResNetConfig, params, images, policy, *, mode="train",
+            impl="xla", state=None):
+    """ModelAPI-compatible facade: logits only.  BN running stats are
+    threaded by the CNN train driver via ``apply_with_state``; a fresh
+    state (zeros/ones) is used when none is supplied (smoke tests, PTQ
+    evaluation of freshly initialized nets)."""
+    del impl
+    if state is None:
+        state = init_bn_state(specs(cfg))
+    logits, _ = apply_with_state(cfg, params, state, images, policy,
+                                 training=(mode == "train"))
+    return logits
+
+
+def gemm_workload(cfg: ResNetConfig, batch: int = 1) -> List[Gemm]:
+    """CONV layers as GEMMs at the config's image size (DSE input)."""
+    hw = cfg.img_size // 2  # stem stride 2
+    gemms = [Gemm("stem", batch * hw * hw, 3 * 49, cfg.width,
+                  layer_class="boundary")]
+    hw = hw // 2  # maxpool
+    expansion = 4 if cfg.block == "bottleneck" else 1
+    for si, bi, cin, cmid, stride in _block_channels(cfg):
+        hw_out = hw // stride if stride > 1 else hw
+        m = batch * hw_out * hw_out
+        if cfg.block == "bottleneck":
+            gemms += [
+                Gemm(f"s{si}b{bi}c1", batch * hw * hw, cin, cmid),
+                Gemm(f"s{si}b{bi}c2", m, 9 * cmid, cmid),
+                Gemm(f"s{si}b{bi}c3", m, cmid, 4 * cmid),
+            ]
+            if stride != 1 or cin != 4 * cmid:
+                gemms.append(Gemm(f"s{si}b{bi}p", m, cin, 4 * cmid))
+        else:
+            gemms += [
+                Gemm(f"s{si}b{bi}c1", m, 9 * cin, cmid),
+                Gemm(f"s{si}b{bi}c2", m, 9 * cmid, cmid),
+            ]
+            if stride != 1 or cin != cmid:
+                gemms.append(Gemm(f"s{si}b{bi}p", m, cin, cmid))
+        hw = hw_out
+    gemms.append(Gemm("fc", batch, cfg.width * expansion * 8, cfg.n_classes,
+                      layer_class="boundary"))
+    return gemms
+
+
+def param_counts(cfg: ResNetConfig) -> Dict[str, int]:
+    inner = bound = 0
+    for g in gemm_workload(cfg, batch=1):
+        n = g.k * g.n
+        if g.layer_class == "boundary":
+            bound += n
+        else:
+            inner += n
+    return {"inner": inner, "boundary": bound}
+
+
+def model_flops(cfg: ResNetConfig, *, batch: int = None, tokens: int = None,
+                step: str = "train") -> float:
+    b = batch if batch is not None else (tokens or 1)
+    macs = sum(g.macs for g in gemm_workload(cfg, b))
+    return (6.0 if step == "train" else 2.0) * macs
+
+
+def total_params(cfg: ResNetConfig) -> int:
+    c = param_counts(cfg)
+    return c["inner"] + c["boundary"]
+
+
+def active_params(cfg: ResNetConfig) -> int:
+    return total_params(cfg)  # dense CNN: all params active

@@ -1,0 +1,476 @@
+"""Universal decoder-only LM: dense GQA, squared-ReLU, MLA, MoE, VLM.
+
+Covers granite-8b/34b, nemotron-4-340b, yi-34b, chameleon-34b (token ids
+already include the VQ image range — frontend stub per assignment),
+olmoe-1b-7b and deepseek-v2-lite-16b, through one config dataclass.
+
+Layers are scanned (scan-over-layers with jax.checkpoint remat) so
+lowering a 96-layer model is one rolled HLO loop; heterogeneous prefix
+layers (deepseek's dense-MLP first layer) are unrolled separately.
+
+Three entry points per mode:
+  forward      — full-sequence teacher-forced logits (train / eval)
+  prefill      — full-sequence forward that also returns the KV cache
+  decode_step  — one token against the cache (serve_step of the shapes)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dse import Gemm
+from repro.core.precision import PrecisionPolicy
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn import moe as nnmoe
+from repro.nn import quantized as Q
+from repro.nn.moe import MoEConfig
+from repro.nn.param import ParamSpec
+from repro.nn.partitioning import constrain
+
+__all__ = ["MLAConfig", "TransformerConfig", "specs", "forward", "prefill",
+           "decode_step", "cache_specs", "gemm_workload", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    act: str = "swiglu"            # 'swiglu' | 'sq_relu' | 'gelu'
+    norm: str = "rms"
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    rope_base: float = 10000.0
+    scan_layers: bool = True
+    scan_unroll: bool = False      # dry-run probes: straightline the stack
+    remat: bool = True
+    remat_policy: str = "full"     # 'full' | 'dots' (save matmul outputs)
+    attn_impl: str = "xla"         # 'xla' | 'flash' (Pallas, serve prefill)
+    dense_first_n: int = 0         # deepseek: first N layers use a dense MLP
+    dense_ff: int = 0
+    attn_chunk: int = 1024
+    family: str = "dense"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def norm_fns(self):
+        if self.norm == "rms":
+            return nnl.rmsnorm_spec, nnl.rmsnorm_apply
+        return nnl.layernorm_spec, nnl.layernorm_apply
+
+
+# --------------------------------------------------------------------------
+# Specs
+# --------------------------------------------------------------------------
+
+
+def _mlp_spec(cfg, d_ff, *, lead, lead_axes, serve, policy):
+    mk = functools.partial(
+        Q.qlinear_serve_spec if serve else Q.qlinear_spec,
+        lead=lead, lead_axes=lead_axes,
+    )
+    kw = {"policy": policy} if serve else {}
+    if cfg.act == "swiglu":
+        return {
+            "gate": mk(cfg.d_model, d_ff, axes=("embed", "mlp"), **kw),
+            "up": mk(cfg.d_model, d_ff, axes=("embed", "mlp"), **kw),
+            "down": mk(d_ff, cfg.d_model, axes=("mlp", "act_embed"), **kw),
+        }
+    return {  # sq_relu / gelu: two-matrix MLP
+        "up": mk(cfg.d_model, d_ff, axes=("embed", "mlp"), **kw),
+        "down": mk(d_ff, cfg.d_model, axes=("mlp", "act_embed"), **kw),
+    }
+
+
+def _attn_spec(cfg, *, lead, lead_axes, serve, policy):
+    if cfg.mla is not None:
+        return attn.mla_spec(
+            cfg.d_model, cfg.n_heads,
+            kv_lora=cfg.mla.kv_lora, qk_nope=cfg.mla.qk_nope,
+            qk_rope=cfg.mla.qk_rope, v_head=cfg.mla.v_head,
+            lead=lead, lead_axes=lead_axes, serve=serve, policy=policy)
+    return attn.gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
+                         lead=lead, lead_axes=lead_axes, serve=serve,
+                         policy=policy)
+
+
+def _layer_spec(cfg, *, lead, lead_axes, serve, policy, dense_mlp=False):
+    nspec, _ = cfg.norm_fns
+    stack = lambda s: {k: ParamSpec(shape=lead + v.shape, dtype=v.dtype,
+                                    axes=lead_axes + v.axes, init=v.init,
+                                    const=v.const)
+                       for k, v in s.items()}
+    spec = {
+        "ln1": stack(nspec(cfg.d_model)),
+        "ln2": stack(nspec(cfg.d_model)),
+        "attn": _attn_spec(cfg, lead=lead, lead_axes=lead_axes, serve=serve,
+                           policy=policy),
+    }
+    if cfg.moe is not None and not dense_mlp:
+        spec["moe"] = nnmoe.moe_spec(cfg.moe, lead=lead, lead_axes=lead_axes,
+                                     serve=serve, policy=policy)
+    else:
+        ff = cfg.dense_ff if dense_mlp and cfg.dense_ff else cfg.d_ff
+        spec["mlp"] = _mlp_spec(cfg, ff, lead=lead, lead_axes=lead_axes,
+                                serve=serve, policy=policy)
+    return spec
+
+
+def specs(cfg: TransformerConfig, mode: str = "train",
+          policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
+    """Full parameter-spec tree for one mode ('train' | 'serve')."""
+    serve = mode == "serve"
+    nspec, _ = cfg.norm_fns
+    n_scan = cfg.n_layers - cfg.dense_first_n
+    vp = nnl.pad_vocab(cfg.vocab)
+    tree: Dict[str, Any] = {
+        "embed": (nnl.embed_serve_spec(vp, cfg.d_model, policy)
+                  if serve else nnl.embed_spec(vp, cfg.d_model)),
+        "final_norm": nspec(cfg.d_model),
+        "head": (Q.qlinear_serve_spec(cfg.d_model, vp,
+                                      axes=("embed", "vocab"),
+                                      layer_class="boundary", policy=policy)
+                 if serve else
+                 Q.qlinear_spec(cfg.d_model, vp, axes=("embed", "vocab"),
+                                layer_class="boundary")),
+        "layers": _layer_spec(cfg, lead=(n_scan,) if cfg.scan_layers else (),
+                              lead_axes=("layers",) if cfg.scan_layers else (),
+                              serve=serve, policy=policy),
+    }
+    if not cfg.scan_layers and n_scan > 1:
+        raise ValueError("unscanned multi-layer stacks not supported; "
+                         "set scan_layers=True")
+    for i in range(cfg.dense_first_n):
+        tree[f"dense_layer_{i}"] = _layer_spec(
+            cfg, lead=(), lead_axes=(), serve=serve, policy=policy,
+            dense_mlp=True)
+    return tree
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _apply_mlp(cfg, p, x, policy, serve, impl, dense_mlp=False):
+    fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
+          if serve else Q.qlinear_apply)
+    if cfg.moe is not None and not dense_mlp:
+        return nnmoe.moe_apply(p["moe"], x, policy, cfg.moe, serve=serve, impl=impl)
+    mp = p["mlp"]
+    if cfg.act == "swiglu":
+        g, u = fn(mp["gate"], x, policy), fn(mp["up"], x, policy)
+        h = nnl.swiglu_combine(g, u)
+    else:
+        h = fn(mp["up"], x, policy)
+        h = nnl.squared_relu(h) if cfg.act == "sq_relu" else nnl.gelu(h)
+    return fn(mp["down"], h, policy)
+
+
+def _layer_fwd(cfg, p, x, policy, sin, cos, *, serve, impl, dense_mlp=False):
+    """Pre-norm block; returns (x, kv_cache_of_layer)."""
+    _, napply = cfg.norm_fns
+    h = napply(p["ln1"], x)
+    if cfg.mla is not None:
+        o, cache = attn.mla_prefill(
+            p["attn"], h, policy, n_heads=cfg.n_heads,
+            kv_lora=cfg.mla.kv_lora, qk_nope=cfg.mla.qk_nope,
+            qk_rope=cfg.mla.qk_rope, v_head=cfg.mla.v_head,
+            sin=sin, cos=cos, serve=serve, impl=impl, chunk=cfg.attn_chunk)
+    else:
+        o, cache = attn.gqa_prefill(
+            p["attn"], h, policy, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.hd, sin=sin, cos=cos, serve=serve, impl=impl,
+            chunk=cfg.attn_chunk, attn_impl=cfg.attn_impl)
+    x = x + o
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    h = napply(p["ln2"], x)
+    x = x + _apply_mlp(cfg, p, h, policy, serve, impl, dense_mlp)
+    return constrain(x, ("batch", "seq", "act_embed")), cache
+
+
+def _embed(cfg, params, tokens, serve):
+    if serve:
+        return nnl.embed_serve_apply(params["embed"], tokens)
+    return nnl.embed_apply(params["embed"], tokens)
+
+
+def _head(cfg, params, x, policy, serve, impl):
+    _, napply = cfg.norm_fns
+    x = napply(params["final_norm"], x)
+    if serve:
+        logits = Q.qlinear_serve_apply(params["head"], x, policy,
+                                       layer_class="boundary", impl=impl)
+    else:
+        logits = Q.qlinear_apply(params["head"], x, policy,
+                                 layer_class="boundary")
+    return logits[..., :cfg.vocab]  # drop TP vocab padding
+
+
+def _body_constrain(cfg, lp, serve, policy):
+    """Re-pin the per-layer param slice to its FSDP sharding inside the
+    scan body.  Without this, GSPMD hoists the weight all-gather out of
+    the layer loop and materializes EVERY layer's gathered f32 weights at
+    once (+8.5 GiB/device for granite-34b — §Perf, FSDP-scan fix); the
+    constraint keeps the stacked master sharded so each iteration gathers
+    only its own slice, which remat then frees."""
+    spec = _layer_spec(cfg, lead=(), lead_axes=(), serve=serve, policy=policy)
+
+    def rec(sp, leaf):
+        if isinstance(sp, ParamSpec):
+            if hasattr(leaf, "ndim") and leaf.ndim == len(sp.axes):
+                return constrain(leaf, sp.axes)
+            return leaf
+        if isinstance(sp, dict) and isinstance(leaf, dict):
+            # iterate the PARAM keys: spec may carry extra marker entries
+            return {k: rec(sp.get(k), v) for k, v in leaf.items()}
+        return leaf
+
+    return rec(spec, lp)
+
+
+def _run_layers(cfg, params, x, policy, sin, cos, *, serve, impl,
+                collect_cache: bool):
+    """Dense-prefix layers unrolled, the remainder scanned."""
+    prefix_caches = []
+    for i in range(cfg.dense_first_n):
+        x, cache_i = _layer_fwd(cfg, params[f"dense_layer_{i}"], x, policy,
+                                sin, cos, serve=serve, impl=impl, dense_mlp=True)
+        if collect_cache:
+            prefix_caches.append(cache_i)
+
+    def body(carry, lp):
+        lp = _body_constrain(cfg, lp, serve, policy)
+        y, cache = _layer_fwd(cfg, lp, carry, policy, sin, cos,
+                              serve=serve, impl=impl)
+        return y, cache if collect_cache else None
+
+    pol = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+           if cfg.remat_policy == "dots" else None)
+    fn = jax.checkpoint(body, policy=pol) if cfg.remat else body
+    x, caches = jax.lax.scan(fn, x, params["layers"],
+                             unroll=True if cfg.scan_unroll else 1)
+    if collect_cache and cfg.dense_first_n:
+        pc = jax.tree.map(lambda *xs: jnp.stack(xs), *prefix_caches) \
+            if cfg.dense_first_n > 1 else jax.tree.map(lambda v: v[None], prefix_caches[0])
+        caches = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                              pc, caches)
+    return x, caches
+
+
+def forward(cfg: TransformerConfig, params, tokens: jax.Array,
+            policy: PrecisionPolicy, *, mode: str = "train",
+            impl: str = "xla") -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V)."""
+    serve = mode == "serve"
+    b, s = tokens.shape
+    x = _embed(cfg, params, tokens, serve)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    rope_dim = cfg.mla.qk_rope if cfg.mla is not None else cfg.hd
+    sin, cos = nnl.rotary_cache(pos, rope_dim, cfg.rope_base)
+    x, _ = _run_layers(cfg, params, x, policy, sin, cos, serve=serve,
+                       impl=impl, collect_cache=False)
+    return _head(cfg, params, x, policy, serve, impl)
+
+
+def prefill(cfg: TransformerConfig, params, tokens: jax.Array,
+            policy: PrecisionPolicy, *, impl: str = "xla",
+            mode: str = "serve"):
+    """tokens (B,S) -> (last-token logits (B,V), cache pytree, length)."""
+    serve = mode == "serve"
+    b, s = tokens.shape
+    x = _embed(cfg, params, tokens, serve)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    rope_dim = cfg.mla.qk_rope if cfg.mla is not None else cfg.hd
+    sin, cos = nnl.rotary_cache(pos, rope_dim, cfg.rope_base)
+    x, caches = _run_layers(cfg, params, x, policy, sin, cos, serve=serve,
+                            impl=impl, collect_cache=True)
+    logits = _head(cfg, params, x[:, -1:, :], policy, serve, impl)
+    return logits[:, 0, :], caches
+
+
+def cache_specs(cfg: TransformerConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs of the decode cache (stacked over layers)."""
+    l = cfg.n_layers
+    if cfg.mla is not None:
+        return (
+            jax.ShapeDtypeStruct((l, batch, max_len, cfg.mla.kv_lora), jnp.bfloat16),
+            jax.ShapeDtypeStruct((l, batch, max_len, cfg.mla.qk_rope), jnp.bfloat16),
+        )
+    return (
+        jax.ShapeDtypeStruct((l, batch, max_len, cfg.n_kv, cfg.hd), jnp.bfloat16),
+        jax.ShapeDtypeStruct((l, batch, max_len, cfg.n_kv, cfg.hd), jnp.bfloat16),
+    )
+
+
+def cache_axes(cfg: TransformerConfig):
+    """Logical axes of the cache (for sharding)."""
+    if cfg.mla is not None:
+        return (("layers", "batch", "kv_seq", None),
+                ("layers", "batch", "kv_seq", None))
+    return (("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+            ("layers", "batch", "kv_seq", "kv_heads", "head_dim"))
+
+
+def decode_step(cfg: TransformerConfig, params, cache, tokens: jax.Array,
+                length: jax.Array, policy: PrecisionPolicy,
+                *, impl: str = "xla", mode: str = "serve"):
+    """One new token. tokens (B, 1); cache from cache_specs.
+
+    Returns (logits (B, V), new cache).
+    """
+    serve = mode == "serve"
+    b = tokens.shape[0]
+    x = _embed(cfg, params, tokens, serve)
+    pos = jnp.broadcast_to(length[None, None] if length.ndim == 0 else length,
+                           (b, 1))
+    rope_dim = cfg.mla.qk_rope if cfg.mla is not None else cfg.hd
+    sin, cos = nnl.rotary_cache(pos, rope_dim, cfg.rope_base)
+
+    def one_layer(x, lp, c1, c2, dense_mlp=False):
+        _, napply = cfg.norm_fns
+        h = napply(lp["ln1"], x)
+        if cfg.mla is not None:
+            o, (c1, c2) = attn.mla_decode(
+                lp["attn"], h, (c1, c2), length, policy,
+                n_heads=cfg.n_heads, kv_lora=cfg.mla.kv_lora,
+                qk_nope=cfg.mla.qk_nope, qk_rope=cfg.mla.qk_rope,
+                v_head=cfg.mla.v_head, sin=sin, cos=cos, serve=serve, impl=impl)
+        else:
+            o, (c1, c2) = attn.gqa_decode(
+                lp["attn"], h, (c1, c2), length, policy,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+                sin=sin, cos=cos, serve=serve, impl=impl)
+        x = x + o
+        h = napply(lp["ln2"], x)
+        x = x + _apply_mlp(cfg, lp, h, policy, serve, impl, dense_mlp)
+        return x, c1, c2
+
+    c1_all, c2_all = cache
+    nd = cfg.dense_first_n
+    x_new_caches = []
+    for i in range(nd):
+        x, c1_i, c2_i = one_layer(x, params[f"dense_layer_{i}"],
+                                  c1_all[i], c2_all[i], dense_mlp=True)
+        x_new_caches.append((c1_i, c2_i))
+
+    def body(carry, xs):
+        lp, c1, c2 = xs
+        y, c1, c2 = one_layer(carry, lp, c1, c2)
+        return y, (c1, c2)
+
+    x, (c1_s, c2_s) = jax.lax.scan(body, x, (params["layers"],
+                                             c1_all[nd:], c2_all[nd:]),
+                                   unroll=True if cfg.scan_unroll else 1)
+    if nd:
+        c1_pre = jnp.stack([c[0] for c in x_new_caches])
+        c2_pre = jnp.stack([c[1] for c in x_new_caches])
+        c1_s = jnp.concatenate([c1_pre, c1_s], axis=0)
+        c2_s = jnp.concatenate([c2_pre, c2_s], axis=0)
+    logits = _head(cfg, params, x, policy, serve, impl)
+    return logits[:, 0, :], (c1_s, c2_s)
+
+
+# --------------------------------------------------------------------------
+# Workload descriptions (DSE, roofline)
+# --------------------------------------------------------------------------
+
+
+def _per_layer_gemms(cfg: TransformerConfig, tokens: int):
+    """GEMMs of one decoder layer at `tokens` activations rows."""
+    d, hd = cfg.d_model, cfg.hd
+    out = []
+    if cfg.mla is not None:
+        m = cfg.mla
+        out += [
+            Gemm("q", tokens, d, cfg.n_heads * (m.qk_nope + m.qk_rope)),
+            Gemm("dkv", tokens, d, m.kv_lora + m.qk_rope),
+            Gemm("uk", tokens, m.kv_lora, cfg.n_heads * m.qk_nope),
+            Gemm("uv", tokens, m.kv_lora, cfg.n_heads * m.v_head),
+            Gemm("o", tokens, cfg.n_heads * m.v_head, d),
+        ]
+    else:
+        out += [
+            Gemm("q", tokens, d, cfg.n_heads * hd),
+            Gemm("k", tokens, d, cfg.n_kv * hd),
+            Gemm("v", tokens, d, cfg.n_kv * hd),
+            Gemm("o", tokens, cfg.n_heads * hd, d),
+        ]
+    if cfg.moe is not None:
+        mc = cfg.moe
+        act_tokens = tokens * mc.topk  # tokens routed through experts
+        n_mats = 3 if cfg.act == "swiglu" else 2
+        out += [Gemm("expert", act_tokens, d, mc.d_ff, count=n_mats)]
+        if mc.n_shared:
+            out += [Gemm("shared", tokens, d, mc.shared_hidden, count=n_mats)]
+    else:
+        n_mats = 3 if cfg.act == "swiglu" else 2
+        out += [Gemm("mlp", tokens, d, cfg.d_ff, count=n_mats)]
+    return out
+
+
+def gemm_workload(cfg: TransformerConfig, tokens: int):
+    """All GEMMs of one full forward over `tokens` tokens (DSE input)."""
+    gemms = []
+    for g in _per_layer_gemms(cfg, tokens):
+        gemms.append(dataclasses.replace(g, count=g.count * cfg.n_layers))
+    gemms.append(Gemm("head", tokens, cfg.d_model, cfg.vocab,
+                      layer_class="boundary"))
+    return gemms
+
+
+def active_params(cfg: TransformerConfig) -> int:
+    """N_active: params touched per token (MoE counts topk+shared only)."""
+    n = 0
+    for g in _per_layer_gemms(cfg, 1):
+        per = g.k * g.n * g.count
+        if g.name == "expert":
+            per = cfg.moe.topk * cfg.d_model * cfg.moe.d_ff * \
+                (3 if cfg.act == "swiglu" else 2)
+        n += per
+    n *= cfg.n_layers
+    n += 2 * cfg.vocab * cfg.d_model  # embed + head
+    return n
+
+
+def total_params(cfg: TransformerConfig) -> int:
+    n = 0
+    for g in _per_layer_gemms(cfg, 1):
+        per = g.k * g.n * g.count
+        if g.name == "expert":
+            per = cfg.moe.n_experts * cfg.d_model * cfg.moe.d_ff * \
+                (3 if cfg.act == "swiglu" else 2)
+        n += per
+    n *= cfg.n_layers
+    n += 2 * cfg.vocab * cfg.d_model
+    return n
+
+
+def model_flops(cfg: TransformerConfig, *, tokens: int, step: str) -> float:
+    """MODEL_FLOPS per step: 6·N_active·tokens (train), 2·N_active·tokens
+    (prefill/decode) — the §Roofline 'useful flops' numerator."""
+    n_active = active_params(cfg)
+    mult = 6.0 if step == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,299 @@
+"""Whisper-style encoder-decoder (audio backbone only).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs``
+supplies precomputed frame embeddings (B, n_audio, d_model).  The
+transformer backbone (bidirectional encoder, causal decoder with
+cross-attention) is fully implemented; positions are sinusoidal.
+
+Decode shapes run the decoder step: growing self-attention cache +
+static cross-attention K/V computed once from the encoder output.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dse import Gemm
+from repro.core.precision import PrecisionPolicy
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn import quantized as Q
+from repro.nn.param import ParamSpec
+from repro.nn.partitioning import constrain
+
+__all__ = ["WhisperConfig", "specs", "forward", "prefill", "decode_step",
+           "cache_specs", "gemm_workload", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WhisperConfig:
+    name: str
+    n_layers: int            # per side (encoder and decoder)
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    n_audio: int = 1500
+    scan_layers: bool = True
+    scan_unroll: bool = False
+    remat: bool = True
+    attn_chunk: int = 512
+    family: str = "audio"
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def _stack(spec, lead, lead_axes):
+    return {k: (ParamSpec(shape=lead + v.shape, dtype=v.dtype,
+                          axes=lead_axes + v.axes, init=v.init, const=v.const)
+                if isinstance(v, ParamSpec) else _stack(v, lead, lead_axes))
+            for k, v in spec.items()}
+
+
+def _mlp_spec(cfg, *, lead, lead_axes, serve, policy):
+    mk = functools.partial(Q.qlinear_serve_spec if serve else Q.qlinear_spec,
+                           lead=lead, lead_axes=lead_axes)
+    kw = {"policy": policy} if serve else {}
+    return {
+        "up": mk(cfg.d_model, cfg.d_ff, axes=("embed", "mlp"), **kw),
+        "down": mk(cfg.d_ff, cfg.d_model, axes=("mlp", "act_embed"), **kw),
+    }
+
+
+def _enc_layer(cfg, lead, lead_axes, serve, policy):
+    return {
+        "ln1": _stack(nnl.layernorm_spec(cfg.d_model), lead, lead_axes),
+        "attn": attn.gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.hd,
+                              lead=lead, lead_axes=lead_axes, serve=serve,
+                              policy=policy),
+        "ln2": _stack(nnl.layernorm_spec(cfg.d_model), lead, lead_axes),
+        "mlp": _mlp_spec(cfg, lead=lead, lead_axes=lead_axes, serve=serve,
+                         policy=policy),
+    }
+
+
+def _dec_layer(cfg, lead, lead_axes, serve, policy):
+    return {
+        **_enc_layer(cfg, lead, lead_axes, serve, policy),
+        "ln_x": _stack(nnl.layernorm_spec(cfg.d_model), lead, lead_axes),
+        "xattn": attn.gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.hd,
+                               lead=lead, lead_axes=lead_axes, serve=serve,
+                               policy=policy),
+    }
+
+
+def specs(cfg: WhisperConfig, mode: str = "train",
+          policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
+    serve = mode == "serve"
+    lead, lx = ((cfg.n_layers,), ("layers",)) if cfg.scan_layers else ((), ())
+    return {
+        "embed": (nnl.embed_serve_spec(nnl.pad_vocab(cfg.vocab), cfg.d_model, policy)
+                  if serve else nnl.embed_spec(nnl.pad_vocab(cfg.vocab), cfg.d_model)),
+        "enc_layers": _enc_layer(cfg, lead, lx, serve, policy),
+        "enc_norm": nnl.layernorm_spec(cfg.d_model),
+        "dec_layers": _dec_layer(cfg, lead, lx, serve, policy),
+        "dec_norm": nnl.layernorm_spec(cfg.d_model),
+        "head": (Q.qlinear_serve_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab),
+                                      axes=("embed", "vocab"),
+                                      layer_class="boundary", policy=policy)
+                 if serve else
+                 Q.qlinear_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab), axes=("embed", "vocab"),
+                                layer_class="boundary")),
+    }
+
+
+def _sinusoid(positions: jax.Array, dim: int) -> jax.Array:
+    sin, cos = nnl.rotary_cache(positions, dim)
+    return jnp.concatenate([sin, cos], axis=-1)
+
+
+def _qapply(serve, impl):
+    return (functools.partial(Q.qlinear_serve_apply, impl=impl)
+            if serve else Q.qlinear_apply)
+
+
+def encode(cfg, params, frames, policy, *, serve, impl):
+    """frames (B, T, D) stub embeddings -> encoder output (B, T, D)."""
+    b, t, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    x = frames.astype(jnp.bfloat16) + _sinusoid(pos, cfg.d_model).astype(jnp.bfloat16)
+    sin, cos = nnl.rotary_cache(pos, cfg.hd)
+
+    def body(carry, lp):
+        h = nnl.layernorm_apply(lp["ln1"], carry)
+        o, _ = attn.gqa_prefill(lp["attn"], h, policy, n_heads=cfg.n_heads,
+                                n_kv=cfg.n_heads, head_dim=cfg.hd,
+                                sin=sin, cos=cos, causal=False, rope=False,
+                                serve=serve, impl=impl, chunk=cfg.attn_chunk)
+        y = carry + o
+        h = nnl.layernorm_apply(lp["ln2"], y)
+        fn = _qapply(serve, impl)
+        y = y + fn(lp["mlp"]["down"], nnl.gelu(fn(lp["mlp"]["up"], h, policy)),
+                   policy)
+        return constrain(y, ("batch", "frames", "act_embed")), None
+
+    fn_ = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn_, x, params["enc_layers"],
+                        unroll=True if cfg.scan_unroll else 1)
+    return nnl.layernorm_apply(params["enc_norm"], x)
+
+
+def _dec_layer_fwd(cfg, lp, x, enc_out, policy, sin, cos, serve, impl):
+    fn = _qapply(serve, impl)
+    h = nnl.layernorm_apply(lp["ln1"], x)
+    o, kv = attn.gqa_prefill(lp["attn"], h, policy, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_heads, head_dim=cfg.hd,
+                             sin=sin, cos=cos, causal=True, rope=False,
+                             serve=serve, impl=impl, chunk=cfg.attn_chunk)
+    x = x + o
+    # cross attention: KV from encoder output
+    b, t, _ = enc_out.shape
+    h = nnl.layernorm_apply(lp["ln_x"], x)
+    q = fn(lp["xattn"]["q"], h, policy).reshape(*h.shape[:2], cfg.n_heads, cfg.hd)
+    k = fn(lp["xattn"]["k"], enc_out, policy).reshape(b, t, cfg.n_heads, cfg.hd)
+    v = fn(lp["xattn"]["v"], enc_out, policy).reshape(b, t, cfg.n_heads, cfg.hd)
+    o = attn.chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    x = x + fn(lp["xattn"]["o"], o.reshape(*h.shape[:2], -1), policy)
+    h = nnl.layernorm_apply(lp["ln2"], x)
+    x = x + fn(lp["mlp"]["down"], nnl.gelu(fn(lp["mlp"]["up"], h, policy)),
+               policy)
+    return constrain(x, ("batch", "seq", "act_embed")), (kv, (k, v))
+
+
+def forward(cfg, params, tokens, policy, *, frames=None, mode="train",
+            impl="xla"):
+    """Teacher-forced decoder logits given audio frames."""
+    serve = mode == "serve"
+    b, s = tokens.shape
+    if frames is None:
+        frames = jnp.zeros((b, cfg.n_audio, cfg.d_model), jnp.bfloat16)
+    enc_out = encode(cfg, params, frames, policy, serve=serve, impl=impl)
+    x = (nnl.embed_serve_apply if serve else nnl.embed_apply)(
+        params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+    sin, cos = nnl.rotary_cache(pos, cfg.hd)
+
+    def body(carry, lp):
+        y, _ = _dec_layer_fwd(cfg, lp, carry, enc_out, policy, sin, cos,
+                              serve, impl)
+        return y, None
+
+    fn_ = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn_, x, params["dec_layers"],
+                        unroll=True if cfg.scan_unroll else 1)
+    x = nnl.layernorm_apply(params["dec_norm"], x)
+    fn = _qapply(serve, impl)
+    logits = fn(params["head"], x, policy, layer_class="boundary")
+    return logits[..., :cfg.vocab]  # drop TP vocab padding
+
+
+def prefill(cfg, params, tokens, policy, *, frames=None, impl="xla",
+            mode="serve"):
+    serve = mode == "serve"
+    b, s = tokens.shape
+    if frames is None:
+        frames = jnp.zeros((b, cfg.n_audio, cfg.d_model), jnp.bfloat16)
+    enc_out = encode(cfg, params, frames, policy, serve=serve, impl=impl)
+    x = (nnl.embed_serve_apply if serve else nnl.embed_apply)(
+        params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+    sin, cos = nnl.rotary_cache(pos, cfg.hd)
+
+    def body(carry, lp):
+        y, caches = _dec_layer_fwd(cfg, lp, carry, enc_out, policy, sin, cos,
+                                   serve, impl)
+        return y, caches
+
+    x, (self_kv, cross_kv) = jax.lax.scan(body, x, params["dec_layers"],
+                                          unroll=True if cfg.scan_unroll else 1)
+    x = nnl.layernorm_apply(params["dec_norm"], x)
+    fn = _qapply(serve, impl)
+    logits = fn(params["head"], x[:, -1:, :], policy, layer_class="boundary")
+    return logits[:, 0, :cfg.vocab], {"self": self_kv, "cross": cross_kv}
+
+
+def cache_specs(cfg: WhisperConfig, batch: int, max_len: int):
+    l, h, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+    kv = lambda s: jax.ShapeDtypeStruct((l, batch, s, h, hd), jnp.bfloat16)
+    return {"self": (kv(max_len), kv(max_len)),
+            "cross": (kv(cfg.n_audio), kv(cfg.n_audio))}
+
+
+def cache_axes(cfg: WhisperConfig):
+    ax = ("layers", "batch", "kv_seq", "heads", "head_dim")
+    return {"self": (ax, ax), "cross": (ax, ax)}
+
+
+def decode_step(cfg, params, cache, tokens, length, policy, *,
+                impl="xla", mode="serve"):
+    serve = mode == "serve"
+    b = tokens.shape[0]
+    x = (nnl.embed_serve_apply if serve else nnl.embed_apply)(
+        params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.reshape(length, (1, 1)), (b, 1))
+    x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+    sin, cos = nnl.rotary_cache(pos, cfg.hd)
+    fn = _qapply(serve, impl)
+
+    def body(carry, xs):
+        lp, sk, sv, ck, cv = xs
+        h = nnl.layernorm_apply(lp["ln1"], carry)
+        o, (sk, sv) = attn.gqa_decode(lp["attn"], h, (sk, sv), length, policy,
+                                      n_heads=cfg.n_heads, n_kv=cfg.n_heads,
+                                      head_dim=cfg.hd, sin=sin, cos=cos,
+                                      rope=False, serve=serve, impl=impl)
+        y = carry + o
+        h = nnl.layernorm_apply(lp["ln_x"], y)
+        q = fn(lp["xattn"]["q"], h, policy).reshape(b, 1, cfg.n_heads, cfg.hd)
+        o = attn.decode_attention(q, ck, cv, jnp.asarray(cfg.n_audio))
+        y = y + fn(lp["xattn"]["o"], o.reshape(b, 1, -1), policy)
+        h = nnl.layernorm_apply(lp["ln2"], y)
+        y = y + fn(lp["mlp"]["down"], nnl.gelu(fn(lp["mlp"]["up"], h, policy)),
+                   policy)
+        return y, (sk, sv)
+
+    sk, sv = cache["self"]
+    ck, cv = cache["cross"]
+    x, (sk, sv) = jax.lax.scan(body, x, (params["dec_layers"], sk, sv, ck, cv),
+                               unroll=True if cfg.scan_unroll else 1)
+    x = nnl.layernorm_apply(params["dec_norm"], x)
+    logits = fn(params["head"], x, policy, layer_class="boundary")
+    return logits[:, 0, :cfg.vocab], {"self": (sk, sv), "cross": (ck, cv)}
+
+
+def gemm_workload(cfg: WhisperConfig, tokens: int, frames: int = None):
+    frames = frames or cfg.n_audio
+    d, hd, h = cfg.d_model, cfg.hd, cfg.n_heads
+    l = cfg.n_layers
+    return [
+        Gemm("enc_qkvo", frames, d, h * hd, count=4 * l),
+        Gemm("enc_mlp", frames, d, cfg.d_ff, count=2 * l),
+        Gemm("dec_self_qkvo", tokens, d, h * hd, count=4 * l),
+        Gemm("dec_cross_q", tokens, d, h * hd, count=2 * l),
+        Gemm("dec_cross_kv", frames, d, h * hd, count=2 * l),
+        Gemm("dec_mlp", tokens, d, cfg.d_ff, count=2 * l),
+        Gemm("head", tokens, d, cfg.vocab, layer_class="boundary"),
+    ]
+
+
+def active_params(cfg: WhisperConfig) -> int:
+    d, hd, h, l = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_layers
+    enc = l * (4 * d * h * hd + 2 * d * cfg.d_ff)
+    dec = l * (8 * d * h * hd + 2 * d * cfg.d_ff)
+    return enc + dec + 2 * cfg.vocab * d
+
+
+total_params = active_params
+
+
+def model_flops(cfg, *, tokens: int, step: str) -> float:
+    mult = 6.0 if step == "train" else 2.0
+    return mult * active_params(cfg) * tokens

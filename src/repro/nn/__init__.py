@@ -1,0 +1,20 @@
+"""Substrate: a minimal pure-functional module system for JAX.
+
+Params are plain nested dicts of arrays; every model also exposes a
+parallel tree of *logical axis names* (MaxText-style) that
+``nn.partitioning`` maps onto mesh axes, so the same model definition
+serves the single-chip smoke test, the 16x16 pod and the 2x16x16
+multi-pod dry-run unchanged.
+"""
+from repro.nn import param, partitioning, layers, quantized, attention, moe, ssm, rglru
+
+__all__ = [
+    "param",
+    "partitioning",
+    "layers",
+    "quantized",
+    "attention",
+    "moe",
+    "ssm",
+    "rglru",
+]

@@ -1,0 +1,377 @@
+"""Attention: GQA/MQA with chunked (flash-style) softmax, local windows,
+MLA (DeepSeek multi-head latent attention), and single-token decode.
+
+prefill_32k would materialize a 32768^2 score matrix per head with naive
+attention; `chunked_attention` streams KV in blocks with an online
+softmax (lax.scan carry = (acc, row_max, row_sum)) so the live working
+set is O(S * chunk).  The same code path serves full-causal and
+local-window (recurrentgemma) masks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flags
+from repro.core.precision import PrecisionPolicy
+from repro.nn import partitioning as part
+from repro.nn import layers, quantized
+from repro.nn.param import ParamSpec
+
+__all__ = [
+    "gqa_spec", "gqa_serve_spec", "gqa_prefill", "gqa_decode",
+    "mla_spec", "mla_serve_spec", "mla_prefill", "mla_decode",
+    "chunked_attention", "decode_attention",
+]
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KVH, D) -> (B, S, KVH*groups, D)."""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)).reshape(
+        b, s, h * groups, d
+    )
+
+
+def chunked_attention(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Sk, H, D)   (already GQA-expanded)
+    v: jax.Array,          # (B, Sk, H, D)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks (flash-style, pure jnp).
+
+    q_offset: absolute position of q[0] (for cross-chunk causality).
+    window:   local attention span (None = full causal).
+    """
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]  # value dim may differ from qk dim (MLA)
+    sk = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 3, 2, 4)  # (C,B,H,c,D)
+    vc = v.reshape(b, n_chunks, chunk, h, dv).transpose(1, 0, 3, 2, 4)
+
+    # bf16 MXU operands, f32 accumulation (preferred_element_type) — no
+    # full-tensor f32 convert of K/V, and masks are ADDITIVE (one small
+    # broadcast operand) instead of select/where over the score tensor.
+    qT = (q * scale).astype(jnp.bfloat16).transpose(0, 2, 1, 3)  # (B,H,Sq,D)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, xs):
+        acc, m, l = carry                      # (B,H,Sq,D), (B,H,Sq), (B,H,Sq)
+        kb, vb, c_idx = xs                     # (B,H,c,D) x2, scalar
+        s = jnp.einsum("bhqd,bhcd->bhqc", qT, kb.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        kv_pos = c_idx * chunk + jnp.arange(chunk)
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else (kv_pos[None, :] < sk)
+        mask = mask & (kv_pos[None, :] < sk)
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = s + jnp.where(mask, 0.0, NEG_INF)[None, None]  # (Sq,c) operand
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqc,bhcd->bhqd", p.astype(jnp.bfloat16),
+            vb.astype(jnp.bfloat16), preferred_element_type=jnp.float32,
+        )
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (kc, vc, jnp.arange(n_chunks)),
+        unroll=flags.scan_unroll_arg(),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Sq,H,D)
+
+
+def decode_attention(
+    q: jax.Array,          # (B, 1, H, D)
+    k_cache: jax.Array,    # (B, Smax, KVH, D)
+    v_cache: jax.Array,
+    length: jax.Array,     # scalar int32: valid cache length incl. new token
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against the full cache (masked by length)."""
+    b, smax, kvh, d = k_cache.shape
+    h = q.shape[2]
+    groups = h // kvh
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    qg = (q[:, 0] * scale).astype(jnp.bfloat16).reshape(b, kvh, groups, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(smax)
+    mask = pos < length
+    if window is not None:
+        mask = mask & (pos > length - 1 - window)
+    s = s + jnp.where(mask, 0.0, NEG_INF)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(jnp.bfloat16),
+                   v_cache.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (granite / nemotron / yi / chameleon / olmoe / whisper / rg).
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(
+    d_model: int, n_heads: int, n_kv: int, head_dim: int,
+    *, lead=(), lead_axes=(), serve: bool = False,
+    policy: PrecisionPolicy = PrecisionPolicy(),
+) -> Dict:
+    mk = functools.partial(
+        quantized.qlinear_serve_spec if serve else quantized.qlinear_spec,
+        lead=lead, lead_axes=lead_axes,
+    )
+    kw = {"policy": policy} if serve else {}
+    return {
+        "q": mk(d_model, n_heads * head_dim, axes=("embed", "heads"), **kw),
+        "k": mk(d_model, n_kv * head_dim, axes=("embed", "kv_heads"), **kw),
+        "v": mk(d_model, n_kv * head_dim, axes=("embed", "kv_heads"), **kw),
+        "o": mk(n_heads * head_dim, d_model, axes=("heads", "act_embed"), **kw),
+    }
+
+
+gqa_serve_spec = functools.partial(gqa_spec, serve=True)
+
+
+def _proj(p, x, policy, serve, **kw):
+    fn = quantized.qlinear_serve_apply if serve else quantized.qlinear_apply
+    return fn(p, x, policy, **kw)
+
+
+def _flash_ok(mesh, rules, b: int, s: int, n_heads: int) -> bool:
+    """Can the Pallas flash path shard-map under the current mesh/rules?"""
+    if mesh is None:
+        return True  # single-device: call the kernel directly
+    if rules.get("seq") is not None:
+        return False  # sequence-sharded activations: keep the XLA path
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    h_ax = rules.get("heads")
+    h_div = sizes.get(h_ax, 1) if isinstance(h_ax, str) else 1
+    b_entry = rules.get("batch")
+    b_axes = ((b_entry,) if isinstance(b_entry, str) else tuple(b_entry or ()))
+    b_div = 1
+    for ax in b_axes:
+        b_div *= sizes.get(ax, 1)
+    return n_heads % max(h_div, 1) == 0 and b % max(b_div, 1) == 0 \
+        and (s // max(1, 1)) % 1 == 0
+
+
+def _flash_sharded(q, k, v, *, n_heads, n_kv, causal, window, chunk):
+    """shard_map'd Pallas flash attention: batch over ('pod','data'),
+    q heads over 'model', KV heads replicated (kv_heads rule is None).
+    Inside the shard the GQA head mapping is resolved with the global
+    head offset from axis_index, so the kernel body is plain MHA."""
+    from jax.experimental.shard_map import shard_map
+    from repro.kernels.flashattn import ops as flash_ops
+
+    mesh = getattr(part._local, "mesh", None)
+    rules = part.current_rules()
+    if mesh is None:
+        group = n_heads // n_kv
+        return flash_ops.flash_attention(q, k, v, causal=causal,
+                                         window=window, block_k=chunk)
+    qspec = part.logical_to_spec(("batch", None, "heads", None), rules, mesh)
+    kvspec = part.logical_to_spec(("batch", None, "kv_heads", None), rules,
+                                  mesh)
+    ospec = qspec
+    h_ax = rules.get("heads") if isinstance(rules.get("heads"), str) else None
+    group = n_heads // n_kv
+
+    def body(qs, ks, vs):
+        h_l = qs.shape[2]
+        off = jax.lax.axis_index(h_ax) * h_l if h_ax is not None else 0
+        head_map = (off + jnp.arange(h_l)) // group
+        k_l = jnp.take(ks, head_map, axis=2)
+        v_l = jnp.take(vs, head_map, axis=2)
+        return flash_ops.flash_attention(
+            qs, k_l, v_l, causal=causal, window=window, block_k=chunk)
+
+    return shard_map(body, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
+                     out_specs=ospec, check_rep=False)(q, k, v)
+
+
+def gqa_prefill(
+    p: Dict, x: jax.Array, policy: PrecisionPolicy,
+    *, n_heads: int, n_kv: int, head_dim: int,
+    sin: jax.Array, cos: jax.Array,
+    causal: bool = True, window: Optional[int] = None,
+    serve: bool = False, rope: bool = True, chunk: int = 1024,
+    impl: str = "xla", attn_impl: str = "xla",
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Returns (out (B,S,D), (k_cache, v_cache) at (B,S,KVH,Dh))."""
+    b, s, _ = x.shape
+    kw = {"impl": impl} if serve else {}
+    q = _proj(p["q"], x, policy, serve, **kw).reshape(b, s, n_heads, head_dim)
+    k = _proj(p["k"], x, policy, serve, **kw).reshape(b, s, n_kv, head_dim)
+    v = _proj(p["v"], x, policy, serve, **kw).reshape(b, s, n_kv, head_dim)
+    if rope:
+        q = layers.apply_rotary(q, sin, cos)
+        k = layers.apply_rotary(k, sin, cos)
+    mesh = getattr(part._local, "mesh", None)
+    use_flash = (serve and attn_impl == "flash"
+                 and _flash_ok(mesh, part.current_rules(), b, s, n_heads))
+    if use_flash:
+        # Pallas kernel: scores never touch HBM (EXPERIMENTS.md §Perf).
+        o = _flash_sharded(q, k, v, n_heads=n_heads, n_kv=n_kv,
+                           causal=causal, window=window, chunk=chunk)
+    else:
+        kx = _repeat_kv(k, n_heads // n_kv)
+        vx = _repeat_kv(v, n_heads // n_kv)
+        o = chunked_attention(q, kx, vx, causal=causal, window=window,
+                              chunk=chunk)
+    o = o.reshape(b, s, n_heads * head_dim)
+    return _proj(p["o"], o, policy, serve, **kw), (k, v)
+
+
+def gqa_decode(
+    p: Dict, x: jax.Array, cache: Tuple[jax.Array, jax.Array], length: jax.Array,
+    policy: PrecisionPolicy,
+    *, n_heads: int, n_kv: int, head_dim: int,
+    sin: jax.Array, cos: jax.Array, window: Optional[int] = None,
+    serve: bool = True, rope: bool = True, impl: str = "xla",
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token step. x: (B, 1, D); cache (B,Smax,KVH,Dh); length = tokens
+    already in cache (the new token is written at index `length`)."""
+    b = x.shape[0]
+    kw = {"impl": impl} if serve else {}
+    q = _proj(p["q"], x, policy, serve, **kw).reshape(b, 1, n_heads, head_dim)
+    k = _proj(p["k"], x, policy, serve, **kw).reshape(b, 1, n_kv, head_dim)
+    v = _proj(p["v"], x, policy, serve, **kw).reshape(b, 1, n_kv, head_dim)
+    if rope:
+        q = layers.apply_rotary(q, sin, cos)
+        k = layers.apply_rotary(k, sin, cos)
+    k_cache, v_cache = cache
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, length, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, length, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, length + 1, window=window)
+    o = o.reshape(b, 1, n_heads * head_dim)
+    return _proj(p["o"], o, policy, serve, **kw), (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2).  KV cache = compressed
+# latent c_kv (rank r) + shared rope key: the cache-compression technique.
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(
+    d_model: int, n_heads: int, *, kv_lora: int, qk_nope: int, qk_rope: int,
+    v_head: int, lead=(), lead_axes=(), serve: bool = False,
+    policy: PrecisionPolicy = PrecisionPolicy(),
+) -> Dict:
+    mk = functools.partial(
+        quantized.qlinear_serve_spec if serve else quantized.qlinear_spec,
+        lead=lead, lead_axes=lead_axes,
+    )
+    kw = {"policy": policy} if serve else {}
+    return {
+        "q": mk(d_model, n_heads * (qk_nope + qk_rope), axes=("embed", "heads"), **kw),
+        "dkv": mk(d_model, kv_lora + qk_rope, axes=("embed", "qk_dim"), **kw),
+        "uk": mk(kv_lora, n_heads * qk_nope, axes=("qk_dim", "heads"), **kw),
+        "uv": mk(kv_lora, n_heads * v_head, axes=("qk_dim", "heads"), **kw),
+        "o": mk(n_heads * v_head, d_model, axes=("heads", "act_embed"), **kw),
+        "kv_norm": {
+            k: ParamSpec(shape=lead + v.shape, dtype=v.dtype,
+                         axes=tuple(lead_axes) + v.axes, init=v.init)
+            for k, v in layers.rmsnorm_spec(kv_lora).items()
+        },
+    }
+
+
+mla_serve_spec = functools.partial(mla_spec, serve=True)
+
+
+def _mla_qkv(p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos, impl):
+    b, s, _ = x.shape
+    kw = {"impl": impl} if serve else {}
+    q = _proj(p["q"], x, policy, serve, **kw).reshape(b, s, n_heads, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = layers.apply_rotary(q_rope, sin, cos)
+    ckv_full = _proj(p["dkv"], x, policy, serve, **kw)
+    c_kv, k_rope = ckv_full[..., :kv_lora], ckv_full[..., kv_lora:]
+    c_kv = layers.rmsnorm_apply(p["kv_norm"], c_kv)
+    k_rope = layers.apply_rotary(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, policy, serve,
+                n_heads, qk_nope, qk_rope, v_head, *, causal, q_offset, impl,
+                chunk=1024):
+    """Expand latent -> K/V and run chunked attention."""
+    b, sk = c_kv.shape[:2]
+    kw = {"impl": impl} if serve else {}
+    k_nope = _proj(p["uk"], c_kv, policy, serve, **kw).reshape(b, sk, n_heads, qk_nope)
+    v = _proj(p["uv"], c_kv, policy, serve, **kw).reshape(b, sk, n_heads, v_head)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (b, sk, n_heads, qk_rope))
+    k = jnp.concatenate([k_nope, k_rope_b.astype(k_nope.dtype)], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope.astype(q_nope.dtype)], axis=-1)
+    scale = (qk_nope + qk_rope) ** -0.5
+    o = chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                          chunk=chunk, softmax_scale=scale)
+    return o.reshape(b, q.shape[1], n_heads * v_head)
+
+
+def mla_prefill(p, x, policy, *, n_heads, kv_lora, qk_nope, qk_rope, v_head,
+                sin, cos, serve=False, impl="xla", chunk=1024):
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(
+        p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos, impl)
+    kw = {"impl": impl} if serve else {}
+    o = _mla_attend(p, q_nope, q_rope, c_kv, k_rope, policy, serve,
+                    n_heads, qk_nope, qk_rope, v_head,
+                    causal=True, q_offset=0, impl=impl, chunk=chunk)
+    return _proj(p["o"], o, policy, serve, **kw), (c_kv, k_rope)
+
+
+def mla_decode(p, x, cache, length, policy, *, n_heads, kv_lora, qk_nope,
+               qk_rope, v_head, sin, cos, serve=True, impl="xla"):
+    """cache: (c_kv (B,Smax,r), k_rope (B,Smax,qk_rope))."""
+    b = x.shape[0]
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(
+        p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos, impl)
+    c_cache, kr_cache = cache
+    c_cache = jax.lax.dynamic_update_slice(
+        c_cache, c_new.astype(c_cache.dtype), (0, length, 0))
+    kr_cache = jax.lax.dynamic_update_slice(
+        kr_cache, kr_new.astype(kr_cache.dtype), (0, length, 0))
+    smax = c_cache.shape[1]
+    kw = {"impl": impl} if serve else {}
+    # Mask by validity: expand all cached latents, mask scores beyond length.
+    k_nope = _proj(p["uk"], c_cache, policy, serve, **kw).reshape(b, smax, n_heads, qk_nope)
+    v = _proj(p["uv"], c_cache, policy, serve, **kw).reshape(b, smax, n_heads, v_head)
+    k_rope_b = jnp.broadcast_to(kr_cache[:, :, None, :], (b, smax, n_heads, qk_rope))
+    k = jnp.concatenate([k_nope, k_rope_b.astype(k_nope.dtype)], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope.astype(q_nope.dtype)], axis=-1)
+    o = decode_attention(q, k, v, length + 1,
+                         softmax_scale=(qk_nope + qk_rope) ** -0.5)
+    o = o.reshape(b, 1, n_heads * v_head)
+    return _proj(p["o"], o, policy, serve, **kw), (c_cache, kr_cache)

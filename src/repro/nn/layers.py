@@ -1,0 +1,169 @@
+"""Common layers: norms, embeddings, rotary, activations, depthwise conv.
+
+Embeddings and the LM head are "boundary" layers (paper: first/last at
+8 bit).  In serve mode the embedding table is stored as int8 codes + a
+step size; norms stay in fp32 (they are parameter-light).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.precision import PrecisionPolicy
+from repro.nn.param import ParamSpec
+
+__all__ = [
+    "rmsnorm_spec", "rmsnorm_apply",
+    "layernorm_spec", "layernorm_apply",
+    "embed_spec", "embed_apply", "embed_serve_spec", "embed_serve_apply",
+    "rotary_cache", "apply_rotary",
+    "squared_relu", "swiglu_combine", "gelu",
+    "conv1d_spec", "causal_conv1d", "causal_conv1d_step",
+]
+
+
+def rmsnorm_spec(dim: int) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec(shape=(dim,), axes=("act_embed",), init="ones")}
+
+
+def rmsnorm_apply(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_spec(dim: int) -> Dict[str, ParamSpec]:
+    return {
+        "scale": ParamSpec(shape=(dim,), axes=("act_embed",), init="ones"),
+        "bias": ParamSpec(shape=(dim,), axes=("act_embed",), init="zeros"),
+    }
+
+
+def layernorm_apply(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --- embeddings -------------------------------------------------------------
+
+
+def pad_vocab(v: int, mult: int = 256) -> int:
+    """TP-friendly vocab padding: embedding tables shard their vocab axis
+    over the 'model' mesh axis (16-way), so the table size must divide.
+    Logits are truncated back to the true vocab at the head."""
+    return -(-v // mult) * mult
+
+
+def embed_spec(vocab: int, dim: int, dtype=jnp.float32) -> Dict[str, ParamSpec]:
+    return {
+        "table": ParamSpec(shape=(vocab, dim), dtype=dtype,
+                           axes=("vocab", "embed"), init="embed"),
+    }
+
+
+def embed_apply(p, ids: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0).astype(compute_dtype)
+
+
+def embed_serve_spec(vocab: int, dim: int, policy: PrecisionPolicy) -> Dict[str, ParamSpec]:
+    """Boundary class: int8 codes + per-tensor step (8-bit, Table III)."""
+    if not policy.quantize:
+        return {"table": ParamSpec(shape=(vocab, dim), dtype=jnp.bfloat16,
+                                   axes=("vocab", "embed"), init="embed")}
+    return {
+        "codes": ParamSpec(shape=(vocab, dim), dtype=jnp.int8,
+                           axes=("vocab", "embed"), init="zeros"),
+        "gamma": ParamSpec(shape=(), dtype=jnp.float32, axes=(), init="constant",
+                           const=0.02),
+    }
+
+
+def embed_serve_apply(p, ids: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    if "table" in p:
+        return jnp.take(p["table"], ids, axis=0).astype(compute_dtype)
+    codes = jnp.take(p["codes"], ids, axis=0)
+    return (codes.astype(jnp.float32) * p["gamma"]).astype(compute_dtype)
+
+
+def pack_embed(p, policy: PrecisionPolicy):
+    if not policy.quantize:
+        return {"table": p["table"].astype(jnp.bfloat16)}
+    spec = quant.weight_spec(8)
+    gamma = quant.init_step_size(p["table"].astype(jnp.float32), spec)
+    codes = quant.quantize_int(p["table"].astype(jnp.float32), gamma, spec)
+    return {"codes": codes.astype(jnp.int8), "gamma": gamma}
+
+
+# --- rotary embeddings ------------------------------------------------------
+
+
+def rotary_cache(positions: jax.Array, dim: int, base: float = 10000.0
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """(sin, cos) of shape positions.shape + (dim/2,)."""
+    inv = 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rotary(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); sin/cos: (..., S, D/2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    s, c = sin[..., None, :], cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# --- activations ------------------------------------------------------------
+
+
+def squared_relu(x: jax.Array) -> jax.Array:
+    """Nemotron-4's activation: relu(x)^2."""
+    r = jnp.maximum(x, 0)
+    return r * r
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu_combine(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+# --- causal depthwise conv (mamba2 / recurrentgemma) ------------------------
+
+
+def conv1d_spec(channels: int, width: int = 4) -> Dict[str, ParamSpec]:
+    return {
+        "w": ParamSpec(shape=(width, channels), axes=("conv", "act_embed"),
+                       init="normal", fan_in_axes=(0,)),
+        "b": ParamSpec(shape=(channels,), axes=("act_embed",), init="zeros"),
+    }
+
+
+def causal_conv1d(p, x: jax.Array) -> jax.Array:
+    """x: (B, S, C) -> depthwise causal conv, width W (left-padded)."""
+    w = p["w"].astype(x.dtype)        # (W, C)
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):            # unrolled: W is 4
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + p["b"].astype(x.dtype)
+
+
+def causal_conv1d_step(p, cache: jax.Array, x_t: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Decode step. cache: (B, W-1, C) past inputs; x_t: (B, C)."""
+    w = p["w"].astype(x_t.dtype)
+    width = w.shape[0]
+    window = jnp.concatenate([cache, x_t[:, None, :]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, w) + p["b"].astype(x_t.dtype)
+    return window[:, 1:, :], y

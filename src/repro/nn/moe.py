@@ -1,0 +1,150 @@
+"""Mixture-of-Experts with TPU-native capacity-bounded dispatch.
+
+Dispatch avoids dynamic scatter/sort: after token-choice top-k routing,
+each expert gathers its top-C tokens by gate score (C = capacity).  Both
+directions are plain gathers + one scatter-add, which SPMD-partition
+cleanly with experts sharded over the 'model' axis (EP).  Oversubscribed
+experts drop their lowest-gate tokens (standard capacity-factor
+semantics); undersubscribed experts pad with gate-0 tokens that
+contribute nothing.
+
+Expert weights are per-expert qlinears (lead dim = experts), so the
+paper's *channel-wise* mixed precision maps naturally onto *per-expert*
+step sizes; w_Q applies to every expert GEMM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.nn import layers, quantized
+from repro.nn.param import ParamSpec
+from repro.nn.partitioning import constrain
+
+__all__ = ["MoEConfig", "moe_spec", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    n_experts: int
+    topk: int
+    n_shared: int = 0         # deepseek shared experts
+    shared_ff: Optional[int] = None
+    capacity_factor: float = 2.0
+    act: str = "swiglu"
+
+    @property
+    def shared_hidden(self) -> int:
+        return (self.shared_ff or self.d_ff) * self.n_shared
+
+
+def moe_spec(cfg: MoEConfig, *, lead=(), lead_axes=(), serve=False,
+             policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
+    mk = functools.partial(
+        quantized.qlinear_serve_spec if serve else quantized.qlinear_spec,
+        lead=lead + (cfg.n_experts,), lead_axes=lead_axes + ("experts",),
+    )
+    kw = {"policy": policy} if serve else {}
+    spec = {
+        # Router stays fp32 (parameter-light, accuracy-critical).
+        "router": ParamSpec(shape=lead + (cfg.d_model, cfg.n_experts),
+                            axes=lead_axes + ("embed", "experts"),
+                            init="normal", fan_in_axes=(-2,)),
+        "gate": mk(cfg.d_model, cfg.d_ff, axes=("embed", "expert_mlp"), **kw),
+        "up": mk(cfg.d_model, cfg.d_ff, axes=("embed", "expert_mlp"), **kw),
+        "down": mk(cfg.d_ff, cfg.d_model, axes=("expert_mlp", "act_embed"), **kw),
+    }
+    if cfg.n_shared:
+        mk2 = functools.partial(
+            quantized.qlinear_serve_spec if serve else quantized.qlinear_spec,
+            lead=lead, lead_axes=lead_axes,
+        )
+        spec["shared_gate"] = mk2(cfg.d_model, cfg.shared_hidden,
+                                  axes=("embed", "mlp"), **kw)
+        spec["shared_up"] = mk2(cfg.d_model, cfg.shared_hidden,
+                                axes=("embed", "mlp"), **kw)
+        spec["shared_down"] = mk2(cfg.shared_hidden, cfg.d_model,
+                                  axes=("mlp", "act_embed"), **kw)
+    return spec
+
+
+def _expert_ffn(p, x, policy, cfg: MoEConfig, serve, impl):
+    """x: (B, E, C, D) -> (B, E, C, D); one qlinear bank per expert.
+
+    vmapped over the expert axis (params axis 0, activations axis 1) so
+    each expert's LSQ step sizes apply to its own bank — the per-expert
+    mapping of the paper's channel-wise quantization.
+    """
+    fn = (functools.partial(quantized.qlinear_serve_apply, impl=impl)
+          if serve else quantized.qlinear_apply)
+
+    def one(pg, pu, pd, xe):                    # xe: (B, C, D)
+        g = fn(pg, xe, policy)
+        u = fn(pu, xe, policy)
+        h = layers.swiglu_combine(g, u) if cfg.act == "swiglu" else layers.gelu(g)
+        return fn(pd, h, policy)
+
+    strip = lambda t: {k: v for k, v in t.items() if k != quantized.QMARK}
+    return jax.vmap(one, in_axes=(0, 0, 0, 1), out_axes=1)(
+        strip(p["gate"]), strip(p["up"]), strip(p["down"]), x)
+
+
+def moe_apply(
+    p: Dict, x: jax.Array, policy: PrecisionPolicy, cfg: MoEConfig,
+    *, serve: bool = False, impl: str = "xla",
+) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    GROUPED capacity dispatch (GShard-style local groups): routing and
+    the capacity top-k run independently per batch row, so tokens stay
+    sharded over the 'data' axis end to end and the only cross-device
+    movement is the (batch, experts, cap, d) all-to-all that GSPMD
+    inserts between the data-sharded gather and the expert-sharded FFN.
+    The earlier global-dispatch formulation all-gathered the entire
+    token stream to every expert shard (EXPERIMENTS.md §Perf, olmoe
+    hillclimb #1: 16x per-device expert FLOPs, collective-bound cell).
+    """
+    b, s, d = x.shape
+    e = cfg.n_experts
+    scores = jax.nn.softmax(
+        jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                   p["router"].astype(jnp.float32)), axis=-1)
+    gates, idx = jax.lax.top_k(scores, cfg.topk)                 # (B, S, K)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)       # renormalize
+    # Selected-gate matrix per group: sel[b,s,e] = gate if e in top-k.
+    sel = jnp.zeros((b, s, e), jnp.float32)
+    b_ix = jnp.arange(b)[:, None, None]
+    s_ix = jnp.arange(s)[None, :, None]
+    sel = sel.at[b_ix, s_ix, idx].set(gates)
+    cap = max(int(s * cfg.topk * cfg.capacity_factor / e), 1)
+    cap = min(cap, s)
+    # Each expert takes its top-C tokens *within the group* (no sort).
+    vals, tok_idx = jax.lax.top_k(jnp.swapaxes(sel, 1, 2), cap)  # (B, E, C)
+    xg = jax.vmap(lambda xb, ib: jnp.take(xb, ib, axis=0))(x, tok_idx)
+    xg = constrain(xg, ("batch", "experts", "cap", "act_embed"))
+    h = _expert_ffn(p, xg, policy, cfg, serve, impl)             # (B, E, C, D)
+    h = h * vals[..., None].astype(h.dtype)
+    h = constrain(h, ("batch", "experts", "cap", "act_embed"))
+
+    def combine(hb, ib):                                         # per group
+        yb = jnp.zeros((s, d), jnp.float32)
+        return yb.at[ib.reshape(-1)].add(
+            hb.reshape(-1, d).astype(jnp.float32))
+
+    y = jax.vmap(combine)(h, tok_idx).astype(x.dtype)            # (B, S, D)
+
+    if cfg.n_shared:
+        fn = (functools.partial(quantized.qlinear_serve_apply, impl=impl)
+              if serve else quantized.qlinear_apply)
+        g = fn(p["shared_gate"], x, policy)
+        u = fn(p["shared_up"], x, policy)
+        hs = layers.swiglu_combine(g, u) if cfg.act == "swiglu" else layers.gelu(g)
+        y = y + fn(p["shared_down"], hs, policy).astype(y.dtype)
+    return y

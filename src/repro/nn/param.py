@@ -1,0 +1,120 @@
+"""Parameter specification trees: shapes + dtypes + logical axes + init.
+
+A model is described by a nested dict of :class:`ParamSpec`.  From that
+single source of truth we derive
+  * materialized params  (``init_params`` — smoke tests, real training),
+  * abstract params      (``abstract_params`` — ShapeDtypeStruct for the
+                          no-allocation multi-pod dry-run),
+  * the logical-axes tree (``axes_tree`` — sharding via partitioning.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ParamSpec",
+    "init_params",
+    "abstract_params",
+    "axes_tree",
+    "count_params",
+    "is_spec",
+    "QMARK",
+    "strip_markers",
+]
+
+# Marker key identifying a quantized-linear subtree in *spec* trees; it
+# carries the layer class and never materializes into the param tree.
+QMARK = "__q__"
+
+
+def strip_markers(tree):
+    if isinstance(tree, dict):
+        return {k: strip_markers(v) for k, v in tree.items() if k != QMARK}
+    return tree
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor.
+
+    axes: logical axis names, one per dim (None = unsharded dim).
+    init: 'normal' (fan-in scaled), 'zeros', 'ones', 'embed', 'constant'.
+    fan_in_axes: dims counted as fan-in for the scaled-normal init.
+    """
+
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "normal"
+    const: float = 0.0
+    fan_in_axes: Tuple[int, ...] = (0,)
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} vs shape {self.shape}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _materialize(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "constant":
+        return jnp.full(spec.shape, spec.const, spec.dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+    # fan-in scaled normal (lecun)
+    fan_in = 1
+    for a in spec.fan_in_axes:
+        if spec.shape:
+            fan_in *= spec.shape[a % len(spec.shape)]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+
+
+def init_params(specs, rng: jax.Array):
+    """Materialize a spec tree into an array tree (deterministic per-path)."""
+    specs = strip_markers(specs)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    arrs = [_materialize(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(specs):
+    """Spec tree -> ShapeDtypeStruct tree (no allocation; dry-run input)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        strip_markers(specs), is_leaf=is_spec,
+    )
+
+
+def axes_tree(specs):
+    """Spec tree -> logical-axes tree (tuples as leaves)."""
+    return jax.tree.map(
+        lambda s: s.axes if s.axes else (None,) * len(s.shape),
+        strip_markers(specs),
+        is_leaf=is_spec,
+    )
+
+
+def count_params(specs, classify: Optional[Callable[[str], str]] = None) -> Dict[str, int]:
+    """Count parameters, optionally bucketed by a path classifier."""
+    counts: Dict[str, int] = {}
+    flat = jax.tree_util.tree_flatten_with_path(specs, is_leaf=is_spec)[0]
+    for path, spec in flat:
+        n = 1
+        for d in spec.shape:
+            n *= d
+        key = classify(jax.tree_util.keystr(path)) if classify else "total"
+        counts[key] = counts.get(key, 0) + n
+    return counts

@@ -1,0 +1,180 @@
+"""Logical-axis -> mesh-axis rules (MaxText-style), train and serve sets.
+
+The production mesh is (pod, data, model) multi-pod or (data, model)
+single-pod (launch/mesh.py).  Rules map each *logical* parameter /
+activation axis onto zero or more mesh axes:
+
+  train: FSDP over ('pod','data') on the 'embed' axis of weights +
+         tensor-parallel over 'model' on heads/mlp/vocab/experts;
+         batch over ('pod','data'); optional sequence-sharding of the
+         residual stream over 'model' (activation memory relief).
+  serve: pure TP over 'model' (weights fit HBM once quantized — the
+         paper's packed planes), batch over ('pod','data').
+
+A rule value may name axes that the current mesh lacks (e.g. 'pod' on the
+single-pod mesh) — those are silently dropped, so one rule set serves
+both meshes.  Duplicate mesh axes within one PartitionSpec are dropped
+(first logical axis wins), mirroring flax.linen.logical_to_mesh_axes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "TRAIN_RULES",
+    "SERVE_RULES",
+    "axis_rules",
+    "current_rules",
+    "logical_to_spec",
+    "sharding_for",
+    "tree_shardings",
+    "constrain",
+]
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+TRAIN_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "embed": ("pod", "data"),   # FSDP shard axis of 2-D weights
+    "embed_packed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": None,           # kv heads can be < TP degree (MQA)
+    "head_dim": None,
+    "qk_dim": None,
+    "vocab": "model",
+    "experts": "model",         # expert parallelism
+    "expert_mlp": None,
+    "layers": None,
+    "kv_seq": None,            # decode-cache seq axis (train: unused)
+    "plane": None,
+    "state": None,
+    "conv": None,
+    "cap": None,
+    "frames": None,
+}
+
+SERVE_RULES: Rules = {
+    **TRAIN_RULES,
+    "embed": None,              # no FSDP at serve: packed weights fit
+    "batch": ("pod", "data"),
+    # decode KV/state caches shard their sequence axis over the TP axis
+    # (flash-decoding style): a 32k cache / 128 batch cell would otherwise
+    # hold ~40 GiB per device.
+    "kv_seq": "model",
+    # Row-parallel packed planes (Megatron pattern): projections writing
+    # into the residual stream (down, o) shard their contraction axis so
+    # no serve weight is replicated.
+    "mlp_packed": "model",
+    "heads_packed": "model",
+    "expert_mlp_packed": "model",   # dropped when 'experts' already owns it
+}
+
+# Sequence-sharded variant (hillclimb option): residual stream S over model.
+TRAIN_RULES_SEQ = {**TRAIN_RULES, "seq": "model"}
+
+_local = threading.local()
+
+
+def current_rules() -> Rules:
+    return getattr(_local, "rules", TRAIN_RULES)
+
+
+def current_mesh() -> Optional[Mesh]:
+    m = getattr(_local, "mesh", None)
+    if m is not None:
+        return m
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.shape_tuple:
+            return None
+    except Exception:
+        pass
+    return None
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Rules, mesh: Optional[Mesh] = None):
+    """Install a logical->mesh rule set (and optionally the mesh) locally."""
+    old_r = getattr(_local, "rules", None)
+    old_m = getattr(_local, "mesh", None)
+    _local.rules = rules
+    _local.mesh = mesh
+    try:
+        yield
+    finally:
+        if old_r is None:
+            del _local.rules
+        else:
+            _local.rules = old_r
+        _local.mesh = old_m
+
+
+def logical_to_spec(
+    axes: Sequence[Optional[str]],
+    rules: Optional[Rules] = None,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Logical axis names -> PartitionSpec under the rules and mesh."""
+    rules = rules if rules is not None else current_rules()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    used = set()
+    out = []
+    for name in axes:
+        entry = rules.get(name) if name is not None else None
+        if entry is None:
+            out.append(None)
+            continue
+        cand = (entry,) if isinstance(entry, str) else tuple(entry)
+        picked = []
+        for ax in cand:
+            if mesh_axes is not None and ax not in mesh_axes:
+                continue  # rule names an axis this mesh lacks (e.g. 'pod')
+            if ax in used:
+                continue  # first logical axis wins a mesh axis
+            used.add(ax)
+            picked.append(ax)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Rules] = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, rules, mesh))
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules: Optional[Rules] = None):
+    """Logical-axes tree -> NamedSharding tree (jit in_shardings input)."""
+    return jax.tree.map(
+        lambda axes: sharding_for(axes, mesh, rules),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    mesh = getattr(_local, "mesh", None)
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, logical_to_spec(axes, None, mesh))
+    )

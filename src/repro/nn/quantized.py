@@ -1,0 +1,274 @@
+"""Quantized linear layers: QAT (train) and packed-plane (serve) modes.
+
+Train mode (paper Section IV-C): LSQ fake-quant of both operands —
+activations unsigned 8 bit, weights signed w_Q bit with trained step
+sizes — then a bf16 dot.  This is the QAT forward the paper trains for
+30 epochs.
+
+Serve mode: the deployed form.  Weights live as packed k-bit digit
+planes (uint8, DESIGN.md §2), activations are quantized on the fly to
+biased int8 codes, and the product runs through the mpmm kernel — the
+precision-scalable BP-ST-1D PE array.  Word-length w_Q can differ per
+layer (layer-wise) and gamma_w per output channel (channel-wise) without
+touching the kernel, the paper's "no new FPGA image" property.
+
+A qlinear param subtree is identified by the marker key '__q__'; tree
+transformations (pack_tree) rewrite those subtrees wholesale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, quant
+from repro.core.packing import PlaneFormat
+from repro.core.precision import PrecisionPolicy
+from repro.kernels.mpmm import ops as mpmm_ops
+from repro.nn.param import ParamSpec
+
+__all__ = [
+    "qlinear_spec",
+    "qlinear_apply",
+    "qlinear_serve_spec",
+    "pack_qlinear",
+    "pack_tree",
+    "QMARK",
+]
+
+QMARK = "__q__"
+
+
+def _marker(layer_class: str) -> ParamSpec:
+    # Zero-size marker carrying the layer class in its axes metadata slot.
+    return ParamSpec(shape=(0,), dtype=jnp.float32, axes=(layer_class,), init="zeros")
+
+
+def qlinear_spec(
+    in_dim: int,
+    out_dim: int,
+    *,
+    axes: Tuple[Optional[str], str] = ("embed", "mlp"),
+    layer_class: str = "inner",
+    channel_wise: bool = False,
+    bias: bool = False,
+    lead: Tuple[int, ...] = (),
+    lead_axes: Tuple[Optional[str], ...] = (),
+    dtype=jnp.float32,
+) -> Dict[str, ParamSpec]:
+    """Spec of one QAT linear: master weight + LSQ step sizes.
+
+    lead/lead_axes: optional leading dims (e.g. ('layers',) for
+    scan-over-layers stacking, ('experts',) for MoE banks).
+    """
+    gshape = lead + ((out_dim,) if channel_wise else ())
+    gaxes = lead_axes + ((axes[1],) if channel_wise else ())
+    return {
+        QMARK: _marker(layer_class),
+        "w": ParamSpec(
+            shape=lead + (in_dim, out_dim),
+            dtype=dtype,
+            axes=lead_axes + axes,
+            init="normal",
+            fan_in_axes=(-2,),
+        ),
+        "gw": ParamSpec(shape=gshape, dtype=jnp.float32, axes=gaxes, init="constant",
+                        const=0.05),
+        "ga": ParamSpec(shape=lead, dtype=jnp.float32, axes=lead_axes, init="constant",
+                        const=0.05),
+        **(
+            {"b": ParamSpec(shape=lead + (out_dim,), dtype=jnp.float32,
+                            axes=lead_axes + (axes[1],), init="zeros")}
+            if bias
+            else {}
+        ),
+    }
+
+
+def is_qlinear(sub) -> bool:
+    return isinstance(sub, dict) and QMARK in sub
+
+
+def _layer_class_of(sub: Dict) -> str:
+    mark = sub[QMARK]
+    axes = mark.axes if isinstance(mark, ParamSpec) else ("inner",)
+    return axes[0] or "inner"
+
+
+def qlinear_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    policy: PrecisionPolicy,
+    *,
+    layer_class: str = "inner",
+    quantize_act: bool = True,
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """QAT forward: fake-quant(act) @ fake-quant(w) (+ b)."""
+    w, gw, ga = p["w"], p["gw"], p["ga"]
+    if policy.quantize:
+        w_bits = policy.bits_for(layer_class)
+        wspec = quant.weight_spec(w_bits, channel_axis=-1 if gw.ndim > 0 and policy.channel_wise else None)
+        w = quant.fake_quant(w.astype(jnp.float32), gw, wspec)
+        if quantize_act:
+            # activation fake-quant stays in the activation dtype (bf16):
+            # 8-bit codes are exact in bf16 and the f32 round-trip was a
+            # top byte-mover in the train-step HLO (§Perf).
+            aspec = quant.act_spec(policy.a_bits)
+            x = quant.fake_quant(x, ga, aspec)
+    y = jnp.einsum(
+        "...k,kn->...n",
+        x.astype(compute_dtype),
+        w.astype(compute_dtype),
+    )
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Serve mode: packed digit planes.
+# ---------------------------------------------------------------------------
+
+
+def qlinear_serve_spec(
+    in_dim: int,
+    out_dim: int,
+    *,
+    axes: Tuple[Optional[str], str] = ("embed", "mlp"),
+    layer_class: str = "inner",
+    policy: PrecisionPolicy = PrecisionPolicy(),
+    bias: bool = False,
+    lead: Tuple[int, ...] = (),
+    lead_axes: Tuple[Optional[str], ...] = (),
+) -> Dict[str, ParamSpec]:
+    """Spec of the deployed (packed) form — shapes for the dry-run."""
+    w_bits = policy.bits_for(layer_class) if policy.quantize else 16
+    if not policy.quantize:
+        # FP baseline deployment: bf16 weights, plain matmul.
+        return {
+            QMARK: _marker(layer_class),
+            "w": ParamSpec(shape=lead + (in_dim, out_dim), dtype=jnp.bfloat16,
+                           axes=lead_axes + axes, init="normal", fan_in_axes=(-2,)),
+            **({"b": ParamSpec(shape=lead + (out_dim,), dtype=jnp.float32,
+                               axes=lead_axes + (axes[1],), init="zeros")} if bias else {}),
+        }
+    # k > w_bits is allowed (PPG partially idle, paper IV-A): storage uses
+    # full k-bit digit slots, so the waste shows up in the memory term.
+    fmt = PlaneFormat(w_bits=w_bits, k=policy.k, k_dim=in_dim)
+    # The packed contraction axis is named after the true input axis so
+    # serve rules can row-parallel-shard projections whose OUTPUT is the
+    # residual stream (down/o: axes[1] == 'act_embed' maps to None).
+    k_axis = f"{axes[0]}_packed" if axes[0] else None
+    return {
+        QMARK: _marker(layer_class),
+        "planes": ParamSpec(
+            shape=lead + (fmt.planes, fmt.packed_k, out_dim),
+            dtype=jnp.uint8,
+            axes=lead_axes + ("plane", k_axis, axes[1]),
+            init="zeros",
+        ),
+        "colsum": ParamSpec(shape=lead + (1, out_dim), dtype=jnp.int32,
+                            axes=lead_axes + (None, axes[1]), init="zeros"),
+        "gamma": ParamSpec(shape=lead + (1, out_dim), dtype=jnp.float32,
+                           axes=lead_axes + (None, axes[1]), init="constant", const=1e-3),
+        "ga": ParamSpec(shape=lead, dtype=jnp.float32, axes=lead_axes,
+                        init="constant", const=0.05),
+        **(
+            {"b": ParamSpec(shape=lead + (out_dim,), dtype=jnp.float32,
+                            axes=lead_axes + (axes[1],), init="zeros")}
+            if bias
+            else {}
+        ),
+    }
+
+
+def qlinear_serve_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    policy: PrecisionPolicy,
+    *,
+    layer_class: str = "inner",
+    tile: Optional[mpmm_ops.TileShape] = None,
+    impl: str = "xla",
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Deployed forward: quantize acts -> mpmm over packed planes."""
+    if "w" in p:  # FP baseline
+        y = jnp.einsum("...k,kn->...n", x.astype(compute_dtype),
+                       p["w"].astype(compute_dtype))
+        if "b" in p:
+            y = y + p["b"].astype(compute_dtype)
+        return y
+    w_bits = policy.bits_for(layer_class)
+    k = policy.k
+    kdim = x.shape[-1]
+    fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=kdim)
+    a = mpmm_ops.quantize_activations(x, p["ga"], policy.a_bits)
+    y = mpmm_ops.mpmm(
+        a, p["planes"], p["gamma"], p["colsum"],
+        fmt=fmt, act_zero=2 ** (policy.a_bits - 1),
+        tile=tile, variant=policy.variant, impl=impl,
+        out_dtype=compute_dtype,
+    )
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def pack_qlinear(
+    p: Dict[str, jax.Array],
+    policy: PrecisionPolicy,
+    layer_class: str = "inner",
+) -> Dict[str, jax.Array]:
+    """Trained QAT params -> deployed packed params (handles lead dims)."""
+    w, gw, ga = p["w"], p["gw"], p["ga"]
+    if not policy.quantize:
+        out = {"w": w.astype(jnp.bfloat16)}
+        if "b" in p:
+            out["b"] = p["b"]
+        return out
+    w_bits = policy.bits_for(layer_class)
+    kdim, n = w.shape[-2], w.shape[-1]
+    lead_nd = w.ndim - 2
+    channel_wise = policy.channel_wise and gw.ndim == lead_nd + 1
+    # Broadcast gw against the (possibly lead-stacked) weight explicitly:
+    # per-tensor gw has shape `lead` -> lead+(1,1); channel-wise gw has
+    # shape lead+(N,) -> lead+(1,N).
+    gww = jnp.asarray(gw, jnp.float32)
+    g_b = gww[..., None, :] if channel_wise else gww[..., None, None]
+    wspec = quant.weight_spec(w_bits, channel_axis=None)
+    w_int = quant.quantize_int(w.astype(jnp.float32), g_b, wspec)
+    fmt = PlaneFormat(w_bits=w_bits, k=policy.k, k_dim=kdim)
+    packed = packing.pack_planes(w_int, fmt, axis=-2)       # (P, ..., Kp, N)
+    packed = jnp.moveaxis(packed, 0, -3)                    # (..., P, Kp, N)
+    colsum = jnp.sum(w_int, axis=-2, dtype=jnp.int32)[..., None, :]
+    gamma_w = jnp.broadcast_to(g_b, w.shape[:-2] + (1, n))
+    gamma = gamma_w * jnp.asarray(ga, jnp.float32)[..., None, None]
+    out = {"planes": packed, "colsum": colsum, "gamma": gamma,
+           "ga": jnp.asarray(ga, jnp.float32)}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def pack_tree(params, specs, policy: PrecisionPolicy):
+    """Recursively pack every qlinear subtree of a trained param tree.
+
+    `specs` is the matching ParamSpec tree (it carries the layer-class
+    markers); non-qlinear leaves are cast to bf16 when float (norms,
+    embeddings handled by their own layers).
+    """
+    if is_qlinear(specs):
+        cls = _layer_class_of(specs)
+        sub = {k: v for k, v in params.items() if k != QMARK}
+        return pack_qlinear(sub, policy, cls)
+    if isinstance(specs, dict):
+        return {
+            k: pack_tree(params[k], specs[k], policy)
+            for k in specs
+            if k != QMARK
+        }
+    return params

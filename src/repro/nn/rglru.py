@@ -1,0 +1,128 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+    r_t = sigmoid(W_a x_t)          recurrence gate
+    i_t = sigmoid(W_x x_t)          input gate
+    a_t = exp(-c * softplus(L) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill use jax.lax.associative_scan (log-depth — this is what
+makes the 524288-token long_500k cell tractable); decode is the O(1)
+single-step recurrence.  The gate/branch projections are qlinears (the
+paper's technique); L and the recurrence state stay fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.nn import layers, quantized
+from repro.nn.param import ParamSpec
+
+__all__ = ["RGLRUConfig", "rglru_block_spec", "rglru_block_forward",
+           "rglru_block_step", "rglru_state_spec"]
+
+_C = 8.0  # Griffin's fixed temperature
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int
+    conv_width: int = 4
+
+
+def rglru_block_spec(cfg: RGLRUConfig, *, lead=(), lead_axes=(), serve=False,
+                     policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
+    mk = functools.partial(
+        quantized.qlinear_serve_spec if serve else quantized.qlinear_spec,
+        lead=lead, lead_axes=lead_axes,
+    )
+    kw = {"policy": policy} if serve else {}
+    d, dr = cfg.d_model, cfg.d_rnn
+    return {
+        "in_x": mk(d, dr, axes=("embed", "mlp"), **kw),
+        "in_gate": mk(d, dr, axes=("embed", "mlp"), **kw),
+        "w_a": mk(dr, dr, axes=("mlp", "mlp"), **kw),
+        "w_x": mk(dr, dr, axes=("mlp", "mlp"), **kw),
+        "out": mk(dr, d, axes=("mlp", "act_embed"), **kw),
+        "conv": {k: ParamSpec(shape=lead + v.shape, dtype=v.dtype,
+                              axes=lead_axes + v.axes, init=v.init)
+                 for k, v in layers.conv1d_spec(dr, cfg.conv_width).items()},
+        "lam": ParamSpec(shape=lead + (dr,), axes=lead_axes + ("mlp",),
+                         init="constant", const=0.7),
+    }
+
+
+def _proj(p, x, policy, serve, impl):
+    fn = (functools.partial(quantized.qlinear_serve_apply, impl=impl)
+          if serve else quantized.qlinear_apply)
+    return fn(p, x, policy)
+
+
+def _gates(p, xb, policy, serve, impl):
+    """xb: (..., d_rnn) -> (a, gated_input) in fp32."""
+    r = jax.nn.sigmoid(_proj(p["w_a"], xb, policy, serve, impl).astype(jnp.float32))
+    i = jax.nn.sigmoid(_proj(p["w_x"], xb, policy, serve, impl).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * xb.astype(jnp.float32)
+
+
+def rglru_block_forward(
+    p: Dict, x: jax.Array, policy: PrecisionPolicy, cfg: RGLRUConfig,
+    *, serve: bool = False, impl: str = "xla", h0: jax.Array = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) -> (out, {'h': (B, d_rnn), 'conv': (B, W-1, d_rnn)})."""
+    xb = _proj(p["in_x"], x, policy, serve, impl)                 # (B,S,dr)
+    gate = layers.gelu(_proj(p["in_gate"], x, policy, serve, impl))
+    pre_conv = xb
+    xb = layers.causal_conv1d(p["conv"], xb)
+    a, b = _gates(p, xb, policy, serve, impl)
+    if h0 is not None:
+        # fold the carried state in as a virtual step-0 contribution
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h_seq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h_seq.astype(x.dtype) * gate
+    out = _proj(p["out"], y, policy, serve, impl)
+    state = {
+        "h": h_seq[:, -1, :],
+        "conv": pre_conv[:, -(cfg.conv_width - 1):, :].astype(jnp.float32),
+    }
+    return out, state
+
+
+def rglru_state_spec(cfg: RGLRUConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "h": jax.ShapeDtypeStruct((batch, cfg.d_rnn), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, cfg.d_rnn),
+                                     jnp.float32),
+    }
+
+
+def rglru_block_step(
+    p: Dict, x_t: jax.Array, state: Dict[str, jax.Array],
+    policy: PrecisionPolicy, cfg: RGLRUConfig,
+    *, serve: bool = True, impl: str = "xla",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token step. x_t: (B, 1, D)."""
+    xb = _proj(p["in_x"], x_t, policy, serve, impl)[:, 0]          # (B,dr)
+    gate = layers.gelu(_proj(p["in_gate"], x_t, policy, serve, impl))[:, 0]
+    conv_cache, xbc = layers.causal_conv1d_step(
+        p["conv"], state["conv"].astype(xb.dtype), xb)
+    a, b = _gates(p, xbc, policy, serve, impl)
+    h = a * state["h"] + b
+    y = (h.astype(x_t.dtype) * gate)[:, None, :]
+    out = _proj(p["out"], y, policy, serve, impl)
+    return out, {"h": h, "conv": conv_cache.astype(jnp.float32)}

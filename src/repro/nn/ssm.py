@@ -1,0 +1,215 @@
+"""Mamba-2 SSD (state-space duality) block — chunked train/prefill and
+constant-state decode.
+
+The chunked SSD algorithm (Dao & Gu 2024) splits the sequence into
+chunks of Q tokens; within a chunk the recurrence is the masked
+"attention-like" quadratic form, across chunks a (B, H, N, P) state is
+carried by a scan — O(S·Q) work, constant-memory decode.  This is why
+mamba2 runs the long_500k cell that quadratic attention cannot.
+
+All projections (in/out/gates/B/C/dt heads) are qlinears — the paper's
+weight quantization applies to them (93% of params); the SSD state and
+scan stay in fp32 (state, not weights; DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flags
+from repro.core.precision import PrecisionPolicy
+from repro.nn import layers, quantized
+from repro.nn.param import ParamSpec
+
+__all__ = ["SSMConfig", "ssm_spec", "ssd_forward", "ssd_decode_step", "ssm_state_spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssm_spec(cfg: SSMConfig, *, lead=(), lead_axes=(), serve=False,
+             policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
+    mk = functools.partial(
+        quantized.qlinear_serve_spec if serve else quantized.qlinear_spec,
+        lead=lead, lead_axes=lead_axes,
+    )
+    kw = {"policy": policy} if serve else {}
+    d, di = cfg.d_model, cfg.d_inner
+    gn = cfg.n_groups * cfg.d_state
+    return {
+        # fused in-projection: [x, B, C, z, dt]
+        "in_xbc": mk(d, di + 2 * gn, axes=("embed", "mlp"), **kw),
+        "in_z": mk(d, di, axes=("embed", "mlp"), **kw),
+        "in_dt": mk(d, cfg.n_heads, axes=("embed", "heads"), **kw),
+        "out": mk(di, d, axes=("mlp", "act_embed"), **kw),
+        "conv": {k: ParamSpec(shape=lead + v.shape, dtype=v.dtype,
+                              axes=lead_axes + v.axes, init=v.init)
+                 for k, v in layers.conv1d_spec(cfg.conv_channels, cfg.conv_width).items()},
+        "A_log": ParamSpec(shape=lead + (cfg.n_heads,), axes=lead_axes + ("heads",),
+                           init="constant", const=0.0),
+        "D": ParamSpec(shape=lead + (cfg.n_heads,), axes=lead_axes + ("heads",),
+                       init="ones"),
+        "dt_bias": ParamSpec(shape=lead + (cfg.n_heads,), axes=lead_axes + ("heads",),
+                             init="zeros"),
+        "norm": {k: ParamSpec(shape=lead + v.shape, dtype=v.dtype,
+                              axes=lead_axes + v.axes, init=v.init)
+                 for k, v in layers.rmsnorm_spec(di).items()},
+    }
+
+
+def _proj(p, x, policy, serve, impl):
+    fn = (functools.partial(quantized.qlinear_serve_apply, impl=impl)
+          if serve else quantized.qlinear_apply)
+    return fn(p, x, policy)
+
+
+def _split_xbc(xbc, cfg: SSMConfig):
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    return xbc[..., :di], xbc[..., di:di + gn], xbc[..., di + gn:]
+
+
+def _gated_norm(pn, y, z):
+    return layers.rmsnorm_apply(pn, y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+
+
+def ssd_forward(
+    p: Dict, x_in: jax.Array, policy: PrecisionPolicy, cfg: SSMConfig,
+    *, serve: bool = False, impl: str = "xla",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x_in: (B, S, D) -> (out (B,S,D), final recurrent state).
+
+    Chunked SSD: S must be a multiple of cfg.chunk (pad upstream).
+    """
+    b, s, _ = x_in.shape
+    h, pdim, n, g, q = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups, cfg.chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xbc = _proj(p["in_xbc"], x_in, policy, serve, impl)
+    z = _proj(p["in_z"], x_in, policy, serve, impl)
+    dt = _proj(p["in_dt"], x_in, policy, serve, impl)
+    pre_conv = jax.nn.silu(xbc.astype(jnp.float32)).astype(xbc.dtype)
+    xbc = layers.causal_conv1d(p["conv"], pre_conv)
+    xr, bmat, cmat = _split_xbc(xbc, cfg)
+
+    xh = xr.reshape(b, s, h, pdim).astype(jnp.float32)
+    bm = bmat.reshape(b, s, g, n).astype(jnp.float32)
+    cm = cmat.reshape(b, s, g, n).astype(jnp.float32)
+    hpg = h // g
+    bm = jnp.repeat(bm, hpg, axis=2)       # (B, S, H, N)
+    cm = jnp.repeat(cm, hpg, axis=2)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                     # (H,)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    da = dtp * a                                                     # (B,S,H) log-decay
+
+    # chunk views
+    xc = xh.reshape(b, nc, q, h, pdim)
+    bc = bm.reshape(b, nc, q, h, n)
+    cc = cm.reshape(b, nc, q, h, n)
+    dac = da.reshape(b, nc, q, h)
+    dtc = dtp.reshape(b, nc, q, h)
+
+    cum = jnp.cumsum(dac, axis=2)                                    # (B,nc,Q,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]              # (B,nc,Qi,Qj,H)
+    ii, jj = jnp.arange(q)[:, None], jnp.arange(q)[None, :]
+    lmask = (ii >= jj)[None, None, :, :, None]
+    ldecay = jnp.where(lmask, jnp.exp(seg), 0.0)
+    # within-chunk ("diagonal") term
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", cc, bc)
+    y_diag = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", cb * ldecay, dtc, xc)
+
+    # per-chunk input states and decays
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                  # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjh,bcjhn,bcjhp->bchnp",
+                        decay_to_end, dtc, bc, xc)                   # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                          # (B,nc,H)
+
+    def scan_fn(carry, xs):
+        st, dcy = xs
+        new = carry * dcy[:, :, None, None] + st
+        return new, carry                                            # emit prev state
+
+    init = jnp.zeros((b, h, n, pdim), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=flags.scan_unroll_arg())
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)               # (B,nc,H,N,P)
+
+    # cross-chunk ("off-diagonal") term
+    y_off = jnp.einsum("bcihn,bchnp,bcih->bcihp", cc, prev_states, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, s, h, pdim)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, s, cfg.d_inner).astype(x_in.dtype)
+    y = _gated_norm(p["norm"], y, z)
+    out = _proj(p["out"], y, policy, serve, impl)
+    state = {
+        "ssm": final_state,                                          # (B,H,N,P)
+        "conv": pre_conv[:, -(cfg.conv_width - 1):, :].astype(jnp.float32),
+    }
+    return out, state
+
+
+def ssm_state_spec(cfg: SSMConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, cfg.n_heads, cfg.d_state, cfg.head_dim),
+                                    jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, cfg.conv_channels),
+                                     jnp.float32),
+    }
+
+
+def ssd_decode_step(
+    p: Dict, x_t: jax.Array, state: Dict[str, jax.Array],
+    policy: PrecisionPolicy, cfg: SSMConfig,
+    *, serve: bool = True, impl: str = "xla",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrence. x_t: (B, 1, D); state from ssm_state_spec."""
+    b = x_t.shape[0]
+    h, pdim, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    xbc = _proj(p["in_xbc"], x_t, policy, serve, impl)[:, 0]
+    z = _proj(p["in_z"], x_t, policy, serve, impl)[:, 0]
+    dt = _proj(p["in_dt"], x_t, policy, serve, impl)[:, 0]
+    conv_cache, xbc = layers.causal_conv1d_step(
+        p["conv"], state["conv"].astype(xbc.dtype),
+        jax.nn.silu(xbc.astype(jnp.float32)).astype(xbc.dtype))
+    xr, bvec, cvec = _split_xbc(xbc, cfg)
+    xh = xr.reshape(b, h, pdim).astype(jnp.float32)
+    bv = jnp.repeat(bvec.reshape(b, g, n).astype(jnp.float32), h // g, axis=1)
+    cv = jnp.repeat(cvec.reshape(b, g, n).astype(jnp.float32), h // g, axis=1)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    decay = jnp.exp(dtp * a)                                         # (B,H)
+    s_new = (state["ssm"] * decay[:, :, None, None]
+             + jnp.einsum("bh,bhn,bhp->bhnp", dtp, bv, xh))
+    y = jnp.einsum("bhn,bhnp->bhp", cv, s_new)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, cfg.d_inner).astype(x_t.dtype)
+    y = _gated_norm(p["norm"], y, z[:, None, :])
+    out = _proj(p["out"], y, policy, serve, impl)
+    return out, {"ssm": s_new, "conv": conv_cache.astype(jnp.float32)}

@@ -1,0 +1,6 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.compress import compress_decompress, compress_init
+from repro.optim.schedule import warmup_cosine
+
+__all__ = ["adamw_init", "adamw_update", "warmup_cosine",
+           "compress_init", "compress_decompress"]

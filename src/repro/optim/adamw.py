@@ -1,0 +1,62 @@
+"""AdamW, pure pytree functions (decoupled weight decay, global-norm clip).
+
+LSQ step sizes (gw/ga leaves) are ordinary trainable parameters here —
+the LSQ gradient scaling 1/sqrt(N*Q_p) is already applied inside
+fake_quant (core/quant.py), as in the paper's training setup [10].
+
+``state_dtype=bfloat16`` stores both moments in bf16 (compute stays f32).
+This is the memory-side analogue of the paper's word-length reduction
+applied to the *optimizer*: it halves optimizer HBM and is what lets
+nemotron-4-340b train on a single 256-chip v5e pod (EXPERIMENTS.md
+§Dry-run) — 340e9 x (4+4+4) B / 256 chips = 16 GiB of f32 state alone
+would not fit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update"]
+
+
+def adamw_init(params, state_dtype=jnp.float32) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, state_dtype), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(
+    grads, state, params, *, lr, b1: float = 0.9, b2: float = 0.95,
+    eps: float = 1e-8, weight_decay: float = 0.1, max_norm: float = 1.0,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Returns (new_params, new_state).  Moments are read/written in the
+    state's storage dtype; all arithmetic runs in f32."""
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        step = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+        new_p = p.astype(jnp.float32) - lr * (
+            step + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}

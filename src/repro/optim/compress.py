@@ -1,0 +1,46 @@
+"""int8 gradient compression with error feedback (DP all-reduce trick).
+
+The paper's word-length reduction applied to the *gradient* traffic: DP
+gradients are quantized to int8 codes + per-leaf scale before the
+all-reduce and the quantization residual is carried to the next step
+(error feedback keeps SGD/Adam convergence — Seide et al. / Karimireddy
+et al. semantics).
+
+Here the compressor is a pure quantize-dequantize pair with residual
+state, applied inside the train step; on a wire-level deployment the
+int8 codes are what crosses ICI (4x less all-reduce wire than f32).
+The jit/GSPMD path in this repo models the *arithmetic* faithfully; a
+manual `shard_map` DP ring that moves the codes is the deployment form
+(see DESIGN.md §5) — the collective-term saving is 4x either way.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_init", "compress_decompress"]
+
+
+def compress_init(params) -> Any:
+    """Residual (error-feedback) state: one f32 buffer per leaf."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _qdq(g: jax.Array, res: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Quantize g+residual to int8 codes, return (dequantized, new res)."""
+    v = g.astype(jnp.float32) + res
+    scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(v / scale), -127, 127)  # int8 on the wire
+    deq = codes * scale
+    return deq, v - deq
+
+
+def compress_decompress(grads, state):
+    """tree -> (dequantized tree, new residual state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state)
+    out = [_qdq(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

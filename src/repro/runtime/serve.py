@@ -1,0 +1,109 @@
+"""Batched serving runtime: packed-weight deployment + greedy generation.
+
+The deployment path is the paper's: take QAT-trained params, pack every
+inner linear into k-bit digit planes (nn/quantized.pack_tree), then run
+prefill + decode entirely against packed weights through the mpmm path.
+Changing w_Q (layer-wise) or gamma_w per channel requires only re-packing
+— no recompilation of the serving step (the "no new FPGA image" claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import steps as steps_lib
+from repro.nn import param as nnp
+from repro.nn import partitioning as part
+from repro.nn import quantized as Q
+from repro.nn.layers import pack_embed
+
+__all__ = ["pack_for_serving", "Generator"]
+
+
+def pack_for_serving(api, train_params):
+    """Trained QAT tree -> packed serve tree matching specs('serve')."""
+    tspecs = api.specs("train")
+    packed = Q.pack_tree(train_params, tspecs, api.policy)
+    # embeddings: boundary-class PTQ to int8 codes + step size
+    if "embed" in packed and api.policy.quantize and "table" in packed["embed"]:
+        packed["embed"] = pack_embed(packed["embed"], api.policy)
+    return packed
+
+
+@dataclasses.dataclass
+class Generator:
+    """Greedy batched generator over the uniform model API."""
+
+    api: Any
+    params: Any
+    max_len: int = 64
+    mode: str = "serve"
+
+    def __post_init__(self):
+        self._prefill = jax.jit(steps_lib.make_prefill_fn(
+            self.api, mode=self.mode))
+        self._decode = jax.jit(steps_lib.make_decode_fn(
+            self.api, mode=self.mode))
+
+    def generate(self, tokens: np.ndarray, n_new: int,
+                 frames: Optional[np.ndarray] = None) -> np.ndarray:
+        b, s = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.api.needs_frames:
+            batch["frames"] = (jnp.asarray(frames) if frames is not None else
+                               jnp.zeros((b, self.api.cfg.n_audio,
+                                          self.api.cfg.d_model), jnp.float32))
+        logits, pre_cache = self._prefill(self.params, batch)
+        cache = self._grow_cache(pre_cache, b, s, s + n_new)
+        out = [np.asarray(jnp.argmax(logits, -1))]
+        tok = jnp.argmax(logits, -1)[:, None]
+        length = jnp.asarray(s, jnp.int32)
+        for i in range(n_new - 1):
+            logits, cache = self._decode(self.params, cache, tok, length + i)
+            tok = jnp.argmax(logits, -1)[:, None]
+            out.append(np.asarray(tok[:, 0]))
+        return np.stack(out, axis=1)
+
+    def _grow_cache(self, pre_cache, b, s, max_len):
+        """Copy prefill caches into decode-sized buffers (family-aware)."""
+        specs = self.api.cache_specs(b, max_len)
+
+        def embed(buf_spec, pre):
+            buf = jnp.zeros(buf_spec.shape, buf_spec.dtype)
+            if pre.shape == buf.shape:
+                return pre.astype(buf.dtype)
+            # seq axis is the one that differs; left-align the prefix.
+            idx = [slice(0, d) for d in pre.shape]
+            return buf.at[tuple(idx)].set(pre.astype(buf.dtype))
+
+        family = self.api.family
+        if family in ("ssm",):
+            return pre_cache  # constant-size state already
+        if family == "hybrid":
+            # recurrentgemma: re-pack last `window` keys into ring buffers
+            return self._rg_cache(pre_cache, b, s, specs)
+        return jax.tree.map(embed, specs, pre_cache,
+                            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    def _rg_cache(self, pre_cache, b, s, specs):
+        states, rem = pre_cache
+        st1, st2, kv = states
+        w = specs["k"].shape[2]
+        k_full, v_full = kv
+        take = min(s, w)
+        k_ring = jnp.zeros(specs["k"].shape, specs["k"].dtype)
+        v_ring = jnp.zeros(specs["v"].shape, specs["v"].dtype)
+        # absolute position p lands in slot p % w
+        pos = np.arange(s - take, s)
+        slots = pos % w
+        k_ring = k_ring.at[:, :, slots].set(
+            k_full[:, :, s - take:s].astype(k_ring.dtype))
+        v_ring = v_ring.at[:, :, slots].set(
+            v_full[:, :, s - take:s].astype(v_ring.dtype))
+        return {"r1": st1, "r2": st2, "k": k_ring, "v": v_ring,
+                "rem": [jax.tree.map(lambda a: a[None], r) for r in rem]}

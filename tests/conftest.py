@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single
+real CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,123 @@
+"""DSE model invariants (core/dse.py): Eqs. 1-4 of the paper, TPU-mapped."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dse import (Gemm, TileCandidate, choose_tile, dse_sweep,
+                            gemm_time, tile_utilization, vmem_working_set)
+from repro.core.packing import PlaneFormat
+from repro.core.roofline import TPU_V5E
+
+
+class TestUtilization:
+    def test_perfect_fit_is_one(self):
+        g = Gemm("g", 256, 256, 256)
+        assert tile_utilization(g, TileCandidate(256, 256, 256)) == 1.0
+
+    def test_padding_waste_below_one(self):
+        g = Gemm("g", 100, 100, 100)
+        u = tile_utilization(g, TileCandidate(128, 128, 128))
+        assert 0 < u < 1
+        assert u == pytest.approx((100 / 128) ** 3)
+
+    @settings(max_examples=60, deadline=None)
+    @given(m=st.integers(1, 4096), k=st.integers(1, 4096),
+           n=st.integers(1, 4096),
+           bm=st.sampled_from([8, 32, 128, 256]),
+           bk=st.sampled_from([128, 512]),
+           bn=st.sampled_from([128, 512]))
+    def test_bounded(self, m, k, n, bm, bk, bn):
+        """Eq. 3 analogue: 0 < U <= 1 always."""
+        u = tile_utilization(Gemm("g", m, k, n), TileCandidate(bm, bk, bn))
+        assert 0 < u <= 1.0
+
+
+class TestVmemWorkingSet:
+    def test_sa_needs_more_accumulators_than_st(self):
+        """Sum-Apart stores one partial sum per plane (paper IV-A)."""
+        fmt = PlaneFormat(w_bits=8, k=2, k_dim=512)  # 4 planes
+        tile = TileCandidate(128, 512, 128)
+        assert (vmem_working_set(tile, fmt, "sa")
+                > vmem_working_set(tile, fmt, "st"))
+
+    def test_smaller_k_smaller_weight_tile(self):
+        """Packed weight bytes scale with w_Q (the paper's BRAM point)."""
+        tile = TileCandidate(128, 512, 128)
+        w2 = vmem_working_set(tile, PlaneFormat(w_bits=2, k=2, k_dim=512))
+        w8 = vmem_working_set(tile, PlaneFormat(w_bits=8, k=2, k_dim=512))
+        assert w2 < w8
+
+    def test_fits_vmem_for_default_tiles(self):
+        fmt = PlaneFormat(w_bits=4, k=4, k_dim=128)
+        assert (vmem_working_set(TileCandidate(128, 128, 128), fmt)
+                < TPU_V5E.vmem_bytes)
+
+
+class TestGemmTime:
+    def test_more_planes_more_compute(self):
+        """ceil(w_Q/k) MXU passes: k=1 on 8-bit weights is 8 passes."""
+        g = Gemm("g", 1024, 1024, 1024)
+        tile = TileCandidate(128, 512, 128)
+        c1, _ = gemm_time(g, tile, PlaneFormat(w_bits=8, k=1, k_dim=1024))
+        c8, _ = gemm_time(g, tile, PlaneFormat(w_bits=8, k=8, k_dim=1024))
+        assert c1 == pytest.approx(8 * c8, rel=0.01)
+
+    def test_wordlength_reduction_cuts_memory_time(self):
+        """The paper's core claim, memory side: w2 moves ~1/4 the weight
+        bytes of w8 at equal k."""
+        g = Gemm("g", 8, 4096, 4096)  # decode-like: weight-dominated
+        tile = TileCandidate(8, 512, 128)
+        _, m2 = gemm_time(g, tile, PlaneFormat(w_bits=2, k=2, k_dim=4096))
+        _, m8 = gemm_time(g, tile, PlaneFormat(w_bits=8, k=2, k_dim=4096))
+        assert m2 < 0.5 * m8
+
+    def test_count_scales_linearly(self):
+        g1 = Gemm("g", 128, 128, 128, count=1)
+        g4 = Gemm("g", 128, 128, 128, count=4)
+        tile = TileCandidate(128, 128, 128)
+        fmt = PlaneFormat(w_bits=4, k=4, k_dim=128)
+        c1, m1 = gemm_time(g1, tile, fmt)
+        c4, m4 = gemm_time(g4, tile, fmt)
+        assert c4 == pytest.approx(4 * c1) and m4 == pytest.approx(4 * m1)
+
+
+class TestChooseTile:
+    def _workload(self):
+        return [
+            Gemm("qkv", 4096, 4096, 6144, count=32),
+            Gemm("mlp", 4096, 4096, 14336, count=64),
+            Gemm("head", 4096, 4096, 49152, layer_class="boundary"),
+        ]
+
+    def test_returns_feasible_choice(self):
+        choice = choose_tile(self._workload(), w_bits=4, k=4)
+        assert choice.tile.bm > 0
+        assert choice.vmem_bytes < TPU_V5E.vmem_bytes
+        assert 0 < choice.mean_utilization <= 1
+
+    def test_respects_vmem_budget(self):
+        choice = choose_tile(self._workload(), w_bits=8, k=1)
+        assert choice.vmem_bytes < TPU_V5E.vmem_bytes
+
+    def test_sweep_monotone_in_wq_memory(self):
+        """dse_sweep: total memory time never increases as w_Q shrinks
+        at fixed k (Table IV's BRAM-energy trend)."""
+        rows = {w: choose_tile(self._workload(), w_bits=w, k=1)
+                for w in (1, 2, 4, 8)}
+        mem = {w: r.memory_s for w, r in rows.items()}
+        assert mem[1] <= mem[2] <= mem[4] <= mem[8]
+
+    def test_dse_sweep_sorted_and_covers_slices(self):
+        rows = dse_sweep(self._workload(), w_bits=4)
+        assert len(rows) >= 4
+        times = [r.total_time_s for r in rows]
+        assert times == sorted(times)
+        assert {r.k for r in rows} >= {1, 2, 4}
+
+    def test_symmetric_tile_not_always_optimal(self):
+        """Paper Table II: optimal PE arrays are asymmetric because layer
+        dims are; same here for (bm, bk, bn)."""
+        choice = choose_tile(self._workload(), w_bits=4, k=4)
+        bm, bk, bn = choice.tile.as_tuple()
+        assert not (bm == bk == bn)  # asymmetric optimum (like Table II)

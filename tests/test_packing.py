@@ -1,0 +1,92 @@
+"""Bit-plane packing (core/packing.py): exact roundtrip properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.core.packing import PlaneFormat
+
+CASES = [(w, k) for w in (1, 2, 4, 8) for k in (1, 2, 4, 8) if k <= 8]
+
+
+@pytest.mark.parametrize("w_bits,k", CASES)
+def test_split_combine_roundtrip(w_bits, k, rng):
+    lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1) - 1
+    w = jnp.asarray(rng.integers(lo, hi + 1, (64, 16)), jnp.int32)
+    planes = packing.split_planes(w, w_bits, k)
+    assert planes.shape[0] == packing.num_planes(w_bits, k)
+    back = packing.combine_planes(planes, k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+@pytest.mark.parametrize("w_bits,k", CASES)
+@pytest.mark.parametrize("kdim", [1, 7, 8, 64, 129])
+def test_pack_unpack_roundtrip(w_bits, k, kdim, rng):
+    """pack_planes -> unpack_planes -> combine == original codes, for
+    aligned and ragged K."""
+    lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1) - 1
+    w = jnp.asarray(rng.integers(lo, hi + 1, (kdim, 8)), jnp.int32)
+    fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=kdim)
+    packed = packing.pack_planes(w, fmt, axis=-2)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (fmt.planes, fmt.packed_k, 8)
+    digits = packing.unpack_planes(packed, fmt, axis=-2)
+    back = packing.combine_planes(digits[:, :kdim, :], k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+@pytest.mark.parametrize("w_bits,k", CASES)
+def test_packed_bytes_proportional_to_wq(w_bits, k):
+    """The memory-footprint claim: packed bytes ~= K*N * P*k/8 — weight
+    word-length reduction is a proportionate byte reduction."""
+    kdim, n = 256, 128
+    fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=kdim)
+    nbytes = packing.packed_weight_bytes(kdim, n, w_bits, k)
+    expect = fmt.planes * (kdim // fmt.digits_per_byte) * n
+    assert nbytes == expect
+    # int8 baseline is kdim*n bytes; ratio == planes*k/8
+    assert nbytes / (kdim * n) == pytest.approx(fmt.planes * k / 8)
+
+
+def test_invalid_slice():
+    with pytest.raises(ValueError):
+        PlaneFormat(w_bits=4, k=3, k_dim=8).digits_per_byte
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    w_bits=st.sampled_from([1, 2, 4, 8]),
+    k=st.sampled_from([1, 2, 4, 8]),
+    kdim=st.integers(1, 200),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_property(w_bits, k, kdim, n, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1) - 1
+    w = jnp.asarray(rng.integers(lo, hi + 1, (kdim, n)), jnp.int32)
+    fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=kdim)
+    packed = packing.pack_planes(w, fmt, axis=-2)
+    digits = packing.unpack_planes(packed, fmt, axis=-2)
+    back = packing.combine_planes(digits[:, :kdim, :], k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    w_bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_top_plane_carries_sign(w_bits, seed):
+    """Digit planes: all but the top are unsigned; the top is signed."""
+    rng = np.random.default_rng(seed)
+    k = w_bits  # single plane: the plane IS the signed word
+    lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1) - 1
+    w = jnp.asarray(rng.integers(lo, hi + 1, (32, 4)), jnp.int32)
+    planes = packing.split_planes(w, w_bits, k)
+    np.testing.assert_array_equal(np.asarray(planes[0]), np.asarray(w))
+    # multi-plane: lower planes unsigned
+    if w_bits > 1:
+        planes2 = packing.split_planes(w, w_bits, 1)
+        assert np.asarray(planes2[:-1]).min() >= 0

@@ -1,0 +1,119 @@
+"""Logical-axis partitioning rules + mesh construction."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+from repro.nn import partitioning as part
+
+
+class TestLogicalToSpec:
+    def test_basic_mapping(self):
+        spec = part.logical_to_spec(("batch", "seq", "act_embed"),
+                                    part.TRAIN_RULES)
+        assert spec == P(("pod", "data"))
+
+    def test_mesh_drops_missing_axes(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        spec = part.logical_to_spec(("batch", None, "mlp"),
+                                    part.TRAIN_RULES, mesh)
+        assert spec == P("data", None, "model")
+
+    def test_duplicate_mesh_axis_first_wins(self):
+        rules = {"a": "model", "b": "model"}
+        spec = part.logical_to_spec(("a", "b"), rules)
+        assert spec == P("model")  # b dropped
+
+    def test_trailing_nones_trimmed(self):
+        spec = part.logical_to_spec(("embed", None, None), part.TRAIN_RULES)
+        assert spec == P(("pod", "data"))
+
+    def test_serve_rules_no_fsdp(self):
+        spec = part.logical_to_spec(("embed", "mlp"), part.SERVE_RULES)
+        assert spec == P(None, "model")
+
+    def test_kv_seq_sharded_at_serve_only(self):
+        assert part.SERVE_RULES["kv_seq"] == "model"
+        assert part.TRAIN_RULES["kv_seq"] is None
+
+    def test_row_parallel_serve_planes(self):
+        spec = part.logical_to_spec(("plane", "mlp_packed", "act_embed"),
+                                    part.SERVE_RULES)
+        assert spec == P(None, "model")
+
+
+class TestBatchRules:
+    def _mesh(self):
+        return jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_divisible_batch_keeps_axes(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        rules = steps_lib.batch_rules_for(part.TRAIN_RULES, 256, mesh)
+        assert rules["batch"] == ("data",)  # 'pod' missing on this mesh
+
+    def test_batch_one_replicates(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        rules = steps_lib.batch_rules_for(part.SERVE_RULES, 1, mesh)
+        # with data=1, sharding over it is allowed (divides); batch%1==0
+        assert rules["batch"] in (("data",), None)
+
+    def test_indivisible_batch_drops_axis(self):
+        from types import SimpleNamespace
+        fake = SimpleNamespace(axis_names=("data", "model"),
+                               devices=np.zeros((2, 1)))
+        rules = steps_lib.batch_rules_for(part.SERVE_RULES, 3, fake)
+        assert rules["batch"] is None
+
+
+class TestMesh:
+    def test_local_mesh(self):
+        mesh = mesh_lib.make_local_mesh()
+        assert set(mesh.axis_names) == {"data", "model"}
+        assert mesh.devices.size == len(jax.devices())
+
+    def test_chips_count(self):
+        mesh = mesh_lib.make_local_mesh()
+        assert mesh_lib.chips(mesh) == mesh.devices.size
+
+    def test_axes_tuples(self):
+        mesh = mesh_lib.make_local_mesh()
+        ax = mesh_lib.mesh_axes(mesh)
+        assert [a for a, _ in ax] == ["data", "model"]
+
+
+class TestTreeShardings:
+    def test_tree_map_over_axes_tree(self):
+        mesh = mesh_lib.make_local_mesh()
+        axes = {"w": ("embed", "mlp"), "b": ("mlp",), "scalar": ()}
+        sh = part.tree_shardings(axes, mesh, part.TRAIN_RULES)
+        # local mesh has a data axis; 'embed' maps ('pod','data')->('data',)
+        assert sh["w"].spec == P("data", "model")
+        assert sh["scalar"].spec == P()
+
+
+class TestConstrainNoMesh:
+    def test_constrain_is_noop_without_mesh(self, key):
+        import jax.numpy as jnp
+        x = jnp.ones((4, 4))
+        y = part.constrain(x, ("batch", "act_embed"))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestInputSpecs:
+    def test_train_specs(self):
+        from repro import configs
+        from repro.configs.shapes import SHAPES
+        api = configs.get("granite-8b")
+        specs = steps_lib.input_specs(api, SHAPES["train_4k"])
+        assert specs["tokens"].shape == (256, 4096)
+        assert specs["labels"].shape == (256, 4096)
+
+    def test_decode_specs_have_cache(self):
+        from repro import configs
+        from repro.configs.shapes import SHAPES
+        api = configs.get("granite-8b")
+        specs = steps_lib.input_specs(api, SHAPES["decode_32k"])
+        assert specs["tokens"].shape == (128, 1)
+        assert specs["cache"][0].shape[2] == 32768  # (L, B, S, KV, HD)

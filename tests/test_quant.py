@@ -1,0 +1,136 @@
+"""LSQ quantization (core/quant.py): Eq. 5 semantics + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+WBITS = [1, 2, 4, 8]
+
+
+class TestQRange:
+    @pytest.mark.parametrize("bits", WBITS)
+    def test_signed_range(self, bits):
+        qn, qp = quant.qrange(quant.weight_spec(bits))
+        assert qn == -(2 ** (bits - 1))
+        assert qp == 2 ** (bits - 1) - 1
+
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_unsigned_range(self, bits):
+        qn, qp = quant.qrange(quant.act_spec(bits))
+        assert qn == 0
+        assert qp == 2**bits - 1
+
+    def test_invalid_bits(self):
+        with pytest.raises(ValueError):
+            quant.QuantSpec(bits=0, signed=True)
+
+
+class TestQuantizeInt:
+    @pytest.mark.parametrize("bits", WBITS)
+    def test_codes_in_range(self, bits, rng):
+        v = jnp.asarray(rng.normal(0, 1, (64, 32)), jnp.float32)
+        spec = quant.weight_spec(bits)
+        gamma = quant.init_step_size(v, spec)
+        codes = quant.quantize_int(v, gamma, spec)
+        qn, qp = quant.qrange(spec)
+        assert codes.min() >= qn and codes.max() <= qp
+        assert codes.dtype == jnp.int32
+
+    def test_dequant_roundtrip_error_bounded(self, rng):
+        """|v - dequant(quant(v))| <= gamma/2 inside the clamp range."""
+        spec = quant.weight_spec(8)
+        v = jnp.asarray(rng.uniform(-0.1, 0.1, (256,)), jnp.float32)
+        gamma = jnp.asarray(0.002, jnp.float32)
+        codes = quant.quantize_int(v, gamma, spec)
+        back = quant.dequantize(codes, gamma, spec)
+        qn, qp = quant.qrange(spec)
+        inside = (v / gamma > qn) & (v / gamma < qp)
+        err = jnp.abs(v - back)
+        assert jnp.all(err[inside] <= gamma / 2 + 1e-7)
+
+    def test_channel_wise_gamma(self, rng):
+        spec = quant.weight_spec(4, channel_axis=-1)
+        v = jnp.asarray(rng.normal(0, 1, (32, 8)), jnp.float32)
+        gamma = quant.init_step_size(v, spec)
+        assert gamma.shape == (8,)
+        codes = quant.quantize_int(v, gamma, spec)
+        qn, qp = quant.qrange(spec)
+        assert codes.min() >= qn and codes.max() <= qp
+
+
+class TestFakeQuant:
+    def test_idempotent(self, rng):
+        """fake_quant(fake_quant(v)) == fake_quant(v)."""
+        spec = quant.weight_spec(4)
+        v = jnp.asarray(rng.normal(0, 1, (128,)), jnp.float32)
+        g = quant.init_step_size(v, spec)
+        q1 = quant.fake_quant(v, g, spec, train_gamma=False)
+        q2 = quant.fake_quant(q1, g, spec, train_gamma=False)
+        np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+    def test_grid_alignment(self, rng):
+        """Outputs are integer multiples of gamma."""
+        spec = quant.weight_spec(4)
+        v = jnp.asarray(rng.normal(0, 0.05, (128,)), jnp.float32)
+        g = jnp.asarray(0.01, jnp.float32)
+        q = quant.fake_quant(v, g, spec, train_gamma=False)
+        ratio = q / g
+        np.testing.assert_allclose(ratio, jnp.round(ratio), atol=1e-4)
+
+    def test_ste_gradient_identity_inside(self):
+        """d fake_quant / d v == 1 inside the clamp range (STE)."""
+        spec = quant.weight_spec(8)
+        g = jnp.asarray(0.01, jnp.float32)
+        grad = jax.grad(lambda v: quant.fake_quant(v, g, spec).sum())(
+            jnp.asarray([0.003, -0.002, 0.9, -0.9]))
+        # 0.9/0.01=90 < 127: inside; gradient 1.  (All four inside here.)
+        np.testing.assert_allclose(grad, jnp.ones(4), atol=1e-6)
+
+    def test_ste_gradient_zero_outside(self):
+        spec = quant.weight_spec(2)  # range [-2, 1]
+        g = jnp.asarray(0.01, jnp.float32)
+        grad = jax.grad(lambda v: quant.fake_quant(v, g, spec).sum())(
+            jnp.asarray([0.5, -0.5]))  # 50 >> 1: clamped
+        np.testing.assert_allclose(grad, jnp.zeros(2), atol=1e-6)
+
+    def test_gamma_gets_gradient(self):
+        spec = quant.weight_spec(4)
+        v = jnp.linspace(-0.2, 0.2, 64)
+        grad = jax.grad(
+            lambda g: (quant.fake_quant(v, g, spec) ** 2).sum())(
+            jnp.asarray(0.01, jnp.float32))
+        assert jnp.isfinite(grad) and grad != 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    bits=st.sampled_from(WBITS),
+    scale=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_int_matches_eq5(bits, scale, seed):
+    """Property: codes == clamp(round(v/gamma), Qn, Qp) exactly (Eq. 5)."""
+    rng = np.random.default_rng(seed)
+    v = rng.normal(0, scale, (32,)).astype(np.float32)
+    spec = quant.weight_spec(bits)
+    qn, qp = quant.qrange(spec)
+    gamma = np.float32(scale / 4)
+    codes = np.asarray(quant.quantize_int(jnp.asarray(v), gamma, spec))
+    expect = np.clip(np.round(v / gamma), qn, qp).astype(np.int32)
+    # round-half-to-even vs numpy round: both use banker's rounding
+    np.testing.assert_array_equal(codes, expect)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_act_quant_unsigned(bits, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(0, 1, (64,)).astype(np.float32)
+    spec = quant.act_spec(bits)
+    gamma = quant.init_step_size(jnp.abs(jnp.asarray(v)), spec)
+    codes = np.asarray(quant.quantize_int(jnp.asarray(v), gamma, spec))
+    assert codes.min() >= 0
+    assert codes.max() <= 2**bits - 1

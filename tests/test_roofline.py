@@ -1,0 +1,118 @@
+"""Roofline extraction (core/roofline.py): HLO parser + report math."""
+import pytest
+
+from repro.core import roofline as rl
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  p0 = f32[128,256]{1,0} parameter(0)
+  ar = f32[128,256]{1,0} all-reduce(p0), replica_groups=[4,16]<=[64], to_apply=add
+  ag = bf16[64,512]{1,0} all-gather(p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  rs = f32[32,256]{1,0} reduce-scatter(p0), replica_groups=[8,8]<=[64], to_apply=add
+  cp = u8[1024]{0} collective-permute(p0), source_target_pairs={{0,1}}
+  a2a = f32[16,16]{1,0} all-to-all(p0), replica_groups=[2,32]<=[64]
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_counts(self):
+        stats = rl.collective_wire_bytes(HLO)
+        assert stats.counts == {"all-reduce": 1, "all-gather": 1,
+                                "reduce-scatter": 1, "collective-permute": 1,
+                                "all-to-all": 1}
+
+    def test_all_reduce_ring_factor(self):
+        stats = rl.collective_wire_bytes(HLO)
+        buf = 128 * 256 * 4
+        assert stats.wire_bytes["all-reduce"] == pytest.approx(
+            2 * (15 / 16) * buf)
+
+    def test_all_gather_output_bytes(self):
+        stats = rl.collective_wire_bytes(HLO)
+        buf = 64 * 512 * 2  # bf16 output
+        assert stats.wire_bytes["all-gather"] == pytest.approx((3 / 4) * buf)
+
+    def test_permute_full_buffer(self):
+        stats = rl.collective_wire_bytes(HLO)
+        assert stats.wire_bytes["collective-permute"] == 1024
+
+    def test_degenerate_group_ignored(self):
+        text = ("x = f32[8]{0} all-reduce(y), replica_groups=[64,1]<=[64], "
+                "to_apply=add")
+        stats = rl.collective_wire_bytes(text)
+        assert stats.total_count == 0
+
+    def test_empty_text(self):
+        stats = rl.collective_wire_bytes("")
+        assert stats.total_wire_bytes == 0
+
+
+class TestReportMath:
+    def _report(self, c, m, coll):
+        return rl.RooflineReport(
+            arch="a", shape="s", mesh=(("data", 16), ("model", 16)),
+            flops_per_device=c * rl.TPU_V5E.peak_flops_bf16,
+            bytes_per_device=m * rl.TPU_V5E.hbm_bw,
+            wire_bytes_per_device=coll * rl.TPU_V5E.ici_bw_per_chip,
+            compute_s=c, memory_s=m, collective_s=coll,
+            model_flops=1e15)
+
+    def test_dominant_term(self):
+        assert self._report(1, 2, 3).dominant == "collective"
+        assert self._report(5, 2, 3).dominant == "compute"
+        assert self._report(1, 9, 3).dominant == "memory"
+
+    def test_bound_is_max(self):
+        assert self._report(1, 2, 3).bound_s == 3
+
+    def test_roofline_fraction_perfect(self):
+        """If model flops == HLO flops and compute dominates, fraction=1."""
+        chips = 256
+        c = 1.0
+        r = rl.RooflineReport(
+            arch="a", shape="s", mesh=(("data", 16), ("model", 16)),
+            flops_per_device=c * rl.TPU_V5E.peak_flops_bf16,
+            bytes_per_device=0, wire_bytes_per_device=0,
+            compute_s=c, memory_s=0, collective_s=0,
+            model_flops=chips * c * rl.TPU_V5E.peak_flops_bf16)
+        assert r.roofline_fraction == pytest.approx(1.0)
+        assert r.useful_flops_ratio == pytest.approx(1.0)
+
+    def test_hw_constants(self):
+        assert rl.TPU_V5E.peak_flops_bf16 == 197e12
+        assert rl.TPU_V5E.hbm_bw == 819e9
+        assert rl.TPU_V5E.ici_bw == 50e9
+
+
+class TestDryrunRecords:
+    """Validate the written dry-run JSONs (the §Dry-run artifact)."""
+
+    def _records(self):
+        import json, pathlib
+        d = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+        if not d.exists():
+            pytest.skip("dry-run sweep not yet executed")
+        return [json.loads(p.read_text()) for p in sorted(d.glob("*__pod1__baseline.json"))]
+
+    def test_all_cells_present(self):
+        recs = self._records()
+        if len(recs) < 40:
+            pytest.skip(f"only {len(recs)} cells recorded so far")
+        assert len(recs) == 40
+
+    def test_ok_cells_have_positive_terms(self):
+        for r in self._records():
+            if r["status"] != "ok":
+                continue
+            assert r["compute_s"] > 0
+            assert r["memory_s"] > 0
+            assert r["dominant"] in ("compute", "memory", "collective")
+
+    def test_skips_are_only_long500k_full_attention(self):
+        for r in self._records():
+            if r["status"] == "skipped":
+                assert r["shape"] == "long_500k"
+                assert r["arch"] not in ("mamba2-1.3b", "recurrentgemma-9b")
