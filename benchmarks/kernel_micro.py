@@ -3,8 +3,24 @@
 CPU wall-times are NOT TPU projections — they validate the harness and
 give the relative plane-count scaling; the TPU numbers live in the
 roofline tables (EXPERIMENTS.md §Roofline, from the compiled dry-run).
+
+Rows:
+  * ``bf16_matmul``            — dense fp baseline.
+  * ``mpmm_perplane_*``        — the seed's P-sequential-dot loop,
+                                 re-created inline as the speedup anchor.
+  * ``mpmm_xla_*``             — the fused single-contraction XLA path.
+  * ``mpmm_pallas_*``          — the pallas kernel (interpret off-TPU).
+  * ``epilogue_{fused,unfused}`` — BN+ReLU+residual inside the kernel
+                                 epilogue vs as separate XLA ops.
+
+Also writes ``BENCH_kernel.json`` next to the repo root so the perf
+trajectory is tracked PR over PR.
 """
 from __future__ import annotations
+
+import json
+import platform
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -14,8 +30,36 @@ from benchmarks.common import emit, time_call
 from repro.core import packing
 from repro.core.packing import PlaneFormat
 from repro.kernels.mpmm import ops
+from repro.kernels.mpmm.epilogue import EpilogueSpec
 
 M, K, N = 256, 1024, 1024
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_kernel.json"
+PALLAS_CONFIGS = ((4, 2), (8, 2))  # interpret mode is slow; keep it short
+
+
+def _perplane_loop(a, planes, gamma, colsum, fmt):
+    """The seed implementation: P sequential int8 dots + shift-add."""
+    digits = packing.unpack_planes(planes, fmt, axis=-2)
+    acc = None
+    for p in range(fmt.planes):
+        partial = jax.lax.dot_general(
+            a, digits[p], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        shifted = partial * (1 << (fmt.k * p))
+        acc = shifted if acc is None else acc + shifted
+    corrected = acc + 128 * colsum.astype(jnp.int32)
+    return corrected.astype(jnp.float32) * gamma.astype(jnp.float32)
+
+
+def _case(rng, w_bits, k):
+    lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1) - 1
+    w_int = jnp.asarray(rng.integers(lo, hi + 1, (K, N)), jnp.int32)
+    fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=K)
+    planes = packing.pack_planes(w_int, fmt, axis=-2)
+    gamma = jnp.full((1, N), 0.01, jnp.float32)
+    colsum = jnp.sum(w_int, axis=0, dtype=jnp.int32).reshape(1, N)
+    return planes, gamma, colsum, fmt
 
 
 def rows():
@@ -24,29 +68,85 @@ def rows():
     af = jnp.asarray(rng.normal(size=(M, K)), jnp.bfloat16)
     wf = jnp.asarray(rng.normal(size=(K, N)), jnp.bfloat16)
     out = []
+    record = {}
 
     bf16 = jax.jit(lambda x, w: x @ w)
     us = time_call(bf16, af, wf)
     out.append({"name": "micro/bf16_matmul", "us_per_call": us,
                 "derived": f"gflops={2*M*K*N/us/1e3:.1f}"})
+    record["bf16_matmul_us"] = us
 
     for w_bits, k in ((8, 8), (8, 2), (4, 4), (4, 2), (2, 2), (1, 1)):
-        lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1) - 1
-        w_int = jnp.asarray(rng.integers(lo, hi + 1, (K, N)), jnp.int32)
-        fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=K)
-        planes = packing.pack_planes(w_int, fmt, axis=-2)
-        gamma = jnp.full((1, N), 0.01, jnp.float32)
-        colsum = jnp.sum(w_int, axis=0, dtype=jnp.int32).reshape(1, N)
-        fn = jax.jit(lambda a_, p_, g_, c_: ops.mpmm(
-            a_, p_, g_, c_, fmt=fmt, impl="xla"))
-        us = time_call(fn, a, planes, gamma, colsum)
+        planes, gamma, colsum, fmt = _case(rng, w_bits, k)
+        tag = f"w{w_bits}_k{k}"
+
+        base = jax.jit(lambda a_, p_, g_, c_: _perplane_loop(
+            a_, p_, g_, c_, fmt))
+        us_base = time_call(base, a, planes, gamma, colsum)
         out.append({
-            "name": f"micro/mpmm_xla_w{w_bits}_k{k}",
-            "us_per_call": us,
+            "name": f"micro/mpmm_perplane_{tag}", "us_per_call": us_base,
+            "derived": f"planes={fmt.planes};seed_baseline",
+        })
+
+        fused = jax.jit(lambda a_, p_, g_, c_: ops.mpmm(
+            a_, p_, g_, c_, fmt=fmt, impl="xla"))
+        us_fused = time_call(fused, a, planes, gamma, colsum)
+        speedup = us_base / us_fused
+        out.append({
+            "name": f"micro/mpmm_xla_{tag}",
+            "us_per_call": us_fused,
             "derived": f"planes={fmt.planes};"
                        f"packed_MB={planes.size/2**20:.2f};"
-                       f"gops={2*M*K*N*fmt.planes/us/1e3:.1f}",
+                       f"gops={2*M*K*N*fmt.planes/us_fused/1e3:.1f};"
+                       f"speedup_vs_perplane={speedup:.2f}",
         })
+        record[f"mpmm_perplane_{tag}_us"] = us_base
+        record[f"mpmm_xla_{tag}_us"] = us_fused
+        record[f"speedup_xla_vs_perplane_{tag}"] = speedup
+
+        if (w_bits, k) in PALLAS_CONFIGS:
+            pal = jax.jit(lambda a_, p_, g_, c_: ops.mpmm(
+                a_, p_, g_, c_, fmt=fmt, impl="pallas"))
+            us_pal = time_call(pal, a, planes, gamma, colsum, n=5, warmup=1)
+            out.append({
+                "name": f"micro/mpmm_pallas_{tag}", "us_per_call": us_pal,
+                "derived": f"planes={fmt.planes};interpret_off_tpu",
+            })
+            record[f"mpmm_pallas_{tag}_us"] = us_pal
+
+    # Fused epilogue vs separate XLA post-ops (w4k2).
+    planes, gamma, colsum, fmt = _case(rng, 4, 2)
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, (1, N)), jnp.float32)
+    shift = jnp.asarray(rng.normal(0, 1, (1, N)), jnp.float32)
+    resid = jnp.asarray(rng.normal(0, 1, (M, N)), jnp.float32)
+    spec = EpilogueSpec(bn=True, relu=True, residual=True)
+
+    fused_epi = jax.jit(lambda a_, p_, g_, c_, s_, t_, r_: ops.mpmm(
+        a_, p_, g_, c_, s_, t_, r_, fmt=fmt, impl="xla", epilogue=spec))
+    us_f = time_call(fused_epi, a, planes, gamma, colsum, scale, shift, resid)
+
+    def unfused(a_, p_, g_, c_, s_, t_, r_):
+        y = ops.mpmm(a_, p_, g_, c_, fmt=fmt, impl="xla")
+        return jnp.maximum(y * s_ + t_ + r_, 0.0)
+    us_u = time_call(jax.jit(unfused), a, planes, gamma, colsum, scale,
+                     shift, resid)
+    out.append({"name": "micro/epilogue_fused_w4_k2", "us_per_call": us_f,
+                "derived": "bn+relu+residual_in_kernel"})
+    out.append({"name": "micro/epilogue_unfused_w4_k2", "us_per_call": us_u,
+                "derived": f"separate_xla_ops;fused_speedup={us_u/us_f:.2f}"})
+    record["epilogue_fused_w4_k2_us"] = us_f
+    record["epilogue_unfused_w4_k2_us"] = us_u
+
+    try:
+        BENCH_JSON.write_text(json.dumps({
+            "bench": "kernel_micro",
+            "shape": {"m": M, "k": K, "n": N},
+            "host": platform.machine(),
+            "backend": jax.default_backend(),
+            "metrics": record,
+        }, indent=2) + "\n")
+    except OSError:  # read-only checkout: CSV rows still printed
+        pass
     return out
 
 

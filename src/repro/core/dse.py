@@ -21,6 +21,7 @@ All candidates are enumerated exhaustively under the hardware constraints
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import math
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
@@ -37,6 +38,8 @@ __all__ = [
     "choose_tile",
     "dse_sweep",
     "DseChoice",
+    "autotune_tile",
+    "digit_cache_bytes",
 ]
 
 
@@ -87,10 +90,11 @@ def vmem_working_set(
     f = fmt.digits_per_byte
     act = tile.bm * tile.bk                      # int8
     wgt = p * _ceil(tile.bk, f) * tile.bn        # uint8 packed planes
+    dig = p * tile.bk * tile.bn                  # decoded int8 digit slot
     accs = (p if variant == "sa" else 1) * tile.bm * tile.bn * 4
     out = tile.bm * tile.bn * 4
     scales = 2 * tile.bn * 8                     # gamma + colsum blocks
-    return 2 * (act + wgt) + accs + out + scales  # 2x: double buffering
+    return 2 * (act + wgt) + dig + accs + out + scales  # 2x: double buffering
 
 
 def tile_utilization(g: Gemm, tile: TileCandidate) -> float:
@@ -205,6 +209,43 @@ def choose_tile(
         raise ValueError("no feasible tile under the VMEM budget")
     best.n_candidates = n_cand
     return best
+
+
+def digit_cache_bytes(k_dim: int, tile: TileCandidate, fmt: PlaneFormat) -> int:
+    """VMEM bytes of the full decoded digit strip for one N tile.
+
+    The kernel caches the uint8->int8 decode of every K block of the
+    current N tile (kernel.py): ceil(K/bk) slots of (bk, P*bn) int8.
+    """
+    slots = _ceil(k_dim, tile.bk)
+    return slots * tile.bk * fmt.planes * tile.bn
+
+
+@functools.lru_cache(maxsize=4096)
+def autotune_tile(
+    m: int,
+    k_dim: int,
+    n: int,
+    *,
+    w_bits: int,
+    k: int,
+    variant: str = "st",
+    hw: HW = TPU_V5E,
+    vmem_budget: Optional[float] = None,
+) -> TileCandidate:
+    """Per-layer tile selection from the paper's Eq. 1-3 cost model.
+
+    One GEMM's (M, K, N, w_Q, k) is scored against every tile candidate
+    with the same roofline used for whole-model DSE (``choose_tile``);
+    the in-process ``lru_cache`` keys on the problem shape so a serve
+    graph autotunes each distinct layer shape exactly once.  This
+    replaces the fixed 128^3 ``TileShape`` default: asymmetric layer
+    dims get asymmetric tiles, exactly the paper's Table II effect.
+    """
+    return choose_tile(
+        [Gemm("layer", m, k_dim, n)],
+        w_bits=w_bits, k=k, variant=variant, hw=hw, vmem_budget=vmem_budget,
+    ).tile
 
 
 def dse_sweep(

@@ -14,7 +14,21 @@ import threading
 
 _local = threading.local()
 
-__all__ = ["dryrun_unroll", "force_unroll", "scan_unroll_arg"]
+__all__ = ["dryrun_unroll", "force_unroll", "scan_unroll_arg",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Default ``interpret=`` for pallas kernels: False on TPU backends.
+
+    Every pallas call site (mpmm, flashattn) resolves ``interpret=None``
+    through this helper, so kernels compile to Mosaic on TPU and fall
+    back to the (slow, bit-exact) interpreter elsewhere — the seed's
+    hardcoded ``interpret=True`` silently interpreted on real TPUs.
+    """
+    import jax
+
+    return jax.default_backend() != "tpu"
 
 
 def dryrun_unroll() -> bool:

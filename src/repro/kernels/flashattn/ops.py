@@ -12,16 +12,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import flags
 from repro.kernels.flashattn import kernel as _kernel
 
 __all__ = ["flash_attention"]
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except RuntimeError:  # pragma: no cover
-        return False
 
 
 def flash_attention(
@@ -39,7 +33,7 @@ def flash_attention(
 ) -> jax.Array:
     b, sq, h, d = q.shape
     sk, kv = k.shape[1], k.shape[2]
-    interp = (not _on_tpu()) if interpret is None else interpret
+    interp = flags.default_interpret() if interpret is None else interpret
 
     if kv != h:  # GQA: replicate each kv head over its q-head group
         group = h // kv

@@ -1,0 +1,96 @@
+"""Fused epilogue of the mixed-precision matmul (DESIGN.md §2.3).
+
+On the FPGA the accumulator exits the PE array straight into the
+post-processing pipeline (BN, activation, shortcut add) without touching
+DRAM.  The TPU analogue: the int32 accumulator tile is dequantized and
+post-processed **inside the kernel epilogue** while still in VMEM, so
+BN + ReLU + residual-add cost zero extra HBM round-trips.
+
+``EpilogueSpec`` is the static description threaded through ``ops.mpmm``
+(it is a jit-static argument); the matching runtime operands are
+
+  * ``scale``/``shift``: f32 (1, N) — folded inference BatchNorm
+    (scale = bn_scale * rsqrt(var + eps), shift = bn_bias - mean * scale)
+    or a plain bias (scale = 1, shift = b).
+  * ``residual``: (..., N) float — the shortcut branch, added after BN.
+
+``apply`` is the single source of truth for the op ORDER — ref, xla and
+the pallas kernel all run dequant → BN → residual → ReLU in f32 so the
+three implementations stay bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["EpilogueSpec", "apply", "validate_operands", "resolve_out_dtype"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """Static (hashable) description of the fused epilogue.
+
+    Attributes:
+      bn:       apply ``y * scale + shift`` (folded BN or bias).
+      relu:     clamp at zero (after the residual add, as in ResNet).
+      residual: add the shortcut tensor before the ReLU.
+      out_dtype: optional output dtype override; ``None`` keeps the
+        ``out_dtype`` passed to ``ops.mpmm``.
+    """
+
+    bn: bool = False
+    relu: bool = False
+    residual: bool = False
+    out_dtype: Optional[Any] = None
+
+
+def resolve_out_dtype(spec: Optional[EpilogueSpec], default):
+    """The one place the ``EpilogueSpec.out_dtype`` override is decided —
+    ref/xla/pallas/nn all resolve through here so they cannot drift."""
+    if spec is not None and spec.out_dtype is not None:
+        return spec.out_dtype
+    return default
+
+
+def apply(
+    y: jax.Array,
+    spec: Optional[EpilogueSpec],
+    scale: Optional[jax.Array] = None,
+    shift: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Post-dequant epilogue in f32; shared by ref and the XLA impl.
+
+    ``y`` is the dequantized f32 (..., N) tensor (gamma already applied).
+    The pallas kernel inlines the same ops in the same order.
+    """
+    if spec is None:
+        return y
+    if spec.bn:
+        y = y * scale.astype(jnp.float32) + shift.astype(jnp.float32)
+    if spec.residual:
+        y = y + residual.astype(jnp.float32)
+    if spec.relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def validate_operands(
+    spec: Optional[EpilogueSpec],
+    scale: Optional[jax.Array],
+    shift: Optional[jax.Array],
+    residual: Optional[jax.Array],
+) -> None:
+    if spec is None:
+        if scale is not None or shift is not None or residual is not None:
+            raise ValueError("epilogue operands given without an EpilogueSpec")
+        return
+    if spec.bn and (scale is None or shift is None):
+        raise ValueError("EpilogueSpec.bn=True needs scale and shift")
+    if not spec.bn and (scale is not None or shift is not None):
+        raise ValueError("scale/shift given but EpilogueSpec.bn=False")
+    if spec.residual != (residual is not None):
+        raise ValueError("EpilogueSpec.residual mismatch with residual arg")

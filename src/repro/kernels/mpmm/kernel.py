@@ -6,16 +6,29 @@ Hardware mapping (DESIGN.md §2):
     loop-nest tiling the paper's DSE optimizes (Eq. 1-3) becomes the VMEM
     tile choice here.
   * PPG operand slice k      ->  digit-plane width of the packed weights;
-    each plane is one int8 MXU pass.
+    all P planes feed ONE MXU contraction per grid step — the plane axis
+    is folded into the N axis of the dot and the 2^{kp} shifts applied
+    post-dot (``plane_shift_weights``), so a step costs one
+    (bm, bk) @ (bk, P*bn) int8 pass instead of P sequential passes.
   * Sum-Together adder tree  ->  one int32 accumulator tile, shift-add
     across planes (`variant='st'`).
   * Sum-Apart registers      ->  one accumulator tile per plane, combined
     in the epilogue (`variant='sa'`) -- P× the accumulator VMEM, exactly
     the register overhead the paper charges SA with.
+  * Post-processing pipeline ->  the fused epilogue (epilogue.py): BN /
+    residual / ReLU run on the accumulator tile in VMEM, no HBM round
+    trip for the int32 partials.
 
-Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary") so the accumulator
-scratch carries across K steps.  Weights arrive as uint8 packed digit
-planes (P, K/(8//k), N); they are unpacked to int8 digits in VMEM --
+Grid: (N/bn, M/bm, K/bk) — N-tiles OUTERMOST so the uint8->int8 digit
+decode of a weight block can be cached in a VMEM scratch and reused
+across all M tiles: block (j, kk) is decoded once at the first M step
+(i == 0) and read back from the cache for i > 0, i.e. once per (j, k)
+rather than once per grid step.  K stays innermost ("arbitrary") so the
+accumulator scratch carries across K steps.  ``dimension_semantics``
+marks j parallel; i is "arbitrary" while the digit cache is on (its
+decode-at-i==0 ordering must not be split across Megacore cores) and
+parallel otherwise.  Weights arrive as uint8 packed digit planes
+(P, K/(8//k), N);
 HBM->VMEM traffic is w_Q/8 of an int8 weight buffer, which is what turns
 word-length reduction into a memory-roofline win on TPU.
 
@@ -25,23 +38,27 @@ correction act_zero * colsum(W) is folded into the epilogue.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.packing import PlaneFormat
+from repro.core import flags
+from repro.core.packing import PlaneFormat, plane_shift_weights
+from repro.kernels.mpmm import epilogue as _epi
+from repro.kernels.mpmm.epilogue import EpilogueSpec
 
 __all__ = ["mpmm_pallas"]
 
 
-def _unpack_block(w_u8: jax.Array, fmt: PlaneFormat, bk: int) -> jax.Array:
-    """uint8 (P, bkp, bn) -> int8 digit planes (P, bk, bn) inside the kernel.
+def _decode_block(w_u8: jax.Array, fmt: PlaneFormat, bk: int) -> jax.Array:
+    """uint8 (P, bkp, bn) -> int8 digits (bk, P*bn), plane-major columns.
 
     Digits are interleaved 8//k per byte along K (core/packing.pack_bits):
-    K index = byte_index * f + field_index.
+    K index = byte_index * f + field_index.  Plane p occupies columns
+    [p*bn, (p+1)*bn) of the result, ready for the fused contraction.
     """
     f = fmt.digits_per_byte
     k = fmt.k
@@ -56,65 +73,93 @@ def _unpack_block(w_u8: jax.Array, fmt: PlaneFormat, bk: int) -> jax.Array:
     top = digits[-1] & ((1 << top_bits) - 1)
     top = jnp.where(top >= sign_bit, top - (1 << top_bits), top)
     digits = jnp.concatenate([digits[:-1], top[None]], axis=0)
-    return digits.astype(jnp.int8)
+    # (P, bk, bn) -> (bk, P*bn): fold the plane axis into N for the dot.
+    return jnp.concatenate(
+        [digits[p] for p in range(fmt.planes)], axis=-1
+    ).astype(jnp.int8)
 
 
-def _mpmm_kernel_st(
-    a_ref, w_ref, gamma_ref, colsum_ref, out_ref, acc_ref,
-    *, fmt: PlaneFormat, act_zero: int, n_k: int, bk: int, out_dtype,
+def _fused_epilogue(acc, gamma_ref, colsum_ref, epi_refs, out_ref,
+                    *, act_zero, epilogue: Optional[EpilogueSpec], out_dtype):
+    """Dequant then epilogue.apply — the shared op order, not a copy."""
+    corrected = acc + act_zero * colsum_ref[...].astype(jnp.int32)
+    y = corrected.astype(jnp.float32) * gamma_ref[...].astype(jnp.float32)
+    y = _epi.apply(
+        y, epilogue,
+        scale=epi_refs["scale"][...] if "scale" in epi_refs else None,
+        shift=epi_refs["shift"][...] if "shift" in epi_refs else None,
+        residual=(epi_refs["residual"][...] if "residual" in epi_refs
+                  else None),
+    )
+    out_ref[...] = y.astype(out_dtype)
+
+
+def _mpmm_kernel(
+    a_ref, w_ref, gamma_ref, colsum_ref, *rest,
+    fmt: PlaneFormat, act_zero: int, n_k: int, bk: int, out_dtype,
+    variant: str, epilogue: Optional[EpilogueSpec], cache_digits: bool,
 ):
-    """Sum-Together: single int32 accumulator, shift-add over planes."""
+    """One grid step of the fused mpmm.  Grid order is (j, i, kk)."""
+    n_epi = (2 if epilogue is not None and epilogue.bn else 0) + (
+        1 if epilogue is not None and epilogue.residual else 0)
+    epi_in = rest[:n_epi]
+    out_ref = rest[n_epi]
+    acc_ref = rest[n_epi + 1]
+    dig_ref = rest[n_epi + 2] if cache_digits else None
+    epi_refs = {}
+    if epilogue is not None and epilogue.bn:
+        epi_refs["scale"], epi_refs["shift"] = epi_in[0], epi_in[1]
+    if epilogue is not None and epilogue.residual:
+        epi_refs["residual"] = epi_in[-1]
 
-    @pl.when(pl.program_id(2) == 0)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...]  # (bm, bk) int8
-    digits = _unpack_block(w_ref[...], fmt, bk)  # (P, bk, bn) int8
-    acc = acc_ref[...]
-    for p in range(fmt.planes):
-        partial = jax.lax.dot_general(
-            a, digits[p], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        acc = acc + partial * (1 << (fmt.k * p))  # the adder tree
-    acc_ref[...] = acc
+    # Decode the packed weight block.  With the cache, slot kk is filled
+    # on the first M tile (i == 0) of each j and reused for every later
+    # M tile: one decode per (j, kk) weight block.  Without it (VMEM too
+    # tight for the strip) the block is decoded in registers per step —
+    # no scratch round-trip.
+    if cache_digits:
+        @pl.when(pl.program_id(1) == 0)
+        def _decode():
+            dig_ref[kk] = _decode_block(w_ref[...], fmt, bk)
+        digits = dig_ref[kk]           # (bk, P*bn) int8
+    else:
+        digits = _decode_block(w_ref[...], fmt, bk)
 
-    @pl.when(pl.program_id(2) == n_k - 1)
+    a = a_ref[...]                     # (bm, bk) int8
+    # The fused contraction: all P planes in one MXU pass.
+    partial = jax.lax.dot_general(
+        a, digits, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                   # (bm, P*bn) int32
+    bm, bn = acc_ref.shape[-2], acc_ref.shape[-1]
+    part3 = partial.reshape(bm, fmt.planes, bn)
+
+    if variant == "st":
+        # Sum-Together: shift-add over planes into one accumulator.
+        shifts = plane_shift_weights(fmt)
+        acc_ref[...] += jnp.sum(part3 * shifts[None, :, None], axis=1)
+    else:
+        # Sum-Apart: partial sums stay apart, one accumulator per plane.
+        for p in range(fmt.planes):
+            acc_ref[p] += part3[:, p, :]
+
+    @pl.when(kk == n_k - 1)
     def _epilogue():
-        corrected = acc_ref[...] + act_zero * colsum_ref[...].astype(jnp.int32)
-        out_ref[...] = (
-            corrected.astype(jnp.float32) * gamma_ref[...].astype(jnp.float32)
-        ).astype(out_dtype)
-
-
-def _mpmm_kernel_sa(
-    a_ref, w_ref, gamma_ref, colsum_ref, out_ref, acc_ref,
-    *, fmt: PlaneFormat, act_zero: int, n_k: int, bk: int, out_dtype,
-):
-    """Sum-Apart: one accumulator per plane (P× VMEM), combined last."""
-
-    @pl.when(pl.program_id(2) == 0)
-    def _zero():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    a = a_ref[...]
-    digits = _unpack_block(w_ref[...], fmt, bk)
-    for p in range(fmt.planes):  # partial sums stay apart
-        acc_ref[p, :, :] += jax.lax.dot_general(
-            a, digits[p], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-
-    @pl.when(pl.program_id(2) == n_k - 1)
-    def _epilogue():
-        acc = jnp.zeros(out_ref.shape, jnp.int32)
-        for p in range(fmt.planes):  # deferred shift-add
-            acc = acc + acc_ref[p, :, :] * (1 << (fmt.k * p))
-        corrected = acc + act_zero * colsum_ref[...].astype(jnp.int32)
-        out_ref[...] = (
-            corrected.astype(jnp.float32) * gamma_ref[...].astype(jnp.float32)
-        ).astype(out_dtype)
+        if variant == "st":
+            acc = acc_ref[...]
+        else:
+            acc = jnp.zeros((bm, bn), jnp.int32)
+            for p in range(fmt.planes):  # deferred shift-add
+                acc = acc + acc_ref[p] * (1 << (fmt.k * p))
+        _fused_epilogue(acc, gamma_ref, colsum_ref, epi_refs, out_ref,
+                        act_zero=act_zero, epilogue=epilogue,
+                        out_dtype=out_dtype)
 
 
 def mpmm_pallas(
@@ -128,9 +173,20 @@ def mpmm_pallas(
     tile: Tuple[int, int, int],
     variant: str = "st",
     out_dtype=jnp.float32,
-    interpret: bool = True,
+    epilogue: Optional[EpilogueSpec] = None,
+    scale: Optional[jax.Array] = None,      # f32 (1, N) when epilogue.bn
+    shift: Optional[jax.Array] = None,      # f32 (1, N) when epilogue.bn
+    residual: Optional[jax.Array] = None,   # (M, N) when epilogue.residual
+    cache_digits: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Tiled pallas_call. Caller guarantees divisibility by the tile."""
+    """Tiled pallas_call. Caller guarantees divisibility by the tile.
+
+    ``interpret=None`` auto-detects the backend (core/flags
+    ``default_interpret``): Mosaic on TPU, interpreter elsewhere.
+    ``cache_digits`` keeps the decoded int8 digit strip for the current
+    N tile in VMEM (K/bk slots); disable when the strip would not fit.
+    """
     m, kdim = a_biased.shape
     p, kp, n = packed.shape
     bm, bk, bn = tile
@@ -139,24 +195,54 @@ def mpmm_pallas(
     bkp = bk // f
     assert m % bm == 0 and kdim % bk == 0 and n % bn == 0, (a_biased.shape, packed.shape, tile)
     assert kp * f == kdim, (kp, f, kdim)
-    grid = (m // bm, n // bn, kdim // bk)
+    n_i, n_j, n_k = m // bm, n // bn, kdim // bk
+    grid = (n_j, n_i, n_k)  # N outermost (digit-cache reuse), K innermost
 
-    kern = _mpmm_kernel_st if variant == "st" else _mpmm_kernel_sa
+    if interpret is None:
+        interpret = flags.default_interpret()
+    if out_dtype is None:
+        out_dtype = jnp.float32
+    out_dtype = _epi.resolve_out_dtype(epilogue, out_dtype)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda j, i, kk: (i, kk)),
+        pl.BlockSpec((p, bkp, bn), lambda j, i, kk: (0, kk, j)),
+        pl.BlockSpec((1, bn), lambda j, i, kk: (0, j)),
+        pl.BlockSpec((1, bn), lambda j, i, kk: (0, j)),
+    ]
+    operands = [a_biased, packed, gamma, colsum]
+    if epilogue is not None and epilogue.bn:
+        in_specs += [pl.BlockSpec((1, bn), lambda j, i, kk: (0, j))] * 2
+        operands += [scale, shift]
+    if epilogue is not None and epilogue.residual:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)))
+        operands.append(residual)
+
     acc_shape = (bm, bn) if variant == "st" else (p, bm, bn)
+    scratch = [pltpu.VMEM(acc_shape, jnp.int32)]
+    if cache_digits:
+        scratch.append(pltpu.VMEM((n_k, bk, p * bn), jnp.int8))
 
     return pl.pallas_call(
         functools.partial(
-            kern, fmt=fmt, act_zero=act_zero, n_k=grid[2], bk=bk, out_dtype=out_dtype
+            _mpmm_kernel, fmt=fmt, act_zero=act_zero, n_k=n_k, bk=bk,
+            out_dtype=out_dtype, variant=variant, epilogue=epilogue,
+            cache_digits=cache_digits,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((p, bkp, bn), lambda i, j, kk: (0, kk, j)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM(acc_shape, jnp.int32)],
+        scratch_shapes=scratch,
+        compiler_params=pltpu.TPUCompilerParams(
+            # The digit cache makes M steps order-dependent (decode at
+            # i == 0, reuse at i > 0), so i must be "arbitrary" while the
+            # cache is on — a Megacore split of a "parallel" i would hand
+            # one core an i-range with no decode step.  Without the
+            # cache, both N and M tiles are freely partitionable.
+            dimension_semantics=(
+                ("parallel", "arbitrary", "arbitrary") if cache_digits
+                else ("parallel", "parallel", "arbitrary")),
+        ),
         interpret=interpret,
-    )(a_biased, packed, gamma, colsum)
+    )(*operands)

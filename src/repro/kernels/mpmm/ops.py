@@ -2,13 +2,20 @@
 
 Three implementations, all bit-exact to `ref.mpmm_ref`:
 
-  * ``pallas``: the TPU kernel (kernel.py).  interpret=True on CPU.
-  * ``xla``:    per-plane int8 dot_general + shift-add, weights unpacked
-                from the same uint8 buffers.  This is the path the
-                multi-pod dry-run lowers: the packed planes appear as real
-                HBM buffers (memory term ∝ w_Q/8) and each plane is one
-                int8 contraction (compute term ∝ ceil(w_Q/k)).
+  * ``pallas``: the TPU kernel (kernel.py): one fused contraction per
+                grid step with the plane axis folded into N, decoded
+                digits cached per N tile, and the epilogue (BN / ReLU /
+                residual) fused into the K-final step.  interpret=True
+                off-TPU (core/flags.default_interpret).
+  * ``xla``:    one int8 contraction against weights recombined in-graph
+                from the packed digit planes (a disjoint-bit-field OR —
+                the ST adder tree folded into the operand).  The packed
+                planes remain the real HBM buffers (memory term ∝
+                w_Q/8); the multi-pod dry-run lowers this path.
   * ``auto``:   pallas on TPU, xla elsewhere.
+
+When ``tile`` is None the pallas tile comes from the paper's Eq. 1-3
+cost model (core/dse.autotune_tile), per layer shape, cached in-process.
 
 Weight preparation (``prepare_weights``) happens once at deployment —
 the FPGA analogue is loading a new CNN's weights without re-synthesizing
@@ -23,19 +30,29 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import dse as _dse
+from repro.core import flags as _flags
 from repro.core import packing, quant
 from repro.core.packing import PlaneFormat
+from repro.kernels.mpmm import epilogue as _epi
 from repro.kernels.mpmm import kernel as _kernel
 from repro.kernels.mpmm import ref as _ref
+from repro.kernels.mpmm.epilogue import EpilogueSpec
 
 __all__ = [
     "TileShape",
+    "EpilogueSpec",
     "MpmmParams",
     "quantize_activations",
     "prepare_weights",
     "mpmm",
     "mpmm_packed",
+    "autotune_tile",
 ]
+
+# Decoded-digit strips larger than this fall back to per-step decode in
+# the kernel (kernel.py cache_digits=False); see DESIGN.md §2.2.
+DIGIT_CACHE_BUDGET_BYTES = 4 * 2**20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +65,18 @@ class TileShape:
 
     def as_tuple(self) -> Tuple[int, int, int]:
         return (self.bm, self.bk, self.bn)
+
+
+def autotune_tile(
+    m: int, kdim: int, n: int, *, w_bits: int, k: int, variant: str = "st"
+) -> TileShape:
+    """DSE-driven per-layer tile (DESIGN.md §4).
+
+    Thin TileShape view over ``core.dse.autotune_tile``, which memoizes
+    per problem shape — no second cache here.
+    """
+    cand = _dse.autotune_tile(m, kdim, n, w_bits=w_bits, k=k, variant=variant)
+    return TileShape(*cand.as_tuple())
 
 
 @jax.tree_util.register_pytree_node_class
@@ -81,12 +110,22 @@ class MpmmParams:
 
 
 def quantize_activations(
-    x: jax.Array, gamma_a: jax.Array, a_bits: int = 8
+    x: jax.Array, gamma_a: jax.Array, a_bits: int = 8, signed: bool = False
 ) -> jax.Array:
-    """float -> biased int8 codes (u - 2^{a_bits-1}), u unsigned per Eq. 5."""
-    qp = 2**a_bits - 1
-    u = jnp.clip(jnp.round(x / gamma_a), 0, qp)
-    return (u - 2 ** (a_bits - 1)).astype(jnp.int8)
+    """float -> int8 activation codes.
+
+    Default (paper Eq. 5): unsigned codes u in [0, 2^a) stored biased
+    (u - 2^{a-1}) so the MXU sees a signed operand; pair with
+    ``act_zero = 2^{a-1}``.  ``signed=True`` emits symmetric signed
+    codes in [-2^{a-1}, 2^{a-1}) with ``act_zero = 0`` — for inputs
+    that straddle zero (e.g. mean-normalized images at a CNN stem),
+    where unsigned clamping would destroy every negative value.
+    """
+    half = 2 ** (a_bits - 1)
+    if signed:
+        return jnp.clip(jnp.round(x / gamma_a), -half, half - 1).astype(jnp.int8)
+    u = jnp.clip(jnp.round(x / gamma_a), 0, 2 * half - 1)
+    return (u - half).astype(jnp.int8)
 
 
 def prepare_weights(
@@ -127,6 +166,32 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, pw)
 
 
+def combined_int8_weights(planes_u8: jax.Array, fmt: PlaneFormat) -> jax.Array:
+    """Packed digit planes (P, Kp, N) uint8 -> W_int (K, N) int8, in-graph.
+
+    The planes are disjoint k-bit fields of the w_Q-bit two's-complement
+    code, so recombination is a byte-level OR of shifted fields followed
+    by one arithmetic sign-extension — the entire ST adder tree folded
+    into the weight operand at zero dot cost.  Bit-exact to
+    ``packing.combine_planes(unpack_planes(...))`` for every w_Q <= 8.
+    """
+    f = fmt.digits_per_byte
+    k = fmt.k
+    mask = jnp.uint8((1 << k) - 1)
+    parts = [(planes_u8 >> jnp.uint8(k * i)) & mask for i in range(f)]
+    kp, n = planes_u8.shape[-2], planes_u8.shape[-1]
+    # (P, Kp, f, N) -> (P, K_padded, N): field index minor within a byte.
+    dig = jnp.stack(parts, axis=-2).reshape(fmt.planes, kp * f, n)
+    w = dig[0]
+    for p in range(1, fmt.planes):
+        w = w | (dig[p] << jnp.uint8(k * p))
+    w = w[: fmt.k_dim].astype(jnp.int8)  # drop K packing pad; reinterpret
+    if fmt.signed and fmt.w_bits < 8:
+        sh = jnp.int8(8 - fmt.w_bits)
+        w = jax.lax.shift_right_arithmetic(jax.lax.shift_left(w, sh), sh)
+    return w
+
+
 def _xla_impl(
     a_biased: jax.Array,
     planes_u8: jax.Array,
@@ -135,37 +200,46 @@ def _xla_impl(
     fmt: PlaneFormat,
     act_zero: int,
     out_dtype,
+    epilogue: Optional[EpilogueSpec] = None,
+    scale: Optional[jax.Array] = None,
+    shift: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Per-plane int8 contraction + shift-add (the ST adder tree in XLA)."""
-    digits = packing.unpack_planes(planes_u8, fmt, axis=-2)  # (P, K, N) int8
-    acc = None
-    for p in range(fmt.planes):
-        partial = jax.lax.dot_general(
-            a_biased, digits[p], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        shifted = partial * (1 << (fmt.k * p))
-        acc = shifted if acc is None else acc + shifted
+    """Single fused int8 contraction against recombined weights.
+
+    Replaces the seed's P sequential per-plane dots: the shift-add moves
+    into the operand (``combined_int8_weights``), so compute cost is one
+    int8 GEMM regardless of the plane count, while the packed planes
+    stay the HBM-resident buffers (memory term ∝ w_Q/8 unchanged).
+    """
+    w8 = combined_int8_weights(planes_u8, fmt)  # (K, N) int8
+    acc = jax.lax.dot_general(
+        a_biased, w8, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
     corrected = acc + act_zero * colsum.astype(jnp.int32)
-    return (corrected.astype(jnp.float32) * gamma.astype(jnp.float32)).astype(out_dtype)
+    y = corrected.astype(jnp.float32) * gamma.astype(jnp.float32)
+    y = _epi.apply(y, epilogue, scale, shift, residual)
+    return y.astype(_epi.resolve_out_dtype(epilogue, out_dtype))
 
 
 def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except RuntimeError:  # pragma: no cover
-        return False
+    return not _flags.default_interpret()
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("fmt", "act_zero", "tile", "variant", "impl", "out_dtype"),
+    static_argnames=("fmt", "act_zero", "tile", "variant", "impl",
+                     "out_dtype", "epilogue"),
 )
 def mpmm(
     a_biased: jax.Array,
     planes: jax.Array,
     gamma: jax.Array,
     colsum: jax.Array,
+    scale: Optional[jax.Array] = None,
+    shift: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
     *,
     fmt: PlaneFormat,
     act_zero: int = 128,
@@ -173,25 +247,34 @@ def mpmm(
     variant: str = "st",
     impl: str = "auto",
     out_dtype=jnp.float32,
+    epilogue: Optional[EpilogueSpec] = None,
 ) -> jax.Array:
-    """y[..., N] = gamma * ((a_biased + act_zero) @ W_int).
+    """y[..., N] = epilogue(gamma * ((a_biased + act_zero) @ W_int)).
 
     a_biased: int8 (..., K); planes: uint8 (P, Kp, N); gamma/colsum (1, N).
+    scale/shift: f32 (1, N) when ``epilogue.bn``; residual: (..., N) with
+    the same leading shape as ``a_biased`` when ``epilogue.residual``.
+    ``tile=None`` autotunes (bm, bk, bn) from the DSE cost model.
     """
+    _epi.validate_operands(epilogue, scale, shift, residual)
     lead = a_biased.shape[:-1]
     kdim = a_biased.shape[-1]
     n = planes.shape[-1]
     a2 = a_biased.reshape(-1, kdim)
+    res2 = residual.reshape(-1, n) if residual is not None else None
 
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "xla"
 
     if impl == "xla":
-        out = _xla_impl(a2, planes, gamma, colsum, fmt, act_zero, out_dtype)
+        out = _xla_impl(a2, planes, gamma, colsum, fmt, act_zero, out_dtype,
+                        epilogue, scale, shift, res2)
         return out.reshape(*lead, n)
 
-    # pallas: pad every dim to the tile, then slice back.
-    t = tile or TileShape()
+    # pallas: pick a tile (DSE autotuner unless pinned), pad every dim to
+    # it, then slice back.
+    t = tile or autotune_tile(a2.shape[0], kdim, n, w_bits=fmt.w_bits,
+                              k=fmt.k, variant=variant)
     f = fmt.digits_per_byte
     bm, bk, bn = t.bm, max(t.bk, f), t.bn
     bk = bk + (-bk) % f
@@ -200,12 +283,20 @@ def mpmm(
     planes_p = _pad_to(_pad_to(planes, 1, bk // f), 2, bn)
     gamma_p = _pad_to(gamma, 1, bn)
     colsum_p = _pad_to(colsum, 1, bn)
+    scale_p = _pad_to(scale, 1, bn) if scale is not None else None
+    shift_p = _pad_to(shift, 1, bn) if shift is not None else None
+    res_p = (_pad_to(_pad_to(res2, 0, bm), 1, bn)
+             if res2 is not None else None)
     fmt_p = PlaneFormat(w_bits=fmt.w_bits, k=fmt.k,
                         k_dim=planes_p.shape[1] * f, signed=fmt.signed)
+    tile_cand = _dse.TileCandidate(bm, bk, bn)
+    cache = (_dse.digit_cache_bytes(fmt_p.k_dim, tile_cand, fmt_p)
+             <= DIGIT_CACHE_BUDGET_BYTES)
     out = _kernel.mpmm_pallas(
         a_p, planes_p, gamma_p, colsum_p,
         fmt=fmt_p, act_zero=act_zero, tile=(bm, bk, bn), variant=variant,
-        out_dtype=out_dtype, interpret=not _on_tpu(),
+        out_dtype=out_dtype, epilogue=epilogue, scale=scale_p,
+        shift=shift_p, residual=res_p, cache_digits=cache,
     )
     return out[: a2.shape[0], :n].reshape(*lead, n)
 
@@ -220,11 +311,16 @@ def mpmm_packed(
     variant: str = "st",
     impl: str = "auto",
     out_dtype=jnp.float32,
+    epilogue: Optional[EpilogueSpec] = None,
+    scale: Optional[jax.Array] = None,
+    shift: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Float-in/float-out convenience: quantize acts, run mpmm, dequant."""
     a = quantize_activations(x, gamma_a, a_bits)
     return mpmm(
         a, params.planes, params.gamma, params.colsum,
+        scale, shift, residual,
         fmt=params.fmt, act_zero=params.act_zero, tile=tile,
-        variant=variant, impl=impl, out_dtype=out_dtype,
+        variant=variant, impl=impl, out_dtype=out_dtype, epilogue=epilogue,
     )

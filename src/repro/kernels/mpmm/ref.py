@@ -16,11 +16,16 @@ where colsum(W)[n] = sum_k W_int[k, n] is precomputed once per weight
 """
 from __future__ import annotations
 
+import functools
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import packing
 from repro.core.packing import PlaneFormat
+from repro.kernels.mpmm import epilogue as _epilogue
+from repro.kernels.mpmm.epilogue import EpilogueSpec
 
 __all__ = ["mpmm_ref", "mpmm_ref_codes", "colsum_from_packed"]
 
@@ -55,6 +60,11 @@ def mpmm_ref_codes(
     )
 
 
+@functools.partial(
+    jax.jit,
+    static_argnums=(2,),
+    static_argnames=("act_zero", "out_dtype", "epilogue"),
+)
 def mpmm_ref(
     a_biased: jax.Array,
     packed: jax.Array,
@@ -63,11 +73,22 @@ def mpmm_ref(
     *,
     act_zero: int,
     out_dtype=jnp.float32,
+    epilogue: Optional[EpilogueSpec] = None,
+    scale: Optional[jax.Array] = None,
+    shift: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Dequantized output: gamma * (u_int @ W_int).
+    """Dequantized output: epilogue(gamma * (u_int @ W_int)).
 
     gamma: scalar or [N] (per-output-channel, the paper's channel-wise case)
            -- the *product* gamma_a * gamma_w.
+    The optional fused epilogue (BN / residual / ReLU, epilogue.py) runs
+    in f32 in the exact op order the kernel uses.  Jitted so XLA applies
+    the same FMA contraction to the epilogue as in the real impls —
+    bit-exactness is defined *under jit* (eager mode rounds mul and add
+    separately and can differ in the last ulp).
     """
     acc = mpmm_ref_codes(a_biased, packed, fmt, act_zero=act_zero)
-    return (acc.astype(jnp.float32) * jnp.asarray(gamma, jnp.float32)).astype(out_dtype)
+    y = acc.astype(jnp.float32) * jnp.asarray(gamma, jnp.float32)
+    y = _epilogue.apply(y, epilogue, scale, shift, residual)
+    return y.astype(_epilogue.resolve_out_dtype(epilogue, out_dtype))

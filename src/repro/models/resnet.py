@@ -25,7 +25,8 @@ from repro.nn import quantized as Q
 from repro.nn.param import ParamSpec
 
 __all__ = ["ResNetConfig", "RESNET_STAGES", "specs", "forward",
-           "gemm_workload", "model_flops", "init_bn_state"]
+           "gemm_workload", "model_flops", "init_bn_state",
+           "pack_for_serve", "serve_forward"]
 
 RESNET_STAGES = {
     18: ("basic", (2, 2, 2, 2)),
@@ -53,34 +54,12 @@ class ResNetConfig:
 
 
 # --- im2col conv ------------------------------------------------------------
+# The conv-as-GEMM machinery lives in nn/quantized (shared with any CNN);
+# re-exported here for backwards compatibility.
 
-
-def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: str
-           ) -> jax.Array:
-    """x (B,H,W,C) -> patches (B,H',W', kh*kw*C) matching HWIO weight layout."""
-    patches = jax.lax.conv_general_dilated_patches(
-        x, (kh, kw), (stride, stride), padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    # conv_general_dilated_patches yields features ordered (C, kh, kw);
-    # reorder to (kh, kw, C) so a reshape of HWIO weights lines up.
-    b, ho, wo, f = patches.shape
-    c = x.shape[-1]
-    patches = patches.reshape(b, ho, wo, c, kh * kw)
-    return jnp.swapaxes(patches, -1, -2).reshape(b, ho, wo, kh * kw * c)
-
-
-def qconv_spec(cin: int, cout: int, k: int, *, layer_class="inner",
-               name_axes=("embed", "mlp")) -> Dict:
-    return Q.qlinear_spec(k * k * cin, cout, axes=name_axes,
-                          layer_class=layer_class)
-
-
-def qconv_apply(p, x, policy, *, k: int, stride: int = 1, padding="SAME",
-                layer_class="inner", quantize_act=True):
-    cols = im2col(x, k, k, stride, padding)
-    return Q.qlinear_apply({kk: v for kk, v in p.items() if kk != Q.QMARK},
-                           cols, policy, layer_class=layer_class,
-                           quantize_act=quantize_act)
+im2col = Q.im2col
+qconv_spec = Q.qconv_spec
+qconv_apply = Q.qconv_apply
 
 
 # --- batch norm -------------------------------------------------------------
@@ -247,6 +226,123 @@ def forward(cfg: ResNetConfig, params, images, policy, *, mode="train",
     logits, _ = apply_with_state(cfg, params, state, images, policy,
                                  training=(mode == "train"))
     return logits
+
+
+# --- packed serve path (fused epilogues) ------------------------------------
+
+
+def _fold_bn(bn_params, bn_state, eps: float = 1e-5):
+    """Inference BN -> (scale, shift) f32 (1, C) for the kernel epilogue.
+
+    y = (x - mean) * rsqrt(var + eps) * g + b  ==  x * scale + shift
+    """
+    g = jnp.asarray(bn_params["scale"], jnp.float32)
+    b = jnp.asarray(bn_params["bias"], jnp.float32)
+    mean = jnp.asarray(bn_state["mean"], jnp.float32)
+    var = jnp.asarray(bn_state["var"], jnp.float32)
+    s = g * jax.lax.rsqrt(var + eps)
+    t = b - mean * s
+    c = s.shape[-1]
+    return s.reshape(1, c), t.reshape(1, c)
+
+
+def pack_for_serve(cfg: ResNetConfig, params, state, policy):
+    """Trained QAT tree + BN running stats -> deployed serve tree.
+
+    Every qconv/qlinear subtree becomes packed digit planes
+    (Q.pack_qlinear); every BatchNorm is folded into the (scale, shift)
+    pair its following matmul applies in the fused kernel epilogue —
+    after this, the serve graph contains no standalone BN op at all.
+    """
+    def pack(sub, layer_class):
+        return Q.pack_qlinear(
+            {k: v for k, v in sub.items() if k != Q.QMARK}, policy,
+            layer_class)
+
+    out = {
+        "stem": pack(params["stem"], "boundary"),
+        "bn_stem": _fold_bn(params["bn_stem"], state["bn_stem"]),
+        "fc": pack(params["fc"], "boundary"),
+    }
+    for si, bi, cin, cmid, stride in _block_channels(cfg):
+        key = f"s{si}b{bi}"
+        blk, st = params[key], state[key]
+        packed = {}
+        for name, sub in blk.items():
+            if name.startswith("bn"):
+                packed[name] = _fold_bn(sub, st[name])
+            else:
+                packed[name] = pack(sub, "inner")
+        out[key] = packed
+    return out
+
+
+def _shortcut(p, x, policy, stride, impl, tile):
+    """Identity or projection shortcut (projection: conv + folded BN)."""
+    if "proj" not in p:
+        return x
+    s, t = p["bn_proj"]
+    return Q.qconv_serve_apply(
+        p["proj"], x, policy, k=1, stride=stride, impl=impl, tile=tile,
+        epilogue=Q.EpilogueSpec(bn=True), scale=s, shift=t)
+
+
+def _basic_serve(p, x, policy, stride, impl, tile):
+    sc = _shortcut(p, x, policy, stride, impl, tile)
+    s1, t1 = p["bn1"]
+    h = Q.qconv_serve_apply(
+        p["conv1"], x, policy, k=3, stride=stride, impl=impl, tile=tile,
+        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1, shift=t1)
+    s2, t2 = p["bn2"]
+    # conv2 carries BN2 + shortcut add + final ReLU in one kernel epilogue.
+    return Q.qconv_serve_apply(
+        p["conv2"], h, policy, k=3, impl=impl, tile=tile,
+        epilogue=Q.EpilogueSpec(bn=True, residual=True, relu=True),
+        scale=s2, shift=t2, residual=sc)
+
+
+def _bottleneck_serve(p, x, policy, stride, impl, tile):
+    sc = _shortcut(p, x, policy, stride, impl, tile)
+    s1, t1 = p["bn1"]
+    h = Q.qconv_serve_apply(
+        p["conv1"], x, policy, k=1, impl=impl, tile=tile,
+        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1, shift=t1)
+    s2, t2 = p["bn2"]
+    h = Q.qconv_serve_apply(
+        p["conv2"], h, policy, k=3, stride=stride, impl=impl, tile=tile,
+        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s2, shift=t2)
+    s3, t3 = p["bn3"]
+    return Q.qconv_serve_apply(
+        p["conv3"], h, policy, k=1, impl=impl, tile=tile,
+        epilogue=Q.EpilogueSpec(bn=True, residual=True, relu=True),
+        scale=s3, shift=t3, residual=sc)
+
+
+def serve_forward(cfg: ResNetConfig, packed, images, policy, *,
+                  impl: str = "auto", tile=None):
+    """Deployed forward over a ``pack_for_serve`` tree.
+
+    Every inner block runs BN + ReLU + shortcut through the fused mpmm
+    epilogue (no standalone BN op in the traced graph), and with
+    ``tile=None`` each layer's pallas tile comes from the DSE autotuner.
+    """
+    s, t = packed["bn_stem"]
+    # The stem sees raw (possibly mean-normalized) pixels that straddle
+    # zero; QAT ran it with unquantized activations, so serve uses
+    # symmetric signed codes (act_zero=0) — unsigned Eq. 5 codes would
+    # clamp every negative input away.
+    x = Q.qconv_serve_apply(
+        packed["stem"], images, policy, k=7, stride=2,
+        layer_class="boundary", impl=impl, tile=tile, act_signed=True,
+        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s, shift=t)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    fwd = _bottleneck_serve if cfg.block == "bottleneck" else _basic_serve
+    for si, bi, cin, cmid, stride in _block_channels(cfg):
+        x = fwd(packed[f"s{si}b{bi}"], x, policy, stride, impl, tile)
+    x = jnp.mean(x, axis=(1, 2))
+    return Q.qlinear_serve_apply(packed["fc"], x, policy,
+                                 layer_class="boundary", impl=impl, tile=tile)
 
 
 def gemm_workload(cfg: ResNetConfig, batch: int = 1) -> List[Gemm]:

@@ -26,16 +26,24 @@ import jax.numpy as jnp
 from repro.core import packing, quant
 from repro.core.packing import PlaneFormat
 from repro.core.precision import PrecisionPolicy
+from repro.kernels.mpmm import epilogue as mpmm_epilogue
 from repro.kernels.mpmm import ops as mpmm_ops
+from repro.kernels.mpmm.epilogue import EpilogueSpec
 from repro.nn.param import ParamSpec
 
 __all__ = [
     "qlinear_spec",
     "qlinear_apply",
     "qlinear_serve_spec",
+    "qlinear_serve_apply",
+    "qconv_spec",
+    "qconv_apply",
+    "qconv_serve_apply",
+    "im2col",
     "pack_qlinear",
     "pack_tree",
     "QMARK",
+    "EpilogueSpec",
 ]
 
 QMARK = "__q__"
@@ -194,28 +202,116 @@ def qlinear_serve_apply(
     tile: Optional[mpmm_ops.TileShape] = None,
     impl: str = "xla",
     compute_dtype=jnp.bfloat16,
+    epilogue: Optional[EpilogueSpec] = None,
+    scale: Optional[jax.Array] = None,
+    shift: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    act_signed: bool = False,
 ) -> jax.Array:
-    """Deployed forward: quantize acts -> mpmm over packed planes."""
+    """Deployed forward: quantize acts -> mpmm over packed planes.
+
+    The optional fused epilogue runs BN/residual/ReLU inside the matmul
+    kernel (epilogue.py); ``tile=None`` autotunes from the DSE model.
+    ``act_signed=True`` uses symmetric signed activation codes
+    (act_zero = 0) for inputs that straddle zero — a CNN stem fed
+    mean-normalized images, where the paper's unsigned codes (Eq. 5,
+    meant for post-ReLU activations) would clamp negatives away.
+    """
+    # Validate up front: the bias fold below dereferences scale/shift,
+    # and must fail with the designed error, not an AttributeError.
+    mpmm_epilogue.validate_operands(epilogue, scale, shift, residual)
     if "w" in p:  # FP baseline
         y = jnp.einsum("...k,kn->...n", x.astype(compute_dtype),
                        p["w"].astype(compute_dtype))
         if "b" in p:
             y = y + p["b"].astype(compute_dtype)
-        return y
+        out_dtype = mpmm_epilogue.resolve_out_dtype(epilogue, compute_dtype)
+        return mpmm_epilogue.apply(
+            y.astype(jnp.float32), epilogue, scale, shift, residual
+        ).astype(out_dtype)
+    # A bias must enter BEFORE the epilogue post-ops (the QAT forward
+    # adds it straight after the matmul): fold it into the epilogue's
+    # scale/shift stage instead of adding it after the kernel.
+    if "b" in p and epilogue is not None:
+        b = jnp.asarray(p["b"], jnp.float32).reshape(1, -1)
+        if epilogue.bn:
+            shift = shift.astype(jnp.float32) + b * scale.astype(jnp.float32)
+        else:
+            epilogue = dataclasses.replace(epilogue, bn=True)
+            scale = jnp.ones_like(b)
+            shift = b
     w_bits = policy.bits_for(layer_class)
     k = policy.k
     kdim = x.shape[-1]
     fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=kdim)
-    a = mpmm_ops.quantize_activations(x, p["ga"], policy.a_bits)
+    a = mpmm_ops.quantize_activations(x, p["ga"], policy.a_bits,
+                                      signed=act_signed)
     y = mpmm_ops.mpmm(
         a, p["planes"], p["gamma"], p["colsum"],
-        fmt=fmt, act_zero=2 ** (policy.a_bits - 1),
+        scale, shift, residual,
+        fmt=fmt, act_zero=0 if act_signed else 2 ** (policy.a_bits - 1),
         tile=tile, variant=policy.variant, impl=impl,
-        out_dtype=compute_dtype,
+        out_dtype=compute_dtype, epilogue=epilogue,
     )
-    if "b" in p:
+    if "b" in p and epilogue is None:
         y = y + p["b"].astype(compute_dtype)
     return y
+
+
+# ---------------------------------------------------------------------------
+# Convolutions as GEMMs (im2col) — the paper's CONV-layer processing.
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: str
+           ) -> jax.Array:
+    """x (B,H,W,C) -> patches (B,H',W', kh*kw*C) matching HWIO weight layout."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches yields features ordered (C, kh, kw);
+    # reorder to (kh, kw, C) so a reshape of HWIO weights lines up.
+    b, ho, wo, f = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(b, ho, wo, c, kh * kw)
+    return jnp.swapaxes(patches, -1, -2).reshape(b, ho, wo, kh * kw * c)
+
+
+def qconv_spec(cin: int, cout: int, k: int, *, layer_class: str = "inner",
+               name_axes: Tuple[Optional[str], str] = ("embed", "mlp")
+               ) -> Dict[str, ParamSpec]:
+    return qlinear_spec(k * k * cin, cout, axes=name_axes,
+                        layer_class=layer_class)
+
+
+def qconv_apply(p, x, policy, *, k: int, stride: int = 1, padding="SAME",
+                layer_class: str = "inner", quantize_act: bool = True):
+    """QAT conv forward: im2col + fake-quant linear."""
+    cols = im2col(x, k, k, stride, padding)
+    return qlinear_apply({kk: v for kk, v in p.items() if kk != QMARK},
+                         cols, policy, layer_class=layer_class,
+                         quantize_act=quantize_act)
+
+
+def qconv_serve_apply(p, x, policy, *, k: int, stride: int = 1,
+                      padding="SAME", layer_class: str = "inner",
+                      tile: Optional[mpmm_ops.TileShape] = None,
+                      impl: str = "xla", compute_dtype=jnp.bfloat16,
+                      epilogue: Optional[EpilogueSpec] = None,
+                      scale: Optional[jax.Array] = None,
+                      shift: Optional[jax.Array] = None,
+                      residual: Optional[jax.Array] = None,
+                      act_signed: bool = False):
+    """Deployed conv forward: im2col + packed mpmm with fused epilogue.
+
+    BN (folded to scale/shift), the shortcut add, and ReLU all execute in
+    the matmul kernel epilogue — the FPGA post-processing pipeline.
+    """
+    cols = im2col(x, k, k, stride, padding)
+    return qlinear_serve_apply(
+        p, cols, policy, layer_class=layer_class, tile=tile, impl=impl,
+        compute_dtype=compute_dtype, epilogue=epilogue, scale=scale,
+        shift=shift, residual=residual, act_signed=act_signed)
 
 
 def pack_qlinear(

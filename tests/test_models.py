@@ -164,3 +164,80 @@ class TestMLA:
         mla_bytes = sum(np.prod(s.shape) * 2 for s in jax.tree.leaves(c))
         gqa_bytes = (api.cfg.n_layers * 1024 * 16 * 128 * 2) * 2
         assert mla_bytes < gqa_bytes / 3
+
+
+class TestResNetPackedServe:
+    """Deployed CNN path: packed planes + fused BN/ReLU/shortcut epilogue."""
+
+    def _setup(self, key):
+        from repro.models import resnet as R
+        api = configs.get("resnet18", reduced=True)
+        params = api.init_params(key)
+        st = R.init_bn_state(R.specs(api.cfg))
+        x = jnp.abs(jnp.asarray(
+            np.random.default_rng(0).normal(0.5, 1, (2, 32, 32, 3)),
+            jnp.float32))  # unsigned activation regime (paper Eq. 5)
+        _, st = R.apply_with_state(api.cfg, params, st, x, api.policy,
+                                   training=True)
+        packed = R.pack_for_serve(api.cfg, params, st, api.policy)
+        return R, api, params, st, x, packed
+
+    def test_serve_tracks_qat(self, key):
+        R, api, params, st, x, packed = self._setup(key)
+        qat, _ = R.apply_with_state(api.cfg, params, st, x, api.policy,
+                                    training=False)
+        out = R.serve_forward(api.cfg, packed, x, api.policy, impl="xla")
+        assert out.shape == qat.shape
+        c = np.corrcoef(np.asarray(qat, np.float32).ravel(),
+                        np.asarray(out, np.float32).ravel())[0, 1]
+        assert c > 0.85, c
+
+    def test_xla_pallas_identical(self, key):
+        R, api, params, st, x, packed = self._setup(key)
+        yx = R.serve_forward(api.cfg, packed, x, api.policy, impl="xla")
+        yp = R.serve_forward(api.cfg, packed, x, api.policy, impl="pallas")
+        np.testing.assert_array_equal(np.asarray(yx, np.float32),
+                                      np.asarray(yp, np.float32))
+
+    def test_no_standalone_bn_in_serve_graph(self, key):
+        """BN is folded into the kernel epilogue at pack time: the traced
+        serve path contains no rsqrt (the BN-only primitive)."""
+        R, api, params, st, x, packed = self._setup(key)
+        jaxpr = jax.make_jaxpr(
+            lambda p_, x_: R.serve_forward(api.cfg, p_, x_, api.policy,
+                                           impl="xla"))(packed, x)
+        assert "rsqrt" not in str(jaxpr)
+
+    def test_fp_baseline_serve(self, key):
+        """policy.quantize=False serves bf16 weights through the same path."""
+        from repro.core.precision import PrecisionPolicy
+        from repro.models import resnet as R
+        api = configs.get("resnet18", reduced=True,
+                          policy=PrecisionPolicy(quantize=False))
+        params = api.init_params(key)
+        st = R.init_bn_state(R.specs(api.cfg))
+        x = jnp.ones((2, 32, 32, 3), jnp.float32) * 0.2
+        packed = R.pack_for_serve(api.cfg, params, st, api.policy)
+        out = R.serve_forward(api.cfg, packed, x, api.policy, impl="xla")
+        assert out.shape == (2, api.cfg.n_classes)
+        assert bool(jnp.isfinite(out.astype(jnp.float32)).all())
+
+    def test_signed_stem_handles_mean_zero_inputs(self, key):
+        """The stem serves with symmetric signed act codes (act_zero=0):
+        mean-normalized images keep their negative half instead of being
+        clamped by the unsigned Eq. 5 codes."""
+        from repro.models import resnet as R
+        api = configs.get("resnet18", reduced=True)
+        params = api.init_params(key)
+        st = R.init_bn_state(R.specs(api.cfg))
+        x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (2, 32, 32, 3)),
+                        jnp.float32)  # straddles zero
+        _, st = R.apply_with_state(api.cfg, params, st, x, api.policy,
+                                   training=True)
+        qat, _ = R.apply_with_state(api.cfg, params, st, x, api.policy,
+                                    training=False)
+        packed = R.pack_for_serve(api.cfg, params, st, api.policy)
+        out = R.serve_forward(api.cfg, packed, x, api.policy, impl="xla")
+        c = np.corrcoef(np.asarray(qat, np.float32).ravel(),
+                        np.asarray(out, np.float32).ravel())[0, 1]
+        assert c > 0.8, c

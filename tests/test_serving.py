@@ -111,3 +111,50 @@ def test_memory_footprint_smaller_when_packed(key):
 
     # compare only the inner linears: train stores f32 masters
     assert nbytes(packed) < nbytes(params) / 4
+
+
+class TestBiasWithEpilogue:
+    """A layer bias must enter BEFORE the fused epilogue's post-ops
+    (ReLU/residual), matching the QAT op order."""
+
+    def _packed_linear(self, rng, kdim=32, n=24, bias_scale=5.0):
+        from repro.core import quant
+        from repro.kernels.mpmm import ops as mpmm_ops
+        from repro.nn import quantized as Q
+        pol = PrecisionPolicy(inner_bits=4, k=2)
+        w = jnp.asarray(rng.normal(0, 0.05, (kdim, n)), jnp.float32)
+        gw = quant.init_step_size(w, quant.weight_spec(4))
+        p = {"w": w, "gw": gw, "ga": jnp.asarray(0.05, jnp.float32),
+             "b": jnp.asarray(rng.normal(0, bias_scale, (n,)), jnp.float32)}
+        packed = Q.pack_qlinear(p, pol, "inner")
+        return Q, pol, packed
+
+    def test_relu_applies_after_bias(self):
+        rng = np.random.default_rng(0)
+        Q, pol, packed = self._packed_linear(rng)
+        x = jnp.abs(jnp.asarray(rng.normal(0.5, 1, (8, 32)), jnp.float32))
+        y_plain = Q.qlinear_serve_apply(packed, x, pol, impl="xla",
+                                        compute_dtype=jnp.float32)
+        y_fused = Q.qlinear_serve_apply(
+            packed, x, pol, impl="xla", compute_dtype=jnp.float32,
+            epilogue=Q.EpilogueSpec(relu=True))
+        # relu(matmul + b), NOT relu(matmul) + b: wherever the biased
+        # pre-activation is negative the fused output must be zero.
+        np.testing.assert_allclose(
+            np.asarray(y_fused), np.maximum(np.asarray(y_plain), 0.0),
+            rtol=1e-5, atol=1e-5)
+
+    def test_bias_folds_into_bn_shift(self):
+        rng = np.random.default_rng(1)
+        Q, pol, packed = self._packed_linear(rng)
+        x = jnp.abs(jnp.asarray(rng.normal(0.5, 1, (8, 32)), jnp.float32))
+        scale = jnp.asarray(rng.uniform(0.5, 2.0, (1, 24)), jnp.float32)
+        shift = jnp.asarray(rng.normal(0, 1, (1, 24)), jnp.float32)
+        y_plain = Q.qlinear_serve_apply(packed, x, pol, impl="xla",
+                                        compute_dtype=jnp.float32)
+        y_fused = Q.qlinear_serve_apply(
+            packed, x, pol, impl="xla", compute_dtype=jnp.float32,
+            epilogue=Q.EpilogueSpec(bn=True), scale=scale, shift=shift)
+        want = np.asarray(y_plain) * np.asarray(scale) + np.asarray(shift)
+        np.testing.assert_allclose(np.asarray(y_fused), want,
+                                   rtol=1e-4, atol=1e-4)
