@@ -23,6 +23,7 @@ MODULES = [
     ("tab4", "benchmarks.tab4_energy_frame"),
     ("tab5", "benchmarks.tab5_sota"),
     ("micro", "benchmarks.kernel_micro"),
+    ("serve", "benchmarks.resnet_serve"),
 ]
 
 

@@ -31,13 +31,17 @@ from repro.core.roofline import HW, TPU_V5E
 
 __all__ = [
     "Gemm",
+    "ConvShape",
     "TileCandidate",
     "vmem_working_set",
     "tile_utilization",
     "gemm_time",
+    "conv_time",
     "choose_tile",
+    "choose_conv_dataflow",
     "dse_sweep",
     "DseChoice",
+    "ConvDataflowChoice",
     "autotune_tile",
     "digit_cache_bytes",
 ]
@@ -61,6 +65,63 @@ class Gemm:
     @property
     def macs(self) -> int:
         return self.m * self.k * self.n * self.count
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvShape:
+    """One conv layer in NHWC/HWIO form — the dataflow-selection unit.
+
+    The GEMM view (M = B·Ho·Wo, K = kh·kw·C, N = Cout) drives the compute
+    term; the conv view (B·H·W·C input bytes) drives the memory term of
+    the implicit dataflow, where patches are gathered in VMEM and never
+    written back to HBM.
+    """
+
+    batch: int
+    h: int
+    w: int
+    c_in: int
+    c_out: int
+    kh: int
+    kw: int
+    stride: int = 1
+    padding: str = "SAME"
+    layer_class: str = "inner"
+
+    def _out(self, size: int, win: int) -> int:
+        if self.padding == "SAME":
+            return _ceil(size, self.stride)
+        return (size - win) // self.stride + 1
+
+    @property
+    def ho(self) -> int:
+        return self._out(self.h, self.kh)
+
+    @property
+    def wo(self) -> int:
+        return self._out(self.w, self.kw)
+
+    @property
+    def m(self) -> int:
+        return self.batch * self.ho * self.wo
+
+    @property
+    def k(self) -> int:
+        return self.kh * self.kw * self.c_in
+
+    @property
+    def patch_reuse(self) -> float:
+        """How many times im2col copies each input pixel: kh·kw / stride².
+
+        This is the activation-traffic inflation the implicit dataflow
+        avoids — large for 3x3 stride-1 (9x), ~1 for 1x1 or stride-k
+        convs, which is exactly why dataflow choice must be per layer
+        (Nguyen et al., arXiv:2009.01588)."""
+        return (self.kh * self.kw) / float(self.stride ** 2)
+
+    def gemm(self) -> Gemm:
+        return Gemm("conv", self.m, self.k, self.c_out,
+                    layer_class=self.layer_class)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +202,123 @@ def gemm_time(
     out_bytes = g.m * g.n * 4
     memory_s = g.count * (act_bytes + wgt_bytes + out_bytes) / hw.hbm_bw
     return compute_s, memory_s
+
+
+def conv_time(
+    conv: ConvShape,
+    tile: TileCandidate,
+    fmt: PlaneFormat,
+    hw: HW = TPU_V5E,
+    variant: str = "st",
+    dataflow: str = "im2col",
+) -> Tuple[float, float]:
+    """(compute_s, memory_s) for one conv under a tile and a dataflow.
+
+    Compute is dataflow-invariant (same padded MAC loop nest either way).
+    The memory term is where the dataflows differ — the patch-reuse term:
+
+      * ``im2col``: the patch matrix (M, K) = (B·Ho·Wo, kh·kw·C) is
+        materialized in HBM (one write), then read back per N tile like
+        any GEMM operand.  Activation traffic is inflated by
+        ``conv.patch_reuse`` = kh·kw/stride² over the raw feature map.
+      * ``implicit``: patch strips are gathered in VMEM from the raw
+        (padded) feature map; HBM sees only B·H·W·C bytes per N tile —
+        patches never round-trip.
+
+    Weights and outputs cost the same in both dataflows.
+    """
+    g = conv.gemm()
+    compute_s, _ = gemm_time(g, tile, fmt, hw, variant)
+    gm, gn = _ceil(g.m, tile.bm), _ceil(g.n, tile.bn)
+    if dataflow == "im2col":
+        # read input once to form patches + write M*K patch bytes + read
+        # them back per N tile (the GEMM operand).
+        act_bytes = (conv.batch * conv.h * conv.w * conv.c_in
+                     + g.m * g.k * (1 + gn))
+    elif dataflow == "implicit":
+        # raw feature map (plus halo) per N tile; no patch buffer.
+        h_pad = (conv.ho - 1) * conv.stride + conv.kh
+        w_pad = (conv.wo - 1) * conv.stride + conv.kw
+        act_bytes = conv.batch * h_pad * w_pad * conv.c_in * gn
+    else:
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+    wgt_bytes = fmt.planes * _ceil(g.k, fmt.digits_per_byte) * g.n * gm
+    out_bytes = g.m * g.n * 4
+    memory_s = (act_bytes + wgt_bytes + out_bytes) / hw.hbm_bw
+    return compute_s, memory_s
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvDataflowChoice:
+    """Per-layer dataflow decision (green box, extended to convs)."""
+
+    dataflow: str               # 'im2col' | 'implicit'
+    tile_im2col: Optional[TileCandidate]
+    tile_implicit: Optional[TileCandidate]
+    time_im2col_s: float
+    time_implicit_s: float
+
+    @property
+    def tile(self) -> TileCandidate:
+        return (self.tile_implicit if self.dataflow == "implicit"
+                else self.tile_im2col)
+
+    @property
+    def speedup(self) -> float:
+        return self.time_im2col_s / self.time_implicit_s
+
+
+@functools.lru_cache(maxsize=4096)
+def choose_conv_dataflow(
+    conv: ConvShape,
+    *,
+    w_bits: int,
+    k: int,
+    variant: str = "st",
+    hw: HW = TPU_V5E,
+    vmem_budget: Optional[float] = None,
+    pin_tile: bool = True,
+) -> ConvDataflowChoice:
+    """Pick im2col vs implicit-GEMM for one conv layer, roofline-scored.
+
+    Both dataflows are scored over tile candidates with ``conv_time``;
+    the im2col dataflow sweeps the full (bm, bk, bn) grid (any GEMM tile
+    is realizable on the patch matrix).  With ``pin_tile`` (the pallas
+    implicit kernel) the implicit dataflow pins bm = Wo (one output row
+    per tile) and bk = C (one kernel position per K step) — the
+    structure of conv_kernel.py — and sweeps bn; a 3-channel stem is
+    correctly penalized for starving the MXU's K lanes.  Without it
+    (the XLA direct conv, which tiles internally) implicit sweeps the
+    full grid too.  The faster roofline total wins; ties break to
+    implicit (no patch buffer to allocate).
+    """
+    budget = (vmem_budget if vmem_budget is not None
+              else 0.5 * hw.vmem_bytes)
+    fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=conv.k)
+    best: Dict[str, Tuple[float, Optional[TileCandidate]]] = {
+        "im2col": (math.inf, None), "implicit": (math.inf, None)}
+    implicit_tiles: Iterable[TileCandidate] = (
+        [TileCandidate(conv.wo, conv.c_in, bn)
+         for bn in (128, 256, 512, 1024)]
+        if pin_tile else _tile_grid(hw))
+    for tile in _tile_grid(hw):
+        if vmem_working_set(tile, fmt, variant) > budget:
+            continue
+        c, m = conv_time(conv, tile, fmt, hw, variant, dataflow="im2col")
+        if max(c, m) < best["im2col"][0]:
+            best["im2col"] = (max(c, m), tile)
+    for tile in implicit_tiles:
+        if vmem_working_set(tile, fmt, variant) > budget:
+            continue
+        c, m = conv_time(conv, tile, fmt, hw, variant, dataflow="implicit")
+        if max(c, m) < best["implicit"][0]:
+            best["implicit"] = (max(c, m), tile)
+    t_i, tile_i = best["im2col"]
+    t_d, tile_d = best["implicit"]
+    if tile_i is None and tile_d is None:
+        raise ValueError("no feasible conv tile under the VMEM budget")
+    flow = "implicit" if (tile_d is not None and t_d <= t_i) else "im2col"
+    return ConvDataflowChoice(flow, tile_i, tile_d, t_i, t_d)
 
 
 def _tile_grid(hw: HW) -> Iterable[TileCandidate]:

@@ -1,0 +1,233 @@
+"""Pallas TPU kernel: convolution as implicit GEMM over packed digit planes.
+
+The im2col serve path materializes an (M, kh·kw·C) patch matrix in HBM
+before every conv — ~9x the activation bytes for a 3x3 kernel, plus a
+full extra memory round-trip.  The FPGA design this repo reproduces
+never does that: the dataflow streams the feature map once and forms
+patches on the fly next to the PE array.  This kernel is the TPU
+analogue — patches exist only as VMEM gathers:
+
+  * Grid = (N/bn, B, Ho, kh*kw): one output row (b, oh) of one N tile
+    per (j, b, oh) triple, with the innermost dim stepping over kernel
+    positions (ki, kj).
+  * The activation BlockSpec index map walks the *raw padded* feature
+    map: step (j, b, oh, kk) fetches input row ``oh*stride + ki`` —
+    a (W_pad, C) strip, not a patch matrix.  Inside the kernel the
+    (Wo, C) patch strip for kernel column kj is a dynamic slice
+    (+ stride subsample) of that row: ``row[kj : kj+(Wo-1)*s+1 : s]``.
+  * Weights arrive exactly as in the matmul kernel (uint8 packed digit
+    planes, K = kh·kw·C in im2col (kh, kw, C) order) and feed the same
+    one-contraction-per-step digit-plane dot: the (Wo, C) strip against
+    the decoded (C, P*bn) digit block, 2^{kp} shifts post-dot.
+  * The fused EpilogueSpec (BN / residual / ReLU) runs on the int32
+    accumulator at the last kernel position — identical op order to
+    mpmm (epilogue.finish), so conv output is bit-exact vs the im2col
+    reference.
+
+Constraints (callers route through ops.conv_mpmm / nn.qconv_serve_apply,
+which fall back to im2col when violated): C divisible by the packed
+digits-per-byte f = 8//k, so every kernel position starts at a byte
+boundary of the packed K axis; activations pre-padded spatially with
+``-act_zero`` (the biased code of a float 0 — what im2col's zero padding
+quantizes to, keeping the colsum zero-point correction exact).
+
+The digit cache mirrors kernel.py §2.2: the decoded (C, P*bn) strip of
+each kernel position is cached per N tile at the first (b, oh) step and
+reused by every later output row — one decode per (j, kk) instead of
+B·Ho of them.  While the cache is on, the B and Ho dims are "arbitrary"
+(the decode-at-first-step ordering must not be split across Megacore
+cores); N stays parallel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import flags
+from repro.core.packing import PlaneFormat, plane_shift_weights
+from repro.kernels.mpmm import epilogue as _epi
+from repro.kernels.mpmm.epilogue import EpilogueSpec
+from repro.kernels.mpmm.kernel import _decode_block
+
+__all__ = ["conv_mpmm_pallas"]
+
+
+def _conv_kernel(
+    x_ref, w_ref, gamma_ref, colsum_ref, *rest,
+    fmt: PlaneFormat, act_zero: int, kh: int, kw: int, stride: int,
+    wo: int, out_dtype, variant: str, epilogue: Optional[EpilogueSpec],
+    cache_digits: bool,
+):
+    """One grid step: one kernel position of one output row."""
+    n_epi = (2 if epilogue is not None and epilogue.bn else 0) + (
+        1 if epilogue is not None and epilogue.residual else 0)
+    epi_in = rest[:n_epi]
+    out_ref = rest[n_epi]
+    acc_ref = rest[n_epi + 1]
+    dig_ref = rest[n_epi + 2] if cache_digits else None
+    epi_refs = {}
+    if epilogue is not None and epilogue.bn:
+        epi_refs["scale"], epi_refs["shift"] = epi_in[0], epi_in[1]
+    if epilogue is not None and epilogue.residual:
+        epi_refs["residual"] = epi_in[-1]
+
+    kk = pl.program_id(3)
+    n_k = kh * kw
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    c = x_ref.shape[-1]
+    if cache_digits:
+        first_row = (pl.program_id(1) == 0) & (pl.program_id(2) == 0)
+
+        @pl.when(first_row)
+        def _decode():
+            dig_ref[kk] = _decode_block(w_ref[...], fmt, c)
+        digits = dig_ref[kk]               # (C, P*bn) int8
+    else:
+        digits = _decode_block(w_ref[...], fmt, c)
+
+    # Gather the patch strip for kernel column kj = kk % kw: output
+    # column wo' needs input column wo'*stride + kj of the fetched row.
+    kj = kk % kw
+    row = x_ref[0, 0]                      # (W_pad, C) int8
+    span = (wo - 1) * stride + 1
+    seg = jax.lax.dynamic_slice(row, (kj, 0), (span, c))  # (span, C)
+    if stride > 1:
+        seg = jax.lax.slice(seg, (0, 0), (span, c), (stride, 1))
+    strip = seg                            # (Wo, C) int8 — the implicit patch
+
+    partial = jax.lax.dot_general(
+        strip, digits, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                      # (Wo, P*bn) int32
+    bn = acc_ref.shape[-1]
+    part3 = partial.reshape(wo, fmt.planes, bn)
+
+    if variant == "st":
+        shifts = plane_shift_weights(fmt)
+        acc_ref[...] += jnp.sum(part3 * shifts[None, :, None], axis=1)
+    else:
+        for p in range(fmt.planes):
+            acc_ref[p] += part3[:, p, :]
+
+    @pl.when(kk == n_k - 1)
+    def _epilogue():
+        if variant == "st":
+            acc = acc_ref[...]
+        else:
+            acc = jnp.zeros((wo, bn), jnp.int32)
+            for p in range(fmt.planes):    # deferred shift-add
+                acc = acc + acc_ref[p] * (1 << (fmt.k * p))
+        out_ref[0, 0] = _epi.finish(
+            acc, gamma_ref[...], colsum_ref[...],
+            act_zero=act_zero, spec=epilogue,
+            scale=epi_refs["scale"][...] if "scale" in epi_refs else None,
+            shift=epi_refs["shift"][...] if "shift" in epi_refs else None,
+            residual=(epi_refs["residual"][0, 0] if "residual" in epi_refs
+                      else None),
+            out_dtype=out_dtype,
+        )
+
+
+def conv_mpmm_pallas(
+    x_padded: jax.Array,   # int8 (B, H_pad, W_pad, C), spatially pre-padded
+    packed: jax.Array,     # uint8 (P, (kh*kw*C)//f, N), N padded to bn
+    gamma: jax.Array,      # f32 (1, N)
+    colsum: jax.Array,     # int32 (1, N)
+    *,
+    fmt: PlaneFormat,
+    act_zero: int,
+    kh: int,
+    kw: int,
+    stride: int,
+    out_hw: Tuple[int, int],
+    bn: int,
+    variant: str = "st",
+    out_dtype=jnp.float32,
+    epilogue: Optional[EpilogueSpec] = None,
+    scale: Optional[jax.Array] = None,      # f32 (1, N) when epilogue.bn
+    shift: Optional[jax.Array] = None,      # f32 (1, N) when epilogue.bn
+    residual: Optional[jax.Array] = None,   # (B, Ho, Wo, N)
+    cache_digits: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Tiled pallas_call -> (B, Ho, Wo, N).  Caller pads N and space.
+
+    ``x_padded`` must already carry the conv's spatial padding, filled
+    with the biased zero code ``-act_zero``; ``out_hw`` is the (Ho, Wo)
+    implied by the original padding/stride.  ``packed`` is the standard
+    mpmm plane layout over K = kh*kw*C in (kh, kw, C) order — the same
+    bytes the im2col path consumes, no conv-specific repack.
+    """
+    b, h_pad, w_pad, c = x_padded.shape
+    p, kp, n = packed.shape
+    ho, wo = out_hw
+    f = fmt.digits_per_byte
+    assert c % f == 0, (c, f)
+    assert kp * f == kh * kw * c, (kp, f, kh, kw, c)
+    assert n % bn == 0, (n, bn)
+    assert (ho - 1) * stride + kh <= h_pad, (ho, stride, kh, h_pad)
+    assert (wo - 1) * stride + kw <= w_pad, (wo, stride, kw, w_pad)
+    n_j, n_k = n // bn, kh * kw
+    grid = (n_j, b, ho, n_k)  # N outermost (digit cache), kernel pos inner
+
+    if interpret is None:
+        interpret = flags.default_interpret()
+    if out_dtype is None:
+        out_dtype = jnp.float32
+    out_dtype = _epi.resolve_out_dtype(epilogue, out_dtype)
+
+    ckp = c // f  # packed bytes of one kernel position's C slice
+    in_specs = [
+        # One raw input row per step — the H index walks oh*stride + ki.
+        pl.BlockSpec((1, 1, w_pad, c),
+                     lambda j, bb, oh, kk: (bb, oh * stride + kk // kw, 0, 0)),
+        pl.BlockSpec((p, ckp, bn), lambda j, bb, oh, kk: (0, kk, j)),
+        pl.BlockSpec((1, bn), lambda j, bb, oh, kk: (0, j)),
+        pl.BlockSpec((1, bn), lambda j, bb, oh, kk: (0, j)),
+    ]
+    operands = [x_padded, packed, gamma, colsum]
+    if epilogue is not None and epilogue.bn:
+        in_specs += [pl.BlockSpec((1, bn), lambda j, bb, oh, kk: (0, j))] * 2
+        operands += [scale, shift]
+    if epilogue is not None and epilogue.residual:
+        in_specs.append(pl.BlockSpec(
+            (1, 1, wo, bn), lambda j, bb, oh, kk: (bb, oh, 0, j)))
+        operands.append(residual)
+
+    acc_shape = (wo, bn) if variant == "st" else (p, wo, bn)
+    scratch = [pltpu.VMEM(acc_shape, jnp.int32)]
+    if cache_digits:
+        scratch.append(pltpu.VMEM((n_k, c, p * bn), jnp.int8))
+
+    return pl.pallas_call(
+        functools.partial(
+            _conv_kernel, fmt=fmt, act_zero=act_zero, kh=kh, kw=kw,
+            stride=stride, wo=wo, out_dtype=out_dtype, variant=variant,
+            epilogue=epilogue, cache_digits=cache_digits,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, wo, bn),
+                               lambda j, bb, oh, kk: (bb, oh, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, n), out_dtype),
+        scratch_shapes=scratch,
+        compiler_params=pltpu.TPUCompilerParams(
+            # Same Megacore rule as the matmul kernel: with the digit
+            # cache on, the decode-at-first-output-row ordering makes the
+            # B and Ho dims order-dependent, so only N may be split.
+            dimension_semantics=(
+                ("parallel", "arbitrary", "arbitrary", "arbitrary")
+                if cache_digits
+                else ("parallel", "parallel", "parallel", "arbitrary")),
+        ),
+        interpret=interpret,
+    )(*operands)

@@ -26,7 +26,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["EpilogueSpec", "apply", "validate_operands", "resolve_out_dtype"]
+__all__ = ["EpilogueSpec", "apply", "finish", "validate_operands",
+           "resolve_out_dtype"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +77,32 @@ def apply(
     if spec.relu:
         y = jnp.maximum(y, 0.0)
     return y
+
+
+def finish(
+    acc: jax.Array,
+    gamma: jax.Array,
+    colsum: jax.Array,
+    *,
+    act_zero: int,
+    spec: Optional[EpilogueSpec],
+    scale: Optional[jax.Array] = None,
+    shift: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    out_dtype,
+) -> jax.Array:
+    """int32 accumulator -> epilogued output, the full §2.3 pipeline.
+
+    zero-point correction → dequant → BN/residual/ReLU → cast.  The one
+    implementation every path (ref, xla matmul, xla direct-conv, both
+    pallas kernel epilogues) runs, so the op order cannot drift.
+    ``gamma``/``colsum`` broadcast against ``acc`` ((1, N) against (M, N)
+    or (1, 1, 1, N) against (B, Ho, Wo, N)).
+    """
+    corrected = acc + act_zero * colsum.astype(jnp.int32)
+    y = corrected.astype(jnp.float32) * gamma.astype(jnp.float32)
+    y = apply(y, spec, scale, shift, residual)
+    return y.astype(resolve_out_dtype(spec, out_dtype))
 
 
 def validate_operands(

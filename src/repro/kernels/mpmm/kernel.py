@@ -81,17 +81,16 @@ def _decode_block(w_u8: jax.Array, fmt: PlaneFormat, bk: int) -> jax.Array:
 
 def _fused_epilogue(acc, gamma_ref, colsum_ref, epi_refs, out_ref,
                     *, act_zero, epilogue: Optional[EpilogueSpec], out_dtype):
-    """Dequant then epilogue.apply — the shared op order, not a copy."""
-    corrected = acc + act_zero * colsum_ref[...].astype(jnp.int32)
-    y = corrected.astype(jnp.float32) * gamma_ref[...].astype(jnp.float32)
-    y = _epi.apply(
-        y, epilogue,
+    """VMEM-ref shim over ``epilogue.finish`` — the shared op order."""
+    out_ref[...] = _epi.finish(
+        acc, gamma_ref[...], colsum_ref[...],
+        act_zero=act_zero, spec=epilogue,
         scale=epi_refs["scale"][...] if "scale" in epi_refs else None,
         shift=epi_refs["shift"][...] if "shift" in epi_refs else None,
         residual=(epi_refs["residual"][...] if "residual" in epi_refs
                   else None),
+        out_dtype=out_dtype,
     )
-    out_ref[...] = y.astype(out_dtype)
 
 
 def _mpmm_kernel(

@@ -34,6 +34,7 @@ from repro.core import dse as _dse
 from repro.core import flags as _flags
 from repro.core import packing, quant
 from repro.core.packing import PlaneFormat
+from repro.kernels.mpmm import conv_kernel as _conv_kernel
 from repro.kernels.mpmm import epilogue as _epi
 from repro.kernels.mpmm import kernel as _kernel
 from repro.kernels.mpmm import ref as _ref
@@ -47,6 +48,8 @@ __all__ = [
     "prepare_weights",
     "mpmm",
     "mpmm_packed",
+    "conv_mpmm",
+    "conv_implicit_feasible",
     "autotune_tile",
 ]
 
@@ -177,6 +180,13 @@ def combined_int8_weights(planes_u8: jax.Array, fmt: PlaneFormat) -> jax.Array:
     """
     f = fmt.digits_per_byte
     k = fmt.k
+    if fmt.planes == 1 and f == 1:
+        # w_Q == k == 8: the single packed plane already IS the int8
+        # weight (one two's-complement byte per code) — reinterpret in
+        # place instead of running the shift/stack/reshape pipeline,
+        # whose overhead made the fused path slower than the per-plane
+        # loop for w8/k8 (BENCH_kernel.json showed 0.88x).
+        return planes_u8[0, : fmt.k_dim].astype(jnp.int8)
     mask = jnp.uint8((1 << k) - 1)
     parts = [(planes_u8 >> jnp.uint8(k * i)) & mask for i in range(f)]
     kp, n = planes_u8.shape[-2], planes_u8.shape[-1]
@@ -217,10 +227,10 @@ def _xla_impl(
         a_biased, w8, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
-    corrected = acc + act_zero * colsum.astype(jnp.int32)
-    y = corrected.astype(jnp.float32) * gamma.astype(jnp.float32)
-    y = _epi.apply(y, epilogue, scale, shift, residual)
-    return y.astype(_epi.resolve_out_dtype(epilogue, out_dtype))
+    return _epi.finish(
+        acc, gamma, colsum, act_zero=act_zero, spec=epilogue,
+        scale=scale, shift=shift, residual=residual,
+        out_dtype=_epi.resolve_out_dtype(epilogue, out_dtype))
 
 
 def _on_tpu() -> bool:
@@ -299,6 +309,156 @@ def mpmm(
         shift=shift_p, residual=res_p, cache_digits=cache,
     )
     return out[: a2.shape[0], :n].reshape(*lead, n)
+
+
+def conv_implicit_feasible(c_in: int, fmt: PlaneFormat) -> bool:
+    """Whether the pallas implicit-GEMM conv kernel can run this layer.
+
+    Each kernel position's C-slice must start at a byte boundary of the
+    packed K axis (C divisible by 8//k).  Layers that fail (e.g. a
+    3-channel stem under k=2) keep the im2col dataflow.
+    """
+    return c_in % fmt.digits_per_byte == 0
+
+
+# Largest integer magnitude an f32 accumulator holds exactly; below it
+# the direct-conv XLA path may run the conv in f32 (fast Eigen/MXU conv)
+# and stay bit-exact.  XLA's *integer* conv lowers to a naive loop on
+# CPU (~40x slower), so this fast path is what makes the direct dataflow
+# beat materialized im2col end to end on the CI backend.
+_F32_EXACT_BOUND = 1 << 24
+
+
+def _xla_conv_impl(
+    a_biased: jax.Array,     # int8 (B, H, W, C) biased codes, unpadded
+    planes_u8: jax.Array,    # uint8 (P, K//f, N)
+    gamma: jax.Array,
+    colsum: jax.Array,
+    fmt: PlaneFormat,
+    act_zero: int,
+    kh: int, kw: int, stride: int, padding: str,
+    out_dtype,
+    epilogue: Optional[EpilogueSpec] = None,
+    scale: Optional[jax.Array] = None,
+    shift: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Direct conv against recombined int8 weights — no patch buffer.
+
+    The packed digit planes are recombined in-graph (the same bit-field
+    OR as the matmul path) and reshaped HWIO; the conv runs on the raw
+    feature map, spatially pre-padded with the biased zero code
+    ``-act_zero`` so ``u = s + act_zero`` holds at every tap including
+    padding — which keeps the colsum zero-point correction a conv-shaped
+    identity: y_int = conv(s, W) + act_zero * colsum.
+    """
+    c = a_biased.shape[-1]
+    n = planes_u8.shape[-1]
+    w8 = combined_int8_weights(planes_u8, fmt)          # (K, N) int8
+    w_hwio = w8.reshape(kh, kw, c, n)                   # im2col (kh,kw,C) order
+    xp = _ref.pad_spatial(a_biased, kh, kw, stride, padding,
+                          fill=-act_zero)
+    dn = ("NHWC", "HWIO", "NHWC")
+    bound = kh * kw * c * 128 * (1 << (fmt.w_bits - 1))
+    if bound <= _F32_EXACT_BOUND:
+        # Every partial sum is an integer of magnitude <= bound, exactly
+        # representable in f32 under any accumulation order — bit-exact.
+        acc = jax.lax.conv_general_dilated(
+            xp.astype(jnp.float32), w_hwio.astype(jnp.float32),
+            (stride, stride), "VALID", dimension_numbers=dn,
+        ).astype(jnp.int32)
+    else:
+        acc = jax.lax.conv_general_dilated(
+            xp, w_hwio, (stride, stride), "VALID", dimension_numbers=dn,
+            preferred_element_type=jnp.int32,
+        )
+    return _epi.finish(
+        acc, gamma, colsum, act_zero=act_zero, spec=epilogue,
+        scale=scale, shift=shift, residual=residual,
+        out_dtype=_epi.resolve_out_dtype(epilogue, out_dtype),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "act_zero", "kh", "kw", "stride", "padding",
+                     "bn", "variant", "impl", "out_dtype", "epilogue"),
+)
+def conv_mpmm(
+    a_biased: jax.Array,     # int8 (B, H, W, C) biased activation codes
+    planes: jax.Array,       # uint8 (P, (kh*kw*C)//f, N)
+    gamma: jax.Array,        # f32 (1, N)
+    colsum: jax.Array,       # int32 (1, N)
+    scale: Optional[jax.Array] = None,
+    shift: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,    # (B, Ho, Wo, N)
+    *,
+    fmt: PlaneFormat,
+    act_zero: int = 128,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "SAME",
+    bn: Optional[int] = None,
+    variant: str = "st",
+    impl: str = "auto",
+    out_dtype=jnp.float32,
+    epilogue: Optional[EpilogueSpec] = None,
+) -> jax.Array:
+    """Implicit-GEMM convolution over packed planes -> (B, Ho, Wo, N).
+
+    The conv analogue of ``mpmm``: same weight bytes, same epilogue
+    contract, but the patch matrix is never materialized.  ``impl``:
+    ``pallas`` = the implicit-GEMM kernel (conv_kernel.py), ``xla`` =
+    direct ``lax.conv_general_dilated`` against recombined int8 weights,
+    ``auto`` = pallas on TPU, xla elsewhere.  Bit-exact vs
+    ``ref.conv_ref`` (and hence vs the materialized-im2col path).
+    """
+    _epi.validate_operands(epilogue, scale, shift, residual)
+    b, h, w, c = a_biased.shape
+    n = planes.shape[-1]
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+
+    if impl == "xla":
+        return _xla_conv_impl(
+            a_biased, planes, gamma, colsum, fmt, act_zero,
+            kh, kw, stride, padding, out_dtype, epilogue, scale, shift,
+            residual)
+
+    if not conv_implicit_feasible(c, fmt):
+        raise ValueError(
+            f"pallas implicit-GEMM conv needs C divisible by the packed "
+            f"digits-per-byte: C={c}, 8//k={fmt.digits_per_byte} — route "
+            f"this layer to dataflow='im2col' or impl='xla'")
+    xp = _ref.pad_spatial(a_biased, kh, kw, stride, padding,
+                          fill=-act_zero)
+    ho = (xp.shape[1] - kh) // stride + 1
+    wo = (xp.shape[2] - kw) // stride + 1
+
+    if bn is None:
+        conv = _dse.ConvShape(batch=b, h=h, w=w, c_in=c, c_out=n,
+                              kh=kh, kw=kw, stride=stride, padding=padding)
+        choice = _dse.choose_conv_dataflow(
+            conv, w_bits=fmt.w_bits, k=fmt.k, variant=variant)
+        bn = choice.tile_implicit.bn if choice.tile_implicit else 128
+    planes_p = _pad_to(planes, 2, bn)
+    gamma_p = _pad_to(gamma, 1, bn)
+    colsum_p = _pad_to(colsum, 1, bn)
+    scale_p = _pad_to(scale, 1, bn) if scale is not None else None
+    shift_p = _pad_to(shift, 1, bn) if shift is not None else None
+    res_p = _pad_to(residual, 3, bn) if residual is not None else None
+    n_k = kh * kw
+    cache = n_k * c * fmt.planes * bn <= DIGIT_CACHE_BUDGET_BYTES
+    out = _conv_kernel.conv_mpmm_pallas(
+        xp, planes_p, gamma_p, colsum_p,
+        fmt=fmt, act_zero=act_zero, kh=kh, kw=kw, stride=stride,
+        out_hw=(ho, wo), bn=bn, variant=variant, out_dtype=out_dtype,
+        epilogue=epilogue, scale=scale_p, shift=shift_p, residual=res_p,
+        cache_digits=cache,
+    )
+    return out[..., :n]
 
 
 def mpmm_packed(

@@ -27,7 +27,8 @@ from repro.core.packing import PlaneFormat
 from repro.kernels.mpmm import epilogue as _epilogue
 from repro.kernels.mpmm.epilogue import EpilogueSpec
 
-__all__ = ["mpmm_ref", "mpmm_ref_codes", "colsum_from_packed"]
+__all__ = ["mpmm_ref", "mpmm_ref_codes", "colsum_from_packed",
+           "pad_spatial", "conv_patches_codes", "conv_ref"]
 
 
 def unpack_to_int(packed: jax.Array, fmt: PlaneFormat) -> jax.Array:
@@ -58,6 +59,86 @@ def mpmm_ref_codes(
     return jax.lax.dot_general(
         u, w_int, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
     )
+
+
+def pad_spatial(a: jax.Array, kh: int, kw: int, stride: int, padding: str,
+                *, fill: int) -> jax.Array:
+    """Apply a conv's spatial padding to (B, H, W, C) codes, filled with
+    ``fill`` — the biased code of a float zero, ``-act_zero``.
+
+    The load-bearing zero-point invariant of the implicit dataflow
+    (u = s + act_zero must hold at every tap, padding included) lives
+    HERE and only here; the oracle, the XLA direct conv and the pallas
+    kernel wrapper all pad through this helper.
+    """
+    _, h, w, _ = a.shape
+    pads = jax.lax.padtype_to_pads((h, w), (kh, kw), (stride, stride),
+                                   padding)
+    return jnp.pad(a, ((0, 0), pads[0], pads[1], (0, 0)),
+                   constant_values=fill)
+
+
+def conv_patches_codes(
+    a_biased: jax.Array, kh: int, kw: int, stride: int, padding: str,
+    *, fill: int,
+) -> jax.Array:
+    """int8 codes (B, H, W, C) -> patch matrix (B, Ho, Wo, kh*kw*C).
+
+    The explicit im2col on *integer codes* that the implicit dataflow
+    must reproduce, features ordered (kh, kw, C) to match the HWIO
+    weight flattening.  Pure gather — quantization commutes with it, so
+    this equals quantize(im2col(x_float)).
+    """
+    ap = pad_spatial(a_biased, kh, kw, stride, padding, fill=fill)
+    hp, wp = ap.shape[1], ap.shape[2]
+    ho = (hp - kh) // stride + 1
+    wo = (wp - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(ap[:, i:i + (ho - 1) * stride + 1:stride,
+                           j:j + (wo - 1) * stride + 1:stride, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnums=(2,),
+    static_argnames=("act_zero", "kh", "kw", "stride", "padding",
+                     "out_dtype", "epilogue"),
+)
+def conv_ref(
+    a_biased: jax.Array,
+    packed: jax.Array,
+    fmt: PlaneFormat,
+    gamma: jax.Array,
+    *,
+    act_zero: int,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "SAME",
+    out_dtype=jnp.float32,
+    epilogue: Optional[EpilogueSpec] = None,
+    scale: Optional[jax.Array] = None,
+    shift: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Conv oracle: explicit patch gather + ``mpmm_ref`` — (B, Ho, Wo, N).
+
+    Defines bit-exactness for both implicit-GEMM implementations (the
+    pallas conv kernel and the XLA direct-conv path) and equals the
+    materialized-im2col serve path by construction.
+    """
+    patches = conv_patches_codes(a_biased, kh, kw, stride, padding,
+                                 fill=-act_zero)
+    b, ho, wo, kdim = patches.shape
+    n = packed.shape[-1]
+    res2 = residual.reshape(-1, n) if residual is not None else None
+    y = mpmm_ref(patches.reshape(-1, kdim), packed, fmt, gamma,
+                 act_zero=act_zero, out_dtype=out_dtype, epilogue=epilogue,
+                 scale=scale, shift=shift, residual=res2)
+    return y.reshape(b, ho, wo, n)
 
 
 @functools.partial(

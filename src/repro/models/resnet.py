@@ -43,6 +43,9 @@ class ResNetConfig:
     img_size: int = 224
     width: int = 64
     family: str = "cnn"
+    # Truncated-depth variants (CI smoke benches): overrides the
+    # per-depth stage table, e.g. (1, 1) = a 2-block net.
+    stages_override: Optional[Tuple[int, ...]] = None
 
     @property
     def block(self) -> str:
@@ -50,7 +53,13 @@ class ResNetConfig:
 
     @property
     def stages(self) -> Tuple[int, ...]:
-        return RESNET_STAGES[self.depth][1]
+        return self.stages_override or RESNET_STAGES[self.depth][1]
+
+    @property
+    def fc_in(self) -> int:
+        """Channels entering the classifier: last stage width x expansion."""
+        expansion = 4 if self.block == "bottleneck" else 1
+        return self.width * 2 ** (len(self.stages) - 1) * expansion
 
 
 # --- im2col conv ------------------------------------------------------------
@@ -149,9 +158,8 @@ def specs(cfg: ResNetConfig, mode: str = "train",
     tree: Dict = {
         "stem": qconv_spec(3, cfg.width, 7, layer_class="boundary"),
         "bn_stem": bn_spec(cfg.width),
-        "fc": Q.qlinear_spec(cfg.width * 8
-                             * (4 if cfg.block == "bottleneck" else 1),
-                             cfg.n_classes, axes=("embed", "vocab"),
+        "fc": Q.qlinear_spec(cfg.fc_in, cfg.n_classes,
+                             axes=("embed", "vocab"),
                              layer_class="boundary"),
     }
     mk = _bottleneck_spec if cfg.block == "bottleneck" else _basic_spec
@@ -277,54 +285,63 @@ def pack_for_serve(cfg: ResNetConfig, params, state, policy):
     return out
 
 
-def _shortcut(p, x, policy, stride, impl, tile):
+def _shortcut(p, x, policy, stride, impl, tile, dataflow):
     """Identity or projection shortcut (projection: conv + folded BN)."""
     if "proj" not in p:
         return x
     s, t = p["bn_proj"]
     return Q.qconv_serve_apply(
         p["proj"], x, policy, k=1, stride=stride, impl=impl, tile=tile,
-        epilogue=Q.EpilogueSpec(bn=True), scale=s, shift=t)
+        epilogue=Q.EpilogueSpec(bn=True), scale=s, shift=t,
+        dataflow=dataflow)
 
 
-def _basic_serve(p, x, policy, stride, impl, tile):
-    sc = _shortcut(p, x, policy, stride, impl, tile)
+def _basic_serve(p, x, policy, stride, impl, tile, dataflow):
+    sc = _shortcut(p, x, policy, stride, impl, tile, dataflow)
     s1, t1 = p["bn1"]
     h = Q.qconv_serve_apply(
         p["conv1"], x, policy, k=3, stride=stride, impl=impl, tile=tile,
-        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1, shift=t1)
+        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1, shift=t1,
+        dataflow=dataflow)
     s2, t2 = p["bn2"]
     # conv2 carries BN2 + shortcut add + final ReLU in one kernel epilogue.
     return Q.qconv_serve_apply(
         p["conv2"], h, policy, k=3, impl=impl, tile=tile,
         epilogue=Q.EpilogueSpec(bn=True, residual=True, relu=True),
-        scale=s2, shift=t2, residual=sc)
+        scale=s2, shift=t2, residual=sc, dataflow=dataflow)
 
 
-def _bottleneck_serve(p, x, policy, stride, impl, tile):
-    sc = _shortcut(p, x, policy, stride, impl, tile)
+def _bottleneck_serve(p, x, policy, stride, impl, tile, dataflow):
+    sc = _shortcut(p, x, policy, stride, impl, tile, dataflow)
     s1, t1 = p["bn1"]
     h = Q.qconv_serve_apply(
         p["conv1"], x, policy, k=1, impl=impl, tile=tile,
-        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1, shift=t1)
+        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1, shift=t1,
+        dataflow=dataflow)
     s2, t2 = p["bn2"]
     h = Q.qconv_serve_apply(
         p["conv2"], h, policy, k=3, stride=stride, impl=impl, tile=tile,
-        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s2, shift=t2)
+        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s2, shift=t2,
+        dataflow=dataflow)
     s3, t3 = p["bn3"]
     return Q.qconv_serve_apply(
         p["conv3"], h, policy, k=1, impl=impl, tile=tile,
         epilogue=Q.EpilogueSpec(bn=True, residual=True, relu=True),
-        scale=s3, shift=t3, residual=sc)
+        scale=s3, shift=t3, residual=sc, dataflow=dataflow)
 
 
 def serve_forward(cfg: ResNetConfig, packed, images, policy, *,
-                  impl: str = "auto", tile=None):
+                  impl: str = "auto", tile=None, dataflow: str = "auto"):
     """Deployed forward over a ``pack_for_serve`` tree.
 
     Every inner block runs BN + ReLU + shortcut through the fused mpmm
-    epilogue (no standalone BN op in the traced graph), and with
-    ``tile=None`` each layer's pallas tile comes from the DSE autotuner.
+    epilogue (no standalone BN op in the traced graph); with
+    ``tile=None`` each layer's pallas tile comes from the DSE autotuner,
+    and with ``dataflow='auto'`` (the default) each conv picks im2col vs
+    implicit-GEMM through the DSE patch-reuse model — on the implicit
+    path the network serves without ever materializing a patch matrix.
+    ``dataflow='im2col'`` pins the old materialized path (benchmarks
+    use it as the baseline).
     """
     s, t = packed["bn_stem"]
     # The stem sees raw (possibly mean-normalized) pixels that straddle
@@ -334,12 +351,14 @@ def serve_forward(cfg: ResNetConfig, packed, images, policy, *,
     x = Q.qconv_serve_apply(
         packed["stem"], images, policy, k=7, stride=2,
         layer_class="boundary", impl=impl, tile=tile, act_signed=True,
-        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s, shift=t)
+        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s, shift=t,
+        dataflow=dataflow)
     x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
     fwd = _bottleneck_serve if cfg.block == "bottleneck" else _basic_serve
     for si, bi, cin, cmid, stride in _block_channels(cfg):
-        x = fwd(packed[f"s{si}b{bi}"], x, policy, stride, impl, tile)
+        x = fwd(packed[f"s{si}b{bi}"], x, policy, stride, impl, tile,
+                dataflow)
     x = jnp.mean(x, axis=(1, 2))
     return Q.qlinear_serve_apply(packed["fc"], x, policy,
                                  layer_class="boundary", impl=impl, tile=tile)
@@ -371,7 +390,7 @@ def gemm_workload(cfg: ResNetConfig, batch: int = 1) -> List[Gemm]:
             if stride != 1 or cin != cmid:
                 gemms.append(Gemm(f"s{si}b{bi}p", m, cin, cmid))
         hw = hw_out
-    gemms.append(Gemm("fc", batch, cfg.width * expansion * 8, cfg.n_classes,
+    gemms.append(Gemm("fc", batch, cfg.fc_in, cfg.n_classes,
                       layer_class="boundary"))
     return gemms
 

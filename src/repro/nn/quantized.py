@@ -39,6 +39,7 @@ __all__ = [
     "qconv_spec",
     "qconv_apply",
     "qconv_serve_apply",
+    "conv_serve_dataflow",
     "im2col",
     "pack_qlinear",
     "pack_tree",
@@ -193,6 +194,25 @@ def qlinear_serve_spec(
     }
 
 
+def _fold_bias(p, epilogue, scale, shift):
+    """Fold a layer bias into the epilogue's scale/shift stage.
+
+    A bias must enter BEFORE the epilogue post-ops (the QAT forward adds
+    it straight after the matmul), so it becomes part of the folded-BN
+    affine instead of a post-kernel add.  Shared by the linear and conv
+    serve paths.
+    """
+    if "b" in p and epilogue is not None:
+        b = jnp.asarray(p["b"], jnp.float32).reshape(1, -1)
+        if epilogue.bn:
+            shift = shift.astype(jnp.float32) + b * scale.astype(jnp.float32)
+        else:
+            epilogue = dataclasses.replace(epilogue, bn=True)
+            scale = jnp.ones_like(b)
+            shift = b
+    return epilogue, scale, shift
+
+
 def qlinear_serve_apply(
     p: Dict[str, jax.Array],
     x: jax.Array,
@@ -229,17 +249,7 @@ def qlinear_serve_apply(
         return mpmm_epilogue.apply(
             y.astype(jnp.float32), epilogue, scale, shift, residual
         ).astype(out_dtype)
-    # A bias must enter BEFORE the epilogue post-ops (the QAT forward
-    # adds it straight after the matmul): fold it into the epilogue's
-    # scale/shift stage instead of adding it after the kernel.
-    if "b" in p and epilogue is not None:
-        b = jnp.asarray(p["b"], jnp.float32).reshape(1, -1)
-        if epilogue.bn:
-            shift = shift.astype(jnp.float32) + b * scale.astype(jnp.float32)
-        else:
-            epilogue = dataclasses.replace(epilogue, bn=True)
-            scale = jnp.ones_like(b)
-            shift = b
+    epilogue, scale, shift = _fold_bias(p, epilogue, scale, shift)
     w_bits = policy.bits_for(layer_class)
     k = policy.k
     kdim = x.shape[-1]
@@ -293,6 +303,44 @@ def qconv_apply(p, x, policy, *, k: int, stride: int = 1, padding="SAME",
                          quantize_act=quantize_act)
 
 
+def _resolve_impl(impl: str) -> str:
+    """'auto' -> the backend mpmm will actually run (pallas on TPU)."""
+    if impl == "auto":
+        return "pallas" if mpmm_ops._on_tpu() else "xla"
+    return impl
+
+
+def conv_serve_dataflow(x_shape, policy, *, k: int, stride: int,
+                        padding: str, layer_class: str, n_out: int,
+                        impl: str) -> str:
+    """Resolve the per-layer conv dataflow: 'im2col' or 'implicit'.
+
+    The decision runs the extended DSE model (`core.dse.
+    choose_conv_dataflow`), whose memory term charges im2col the
+    kh·kw/stride² patch-inflation and the implicit dataflow only the raw
+    feature map — then gates on kernel feasibility: the pallas
+    implicit-GEMM kernel needs C divisible by the packed digits-per-byte
+    (a 3-channel stem under k=2 stays on im2col; the XLA direct conv has
+    no such constraint).
+    """
+    b, h, w, cin = x_shape
+    w_bits = policy.bits_for(layer_class)
+    fmt = PlaneFormat(w_bits=w_bits, k=policy.k, k_dim=k * k * cin)
+    resolved = _resolve_impl(impl)
+    if resolved == "pallas" and not mpmm_ops.conv_implicit_feasible(cin, fmt):
+        return "im2col"
+    from repro.core import dse as _dse
+    # No layer_class on the ConvShape: the cost model takes w_bits
+    # explicitly, and the leaner key lets conv_mpmm's bn lookup hit the
+    # same lru_cache entry instead of re-sweeping tiles.
+    conv = _dse.ConvShape(batch=b, h=h, w=w, c_in=cin, c_out=n_out,
+                          kh=k, kw=k, stride=stride, padding=padding)
+    choice = _dse.choose_conv_dataflow(conv, w_bits=w_bits, k=policy.k,
+                                       variant=policy.variant,
+                                       pin_tile=(resolved == "pallas"))
+    return choice.dataflow
+
+
 def qconv_serve_apply(p, x, policy, *, k: int, stride: int = 1,
                       padding="SAME", layer_class: str = "inner",
                       tile: Optional[mpmm_ops.TileShape] = None,
@@ -301,17 +349,62 @@ def qconv_serve_apply(p, x, policy, *, k: int, stride: int = 1,
                       scale: Optional[jax.Array] = None,
                       shift: Optional[jax.Array] = None,
                       residual: Optional[jax.Array] = None,
-                      act_signed: bool = False):
-    """Deployed conv forward: im2col + packed mpmm with fused epilogue.
+                      act_signed: bool = False,
+                      dataflow: str = "auto"):
+    """Deployed conv forward: packed planes + fused epilogue, per-layer
+    dataflow.
 
-    BN (folded to scale/shift), the shortcut add, and ReLU all execute in
-    the matmul kernel epilogue — the FPGA post-processing pipeline.
+    ``dataflow``: 'im2col' materializes the patch matrix and runs the
+    matmul path (the pre-PR-2 behavior); 'implicit' runs convolution as
+    implicit GEMM (`ops.conv_mpmm`) — patches gathered in VMEM (pallas)
+    or a direct ``lax.conv`` on recombined int8 weights (xla), never a
+    patch buffer in HBM; 'auto' picks per layer via the DSE cost model
+    (patch-reuse term) + kernel feasibility.  Both dataflows are
+    bit-exact to each other.  BN (folded to scale/shift), the shortcut
+    add, and ReLU all execute in the kernel epilogue either way — the
+    FPGA post-processing pipeline.
     """
-    cols = im2col(x, k, k, stride, padding)
-    return qlinear_serve_apply(
-        p, cols, policy, layer_class=layer_class, tile=tile, impl=impl,
-        compute_dtype=compute_dtype, epilogue=epilogue, scale=scale,
-        shift=shift, residual=residual, act_signed=act_signed)
+    if "w" in p or not policy.quantize:
+        dataflow = "im2col"  # FP baseline serves through the bf16 matmul
+    elif dataflow == "auto":
+        dataflow = conv_serve_dataflow(
+            x.shape, policy, k=k, stride=stride, padding=padding,
+            layer_class=layer_class, n_out=p["planes"].shape[-1], impl=impl)
+    elif dataflow == "implicit":
+        # An explicit 'implicit' still honors kernel feasibility: a layer
+        # the pallas conv kernel cannot run (C not a multiple of 8//k)
+        # falls back to im2col instead of crashing mid-graph.
+        fmt_gate = PlaneFormat(w_bits=policy.bits_for(layer_class),
+                               k=policy.k, k_dim=k * k * x.shape[-1])
+        if (_resolve_impl(impl) == "pallas"
+                and not mpmm_ops.conv_implicit_feasible(x.shape[-1],
+                                                        fmt_gate)):
+            dataflow = "im2col"
+    if dataflow == "im2col":
+        cols = im2col(x, k, k, stride, padding)
+        return qlinear_serve_apply(
+            p, cols, policy, layer_class=layer_class, tile=tile, impl=impl,
+            compute_dtype=compute_dtype, epilogue=epilogue, scale=scale,
+            shift=shift, residual=residual, act_signed=act_signed)
+    assert dataflow == "implicit", dataflow
+    mpmm_epilogue.validate_operands(epilogue, scale, shift, residual)
+    epilogue, scale, shift = _fold_bias(p, epilogue, scale, shift)
+    w_bits = policy.bits_for(layer_class)
+    cin = x.shape[-1]
+    fmt = PlaneFormat(w_bits=w_bits, k=policy.k, k_dim=k * k * cin)
+    a = mpmm_ops.quantize_activations(x, p["ga"], policy.a_bits,
+                                      signed=act_signed)
+    y = mpmm_ops.conv_mpmm(
+        a, p["planes"], p["gamma"], p["colsum"],
+        scale, shift, residual,
+        fmt=fmt, act_zero=0 if act_signed else 2 ** (policy.a_bits - 1),
+        kh=k, kw=k, stride=stride, padding=padding,
+        bn=tile.bn if tile is not None else None,
+        variant=policy.variant, impl=impl, out_dtype=compute_dtype,
+        epilogue=epilogue)
+    if "b" in p and epilogue is None:
+        y = y + p["b"].astype(compute_dtype)
+    return y
 
 
 def pack_qlinear(

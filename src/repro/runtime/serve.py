@@ -1,4 +1,5 @@
-"""Batched serving runtime: packed-weight deployment + greedy generation.
+"""Batched serving runtime: packed-weight deployment, greedy generation
+(LM families) and bucketed image serving (CNN family).
 
 The deployment path is the paper's: take QAT-trained params, pack every
 inner linear into k-bit digit planes (nn/quantized.pack_tree), then run
@@ -22,7 +23,7 @@ from repro.nn import partitioning as part
 from repro.nn import quantized as Q
 from repro.nn.layers import pack_embed
 
-__all__ = ["pack_for_serving", "Generator"]
+__all__ = ["pack_for_serving", "Generator", "ImageServer"]
 
 
 def pack_for_serving(api, train_params):
@@ -33,6 +34,74 @@ def pack_for_serving(api, train_params):
     if "embed" in packed and api.policy.quantize and "table" in packed["embed"]:
         packed["embed"] = pack_embed(packed["embed"], api.policy)
     return packed
+
+
+@dataclasses.dataclass
+class ImageServer:
+    """Batched CNN serving over a packed ``serve_forward`` tree.
+
+    The LM ``Generator`` below is prefill/decode-shaped; CNNs serve one
+    stateless forward per request batch.  Incoming batches of any size
+    are chunked to the largest bucket and the remainder padded up to the
+    smallest bucket that fits, so the jit cache holds exactly
+    ``len(batch_buckets)`` compiled graphs regardless of traffic —
+    resizing a fleet never pays a recompile.
+
+    ``params`` is a ``models.resnet.pack_for_serve`` tree (or any CNN
+    family module exposing ``serve_forward``).
+    """
+
+    api: Any
+    params: Any
+    batch_buckets: tuple = (1, 2, 4, 8)
+    impl: str = "auto"
+    dataflow: str = "auto"
+
+    def __post_init__(self):
+        if self.api.family != "cnn":
+            raise ValueError(f"ImageServer serves CNNs, got family "
+                             f"{self.api.family!r}")
+        self.batch_buckets = tuple(sorted(self.batch_buckets))
+        self._fns: Dict[int, Any] = {}
+
+    def _fn(self, bucket: int):
+        """One jitted serve graph per batch bucket."""
+        if bucket not in self._fns:
+            mod, cfg, pol = self.api.mod, self.api.cfg, self.api.policy
+            self._fns[bucket] = jax.jit(
+                lambda p, im: mod.serve_forward(
+                    cfg, p, im, pol, impl=self.impl, dataflow=self.dataflow))
+        return self._fns[bucket]
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.batch_buckets:
+            if b >= n:
+                return b
+        return self.batch_buckets[-1]
+
+    def predict(self, images: np.ndarray) -> np.ndarray:
+        """(N, H, W, 3) float images -> (N, n_classes) logits."""
+        n = images.shape[0]
+        if n == 0:  # a drained request queue is not an error
+            return np.zeros((0, self.api.cfg.n_classes), np.float32)
+        outs: List[np.ndarray] = []
+        i = 0
+        while i < n:
+            bucket = self._bucket_for(n - i)
+            take = min(n - i, bucket)
+            chunk = np.asarray(images[i:i + take])
+            if take < bucket:  # pad the tail up to the bucket
+                pad = np.zeros((bucket - take,) + chunk.shape[1:],
+                               chunk.dtype)
+                chunk = np.concatenate([chunk, pad])
+            y = self._fn(bucket)(self.params, jnp.asarray(chunk))
+            outs.append(np.asarray(y[:take]))
+            i += take
+        return np.concatenate(outs)
+
+    @property
+    def compiled_buckets(self) -> tuple:
+        return tuple(sorted(self._fns))
 
 
 @dataclasses.dataclass

@@ -1,0 +1,297 @@
+"""Implicit-GEMM conv dataflow vs the im2col reference (bit-exact).
+
+Covers the full routing matrix of PR 2: the pallas implicit-GEMM kernel
+and the XLA direct-conv path against ``ref.conv_ref`` (explicit patch
+gather + mpmm oracle) over kernel sizes x strides x paddings x ST/SA,
+every epilogue combination, the DSE dataflow chooser, and ResNet
+basic/bottleneck blocks end-to-end (implicit == materialized-im2col).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dse, packing
+from repro.core.packing import PlaneFormat
+from repro.core.precision import PrecisionPolicy
+from repro.kernels.mpmm import ops, ref
+from repro.kernels.mpmm.epilogue import EpilogueSpec
+
+
+def make_conv_case(rng, b, h, w, c, n, kh, w_bits, k):
+    a = jnp.asarray(rng.integers(-128, 128, (b, h, w, c)), jnp.int8)
+    kdim = kh * kh * c
+    lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1) - 1
+    w_int = jnp.asarray(rng.integers(lo, hi + 1, (kdim, n)), jnp.int32)
+    fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=kdim)
+    planes = packing.pack_planes(w_int, fmt, axis=-2)
+    gamma = jnp.asarray(rng.uniform(0.001, 0.01, (1, n)), jnp.float32)
+    colsum = jnp.sum(w_int, axis=0, dtype=jnp.int32).reshape(1, n)
+    return a, planes, gamma, colsum, fmt
+
+
+KSP = [(kh, s, p) for kh in (1, 3, 7) for s in (1, 2)
+       for p in ("SAME", "VALID")]
+
+
+class TestConvMpmmVsOracle:
+    """The issue's matrix: k x stride x padding x variant, both impls."""
+
+    @pytest.mark.parametrize("kh,stride,padding", KSP)
+    @pytest.mark.parametrize("variant", ["st", "sa"])
+    def test_bit_exact(self, kh, stride, padding, variant, rng):
+        a, planes, gamma, colsum, fmt = make_conv_case(
+            rng, 2, 9, 9, 8, 24, kh, 4, 2)
+        y_ref = ref.conv_ref(a, planes, fmt, gamma, act_zero=128,
+                             kh=kh, kw=kh, stride=stride, padding=padding)
+        for impl in ("xla", "pallas"):
+            y = ops.conv_mpmm(a, planes, gamma, colsum, fmt=fmt,
+                              kh=kh, kw=kh, stride=stride, padding=padding,
+                              impl=impl, variant=variant)
+            assert y.shape == y_ref.shape
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref),
+                                          err_msg=f"{impl}")
+
+    @pytest.mark.parametrize("w_bits,k", [(1, 1), (2, 2), (8, 2), (8, 8)])
+    def test_formats(self, w_bits, k, rng):
+        a, planes, gamma, colsum, fmt = make_conv_case(
+            rng, 1, 8, 8, 8, 16, 3, w_bits, k)
+        y_ref = ref.conv_ref(a, planes, fmt, gamma, act_zero=128, kh=3, kw=3)
+        for impl in ("xla", "pallas"):
+            y = ops.conv_mpmm(a, planes, gamma, colsum, fmt=fmt, kh=3, kw=3,
+                              impl=impl)
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+    def test_signed_act_zero(self, rng):
+        """act_zero=0 (signed stem codes): padding fills with code 0."""
+        a, planes, gamma, colsum, fmt = make_conv_case(
+            rng, 2, 8, 8, 8, 16, 3, 8, 2)
+        y_ref = ref.conv_ref(a, planes, fmt, gamma, act_zero=0, kh=3, kw=3)
+        for impl in ("xla", "pallas"):
+            y = ops.conv_mpmm(a, planes, gamma, colsum, fmt=fmt, kh=3, kw=3,
+                              act_zero=0, impl=impl)
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+    def test_int32_conv_fallback_above_f32_bound(self, rng, monkeypatch):
+        """When the f32-exactness bound fails, the xla path must take the
+        integer conv and stay bit-exact."""
+        monkeypatch.setattr(ops, "_F32_EXACT_BOUND", 1)
+        a, planes, gamma, colsum, fmt = make_conv_case(
+            rng, 1, 6, 6, 8, 16, 3, 8, 2)
+        y_ref = ref.conv_ref(a, planes, fmt, gamma, act_zero=128, kh=3, kw=3)
+        y = ops.conv_mpmm(a, planes, gamma, colsum, fmt=fmt, kh=3, kw=3,
+                          impl="xla")
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+class TestConvEpilogues:
+    """Every EpilogueSpec combination through both implicit impls."""
+
+    COMBOS = [(b, r, s) for b in (False, True) for r in (False, True)
+              for s in (False, True)]
+
+    @pytest.mark.parametrize("combo", COMBOS)
+    def test_bit_exact(self, combo, rng):
+        bn, relu, resid = combo
+        spec = EpilogueSpec(bn=bn, relu=relu, residual=resid)
+        a, planes, gamma, colsum, fmt = make_conv_case(
+            rng, 2, 7, 7, 8, 16, 3, 4, 2)
+        n = 16
+        scale = (jnp.asarray(rng.uniform(0.5, 2.0, (1, n)), jnp.float32)
+                 if bn else None)
+        shift = (jnp.asarray(rng.normal(0, 1, (1, n)), jnp.float32)
+                 if bn else None)
+        res = (jnp.asarray(rng.normal(0, 1, (2, 7, 7, n)), jnp.float32)
+               if resid else None)
+        y_ref = ref.conv_ref(a, planes, fmt, gamma, act_zero=128, kh=3, kw=3,
+                             epilogue=spec, scale=scale, shift=shift,
+                             residual=res)
+        for impl in ("xla", "pallas"):
+            y = ops.conv_mpmm(a, planes, gamma, colsum, scale, shift, res,
+                              fmt=fmt, kh=3, kw=3, impl=impl, epilogue=spec)
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref),
+                                          err_msg=f"{impl}")
+
+    def test_out_dtype_override(self, rng):
+        spec = EpilogueSpec(relu=True, out_dtype=jnp.bfloat16)
+        a, planes, gamma, colsum, fmt = make_conv_case(
+            rng, 1, 6, 6, 8, 16, 3, 4, 2)
+        for impl in ("xla", "pallas"):
+            y = ops.conv_mpmm(a, planes, gamma, colsum, fmt=fmt, kh=3, kw=3,
+                              impl=impl, epilogue=spec)
+            assert y.dtype == jnp.bfloat16
+
+
+class TestDigitCacheConv:
+    def test_cached_equals_uncached(self, rng):
+        from repro.kernels.mpmm import conv_kernel as CK
+        a, planes, gamma, colsum, fmt = make_conv_case(
+            rng, 2, 8, 8, 8, 16, 3, 4, 2)
+        planes_p = jnp.pad(planes, ((0, 0), (0, 0), (0, 128 - 16)))
+        gamma_p = jnp.pad(gamma, ((0, 0), (0, 128 - 16)))
+        colsum_p = jnp.pad(colsum, ((0, 0), (0, 128 - 16)))
+        xp = jnp.pad(a, ((0, 0), (1, 1), (1, 1), (0, 0)),
+                     constant_values=-128)
+        kw = dict(fmt=fmt, act_zero=128, kh=3, kw=3, stride=1,
+                  out_hw=(8, 8), bn=128)
+        y_c = CK.conv_mpmm_pallas(xp, planes_p, gamma_p, colsum_p,
+                                  cache_digits=True, **kw)
+        y_u = CK.conv_mpmm_pallas(xp, planes_p, gamma_p, colsum_p,
+                                  cache_digits=False, **kw)
+        np.testing.assert_array_equal(np.asarray(y_c), np.asarray(y_u))
+
+
+class TestDataflowChooser:
+    """The extended DSE model: patch-reuse term + feasibility gate."""
+
+    def test_patch_reuse_term(self):
+        c = dse.ConvShape(batch=8, h=56, w=56, c_in=64, c_out=64,
+                          kh=3, kw=3, stride=1)
+        assert c.patch_reuse == pytest.approx(9.0)
+        assert dse.ConvShape(batch=8, h=56, w=56, c_in=64, c_out=64,
+                             kh=1, kw=1, stride=1).patch_reuse == 1.0
+        assert dse.ConvShape(batch=8, h=224, w=224, c_in=3, c_out=64,
+                             kh=7, kw=7, stride=2).patch_reuse == \
+            pytest.approx(49 / 4)
+
+    def test_implicit_wins_3x3(self):
+        """High patch reuse -> the implicit dataflow's memory term wins."""
+        conv = dse.ConvShape(batch=8, h=56, w=56, c_in=64, c_out=64,
+                             kh=3, kw=3, stride=1)
+        choice = dse.choose_conv_dataflow(conv, w_bits=2, k=2)
+        assert choice.dataflow == "implicit"
+        assert choice.speedup > 1.0
+        assert choice.tile is choice.tile_implicit
+
+    def test_memory_term_orders_dataflows(self):
+        """im2col memory traffic must exceed implicit by ~the patch-reuse
+        factor for a stride-1 3x3 conv."""
+        conv = dse.ConvShape(batch=8, h=28, w=28, c_in=128, c_out=128,
+                             kh=3, kw=3, stride=1)
+        fmt = PlaneFormat(w_bits=2, k=2, k_dim=conv.k)
+        tile = dse.TileCandidate(128, 128, 128)
+        _, m_i = dse.conv_time(conv, tile, fmt, dataflow="im2col")
+        _, m_d = dse.conv_time(conv, tile, fmt, dataflow="implicit")
+        assert m_i > 2.0 * m_d
+
+    def test_compute_term_dataflow_invariant(self):
+        conv = dse.ConvShape(batch=4, h=14, w=14, c_in=256, c_out=256,
+                             kh=3, kw=3, stride=1)
+        fmt = PlaneFormat(w_bits=4, k=2, k_dim=conv.k)
+        tile = dse.TileCandidate(128, 256, 128)
+        c_i, _ = dse.conv_time(conv, tile, fmt, dataflow="im2col")
+        c_d, _ = dse.conv_time(conv, tile, fmt, dataflow="implicit")
+        assert c_i == c_d
+
+    def test_feasibility_gate_routes_stem_to_im2col(self):
+        """C=3 under k=2 (f=4) cannot start kernel positions at byte
+        boundaries -> the pallas route falls back to im2col."""
+        from repro.nn import quantized as Q
+        policy = PrecisionPolicy(inner_bits=2, k=2)
+        df = Q.conv_serve_dataflow((2, 16, 16, 3), policy, k=7, stride=2,
+                                   padding="SAME", layer_class="boundary",
+                                   n_out=16, impl="pallas")
+        assert df == "im2col"
+        # the XLA direct conv has no such constraint
+        df = Q.conv_serve_dataflow((2, 16, 16, 3), policy, k=7, stride=2,
+                                   padding="SAME", layer_class="boundary",
+                                   n_out=16, impl="xla")
+        assert df == "implicit"
+
+
+class TestResNetBlocksEndToEnd:
+    """Basic and bottleneck blocks: implicit dataflow == materialized
+    im2col, bit for bit, through pack_for_serve trees."""
+
+    def _packed_net(self, depth, key, stages=(1,)):
+        from repro.models import resnet as R
+        from repro.nn import param as nnp
+        cfg = R.ResNetConfig(name=f"r{depth}-blk", depth=depth, n_classes=8,
+                             img_size=16, width=16, stages_override=stages)
+        specs = R.specs(cfg)
+        params = nnp.init_params(specs, key)
+        state = R.init_bn_state(specs)
+        policy = PrecisionPolicy(inner_bits=4, k=2)
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            0.4, 0.6, (2, 16, 16, 3)), jnp.float32)
+        _, state = R.apply_with_state(cfg, params, state, x, policy,
+                                      training=True)
+        packed = R.pack_for_serve(cfg, params, state, policy)
+        return R, cfg, policy, packed, x
+
+    @pytest.mark.parametrize("depth", [18, 50])
+    def test_block_dataflows_bit_exact(self, depth, key):
+        R, cfg, policy, packed, x = self._packed_net(depth, key)
+        y_im2col = R.serve_forward(cfg, packed, x, policy, impl="xla",
+                                   dataflow="im2col")
+        y_implicit = R.serve_forward(cfg, packed, x, policy, impl="xla",
+                                     dataflow="implicit")
+        y_auto = R.serve_forward(cfg, packed, x, policy, impl="xla",
+                                 dataflow="auto")
+        np.testing.assert_array_equal(np.asarray(y_im2col, np.float32),
+                                      np.asarray(y_implicit, np.float32))
+        np.testing.assert_array_equal(np.asarray(y_im2col, np.float32),
+                                      np.asarray(y_auto, np.float32))
+
+    def test_two_stage_net_with_projection_shortcuts(self, key):
+        """stages (1,1) exercises stride-2 blocks + projection shortcuts
+        (the residual-carrying epilogue) on both dataflows."""
+        R, cfg, policy, packed, x = self._packed_net(18, key, stages=(1, 1))
+        y_i = R.serve_forward(cfg, packed, x, policy, impl="xla",
+                              dataflow="im2col")
+        y_d = R.serve_forward(cfg, packed, x, policy, impl="xla",
+                              dataflow="implicit")
+        np.testing.assert_array_equal(np.asarray(y_i, np.float32),
+                                      np.asarray(y_d, np.float32))
+
+    def test_forced_implicit_pallas_falls_back_on_infeasible_stem(self, key):
+        """dataflow='implicit' forced under impl='pallas': the C=3 stem
+        cannot run the implicit kernel and must fall back to im2col
+        instead of crashing; inner convs stay on the implicit kernel."""
+        R, cfg, policy, packed, x = self._packed_net(18, key)
+        y_ref = R.serve_forward(cfg, packed, x, policy, impl="xla",
+                                dataflow="im2col")
+        y = R.serve_forward(cfg, packed, x, policy, impl="pallas",
+                            dataflow="implicit")
+        np.testing.assert_array_equal(np.asarray(y_ref, np.float32),
+                                      np.asarray(y, np.float32))
+
+    def test_auto_pallas_equals_im2col_xla(self, key):
+        """dataflow='auto' under impl='pallas' (stem falls back, inner
+        convs take the implicit kernel) matches the xla im2col graph."""
+        R, cfg, policy, packed, x = self._packed_net(18, key)
+        y_ref = R.serve_forward(cfg, packed, x, policy, impl="xla",
+                                dataflow="im2col")
+        y_p = R.serve_forward(cfg, packed, x, policy, impl="pallas",
+                              dataflow="auto")
+        np.testing.assert_array_equal(np.asarray(y_ref, np.float32),
+                                      np.asarray(y_p, np.float32))
+
+
+class TestPlanesOneFastPath:
+    """Satellite: w8/k8 recombination is a pure byte reinterpret."""
+
+    def test_w8k8_matches_unpack_combine(self, rng):
+        kdim, n = 64, 48
+        w_int = jnp.asarray(rng.integers(-128, 128, (kdim, n)), jnp.int32)
+        fmt = PlaneFormat(w_bits=8, k=8, k_dim=kdim)
+        planes = packing.pack_planes(w_int, fmt, axis=-2)
+        w8 = ops.combined_int8_weights(planes, fmt)
+        expect = packing.combine_planes(
+            packing.unpack_planes(planes, fmt, axis=-2), fmt.k)
+        np.testing.assert_array_equal(np.asarray(w8, np.int32),
+                                      np.asarray(expect))
+
+    @pytest.mark.parametrize("w_bits,k", [(4, 4), (2, 2), (1, 1)])
+    def test_single_plane_packed_formats(self, w_bits, k, rng):
+        """planes == 1 with f > 1 still unpacks bytes correctly."""
+        kdim, n = 32, 24
+        lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1) - 1
+        w_int = jnp.asarray(rng.integers(lo, hi + 1, (kdim, n)), jnp.int32)
+        fmt = PlaneFormat(w_bits=w_bits, k=k, k_dim=kdim)
+        planes = packing.pack_planes(w_int, fmt, axis=-2)
+        w8 = ops.combined_int8_weights(planes, fmt)
+        np.testing.assert_array_equal(np.asarray(w8, np.int32),
+                                      np.asarray(w_int))
