@@ -1,0 +1,233 @@
+"""Pareto serving frontier: plan points timed end-to-end (Fig. 9 + Tab. III).
+
+The layer-wise planner (core/planner.py) emits an accuracy-proxy vs
+frames/s frontier; this benchmark grounds it in wall-clock by serving
+the SAME packed ResNet-18 under several plan points — the uniform-w8
+baseline, uniform-w4/w2, and the sensitivity-guided greedy mixed plan
+(>= 3 distinct per-layer word-lengths) — through the full jitted
+``serve_forward`` graph (fused epilogues, per-layer conv dataflow).
+
+Three sections land in the JSON record:
+
+  * ``frontier``  — the planner's Pareto front (analytic roofline fps +
+                    PTQ weight-sensitivity error), Fig. 9 style.
+  * ``footprints``— Table III packed-bytes/compression for ResNet-18/50/
+                    152 at the uniform w1/w2/w4 rows and the mixed plan.
+  * ``timed``     — >= 3 end-to-end-timed plan points (images/s), the
+                    uniform-w8 plan as baseline.
+
+Writes ``BENCH_pareto.json`` at the repo root; ``--smoke`` (CI) writes
+``BENCH_pareto_smoke.json`` instead so a tiny-shape run never clobbers
+the full-scale record.
+
+Run:  PYTHONPATH=src python -m benchmarks.pareto_serve [--smoke]
+          [--img N] [--batch N] [--iters N]
+(also registered as ``pareto`` in benchmarks.run, which runs the smoke
+shape).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import planner
+from repro.core.plan import PrecisionPlan, plan_footprint_report
+from repro.core.precision import PrecisionPolicy
+from repro.models import resnet as R
+from repro.models.resnet import ResNetConfig
+from repro.nn import param as nnp
+
+_ROOT = Path(__file__).resolve().parent.parent
+BENCH_JSON = _ROOT / "BENCH_pareto.json"
+BENCH_SMOKE_JSON = _ROOT / "BENCH_pareto_smoke.json"
+
+
+def _smoke_cfg() -> ResNetConfig:
+    return ResNetConfig(name="resnet18-smoke", depth=18, n_classes=10,
+                        img_size=32, width=16, stages_override=(1, 1))
+
+
+def search_plans(cfg: ResNetConfig, params, batch: int):
+    """Sensitivity-guided DSE on this net: frontier + the mixed point."""
+    gemms = R.gemm_workload(cfg, batch)
+    inner = set(R.inner_layer_names(cfg))
+    weights = {n: w for n, w in R.layer_weights(cfg, params).items()
+               if n in inner}
+    macs = {g.name: g.macs for g in gemms}
+    sens = planner.weight_ptq_sensitivity(weights, macs=macs)
+    result = planner.plan_search(
+        gemms, sens, layer_params=R.layer_param_counts(cfg))
+    # The mixed serving point: lowest-error frontier plan that actually
+    # mixes >= 3 distinct inner word-lengths (the paper's layer-wise
+    # deployment, not a uniform row).
+    mixed = next(
+        (p for p in sorted(result.frontier, key=lambda p: p.error)
+         if len(set(dict(p.bits).values())) >= 3), None)
+    if mixed is None:
+        raise ValueError(
+            f"no frontier plan mixes >= 3 word-lengths for {cfg.name} "
+            f"({len(R.inner_layer_names(cfg))} inner layers; frontier "
+            f"{[p.name for p in result.frontier]})")
+    return result, mixed
+
+
+def _timed_point(cfg, params, state, plan, batch, iters, *, check):
+    packed = R.pack_for_serve(cfg, params, state, plan)
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(
+            0.4, 0.5, (batch, cfg.img_size, cfg.img_size, 3)), jnp.float32)
+    fwd = jax.jit(lambda p, im: R.serve_forward(cfg, p, im, plan,
+                                                impl="xla", dataflow="auto"))
+    us = time_call(fwd, packed, x, n=iters, warmup=1)
+    if check:
+        # Same plan through the materialized-im2col reference graph must
+        # be bit-exact — a throughput number for a wrong graph is
+        # worthless.
+        y_ref = R.serve_forward(cfg, packed, x, plan, impl="xla",
+                                dataflow="im2col")
+        np.testing.assert_array_equal(
+            np.asarray(fwd(packed, x), np.float32),
+            np.asarray(y_ref, np.float32))
+    bytes_ = sum(np.asarray(v).nbytes for v in jax.tree.leaves(packed))
+    return {
+        "plan": plan.name,
+        "us_per_call": us,
+        "images_per_s": batch / (us / 1e6),
+        "packed_bytes": bytes_,
+        "distinct_wbits": list(plan.distinct_wbits()),
+        "n_mixed_layers": len(plan.layers),
+    }
+
+
+def footprint_rows(depths=(18, 50, 152)):
+    """Table III packed-byte accounting from the per-layer planner path."""
+    rows = []
+    for depth in depths:
+        cfg = ResNetConfig(name=f"resnet{depth}", depth=depth,
+                           n_classes=1000, img_size=224)
+        counts = R.layer_param_counts(cfg)
+        classes = R.layer_classes(cfg)
+        for wq in (1, 2, 4):
+            plan = PrecisionPlan.uniform(
+                PrecisionPolicy(inner_bits=wq, k=min(wq, 4)))
+            rep = plan_footprint_report(counts, classes, plan)
+            rows.append({
+                "name": f"pareto/tab3_resnet{depth}_w{wq}",
+                "us_per_call": "",
+                "derived": f"bytes_MB={rep['quant_bytes']/2**20:.1f};"
+                           f"compression={rep['compression']:.1f}",
+            })
+    return rows
+
+
+def run(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny image, 2 blocks — the CI guard")
+    ap.add_argument("--img", type=int, default=64,
+                    help="input image size (224 = the paper's; 64 keeps "
+                         "the CPU serve graph tractable)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+    rows = _run(args)
+    emit(rows)
+    return rows
+
+
+def _run(args):
+    if args.smoke:
+        cfg = _smoke_cfg()
+        batch, iters = 4, 3
+    else:
+        cfg = ResNetConfig(name="resnet18", depth=18, n_classes=1000,
+                           img_size=args.img)
+        batch, iters = args.batch, args.iters
+
+    specs = R.specs(cfg)
+    params = nnp.init_params(specs, jax.random.PRNGKey(0))
+    state = R.init_bn_state(specs)
+
+    result, mixed = search_plans(cfg, params, batch)
+    frontier_rows = result.frontier_rows()
+
+    # >= 3 end-to-end plan points, uniform-w8 first (the baseline).
+    uniform = {p.name: p for p in result.points if p.name.startswith("uniform")}
+    points = [uniform["uniform_w8"].plan, uniform["uniform_w4"].plan,
+              uniform["uniform_w2"].plan, mixed.plan]
+    timed = []
+    for plan in points:
+        timed.append(_timed_point(cfg, params, state, plan, batch, iters,
+                                  check=args.smoke))
+        print(f"# {plan.name}: {timed[-1]['images_per_s']:.1f} images/s "
+              f"({timed[-1]['packed_bytes']/2**20:.2f} MiB packed)")
+
+    base = timed[0]
+    assert base["plan"] == "uniform_w8"
+    assert len(timed) >= 3
+    speedup = timed[-1]["images_per_s"] / base["images_per_s"]
+    print(f"# mixed vs uniform-w8 speedup: {speedup:.2f}x")
+    if not args.smoke:
+        # Word-length reduction must pay on the wall clock too: the
+        # mixed plan (and w2) move fewer packed bytes + stay on the
+        # f32-exact direct conv where w8 falls back to the int32 conv.
+        # Asserted at full scale only — the smoke graphs are microseconds
+        # long and the ratio there is scheduler noise (structural checks
+        # still run above).  One re-measure absorbs a noisy first median.
+        if speedup < 1.05:
+            for t, plan in zip(timed, points):
+                t2 = _timed_point(cfg, params, state, plan, batch, iters,
+                                  check=False)
+                t["us_per_call"] = min(t["us_per_call"], t2["us_per_call"])
+                t["images_per_s"] = max(t["images_per_s"],
+                                        t2["images_per_s"])
+            speedup = timed[-1]["images_per_s"] / base["images_per_s"]
+            print(f"# mixed vs uniform-w8 speedup (re-measured): "
+                  f"{speedup:.2f}x")
+        assert speedup >= 1.05, (
+            f"mixed plan must beat the uniform-w8 baseline end-to-end, "
+            f"got {speedup:.2f}x")
+
+    rows = [{
+        "name": f"pareto_serve/{cfg.name}_{t['plan']}",
+        "us_per_call": t["us_per_call"],
+        "derived": f"images_per_s={t['images_per_s']:.2f};batch={batch};"
+                   f"wbits={'/'.join(map(str, t['distinct_wbits']))}",
+    } for t in timed]
+    fp_rows = footprint_rows()
+    rows += fp_rows
+
+    out_json = BENCH_SMOKE_JSON if args.smoke else BENCH_JSON
+    try:
+        out_json.write_text(json.dumps({
+            "bench": "pareto_serve",
+            "model": cfg.name,
+            "shape": {"batch": batch, "img": cfg.img_size,
+                      "blocks": sum(cfg.stages)},
+            "host": platform.machine(),
+            "backend": jax.default_backend(),
+            "baseline": "uniform_w8",
+            "timed": timed,
+            "frontier": frontier_rows,
+            "mixed_plan": mixed.plan.to_json(),
+            "footprints": [r["name"] + ":" + r["derived"] for r in fp_rows],
+        }, indent=2) + "\n")
+    except OSError:  # read-only checkout: CSV rows still printed
+        pass
+    return rows
+
+
+def rows():
+    """benchmarks.run entry point: the smoke shape (run.py emits)."""
+    return _run(argparse.Namespace(smoke=True, img=64, batch=8, iters=3))
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,7 @@ MODULES = [
     ("tab5", "benchmarks.tab5_sota"),
     ("micro", "benchmarks.kernel_micro"),
     ("serve", "benchmarks.resnet_serve"),
+    ("pareto", "benchmarks.pareto_serve"),
 ]
 
 

@@ -11,6 +11,18 @@ as w_Q falls (fewer digit planes, fewer HBM bytes).  Two families:
     at one graph per bucket, and every conv runs the implicit-GEMM
     dataflow (no im2col patch buffer).
 
+The CNN section ends with a LAYER-WISE plan: a ``PrecisionPlan``
+(core/plan.py) gives each layer its own (w_bits, k) — re-pack under the
+plan, hand it to ``ImageServer(plan=...)``, done.  The same deployment
+is scriptable from the CLI:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch resnet18 \
+        --reduced --plan examples/plans/resnet18_mixed.json --batch 8
+
+(``--plan`` validates the JSON against the arch's workload names; see
+DESIGN.md §6 for the schema and the sensitivity-guided planner that
+emits such plans.)
+
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 import time
@@ -61,3 +73,23 @@ for n_req in (3, 8, 11):                       # ragged request sizes
     dt = time.perf_counter() - t0
     print(f"cnn n={n_req:2d}: {n_req / dt:7.1f} img/s | logits "
           f"{logits.shape} | buckets compiled {server.compiled_buckets}")
+
+# --- CNN family: layer-wise plan serving ------------------------------------
+# Same trained tree, re-packed under a mixed per-layer plan (the file the
+# --plan CLI flag takes); each layer gets its own plane count / packed
+# bytes, and the serve graph resolves the identical per-layer formats.
+
+from repro.core.plan import PrecisionPlan
+
+plan = PrecisionPlan.load("examples/plans/resnet18_mixed.json")
+plan_packed = R.pack_for_serve(api.cfg, cnn_params, state, plan)
+plan_server = ImageServer(api=api, params=plan_packed, plan=plan,
+                          batch_buckets=(4,))
+imgs = rng.normal(0.4, 0.5, (4, api.cfg.img_size,
+                             api.cfg.img_size, 3)).astype(np.float32)
+plan_server.predict(imgs)                      # warm
+t0 = time.perf_counter()
+logits = plan_server.predict(imgs)
+dt = time.perf_counter() - t0
+print(f"cnn plan [{plan.name}] w_bits={plan.distinct_wbits()}: "
+      f"{4 / dt:7.1f} img/s | logits {logits.shape}")

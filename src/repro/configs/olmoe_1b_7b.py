@@ -23,5 +23,11 @@ def build(policy=None, reduced=False):
     return ModelAPI(
         name=FULL.name, family="moe", cfg=REDUCED if reduced else FULL,
         mod=transformer,
-        # per-expert step sizes = the paper's channel-wise quantization
-        microbatches=8, policy=policy or PrecisionPolicy(inner_bits=4, k=4, channel_wise=False))
+        # channel_wise=True: per-expert step sizes are the paper's
+        # channel-wise quantization mapped onto the expert axis — each
+        # expert bank packs with its own gamma_w (pack_qlinear broadcasts
+        # the lead-dim gw per expert), and a per-output-channel gw is
+        # honored wherever a spec carries one.
+        microbatches=8,
+        policy=policy or PrecisionPolicy(inner_bits=4, k=4,
+                                         channel_wise=True))

@@ -1,0 +1,365 @@
+"""Layer-wise precision plans: one (w_Q, k, channel_wise, dataflow) per layer.
+
+The paper's headline deployment is *layer-wise* mixed precision (Fig. 9,
+Tables III-V): every inner layer carries its own weight word-length,
+chosen by the design-space exploration, while the serve kernels stay
+unchanged — a new plan is a re-pack, never a new FPGA image.  A
+``PrecisionPlan`` is the serialized form of that decision:
+
+    {
+      "version": 1,
+      "a_bits": 8, "variant": "st",
+      "default": {"w_bits": 8, "k": 4, "channel_wise": false,
+                  "dataflow": "auto"},
+      "layers": {
+        "s0b0c1": {"w_bits": 2, "k": 2},
+        "s3b1c2": {"w_bits": 4, "k": 4, "dataflow": "implicit"},
+        ...
+      }
+    }
+
+Layer names are the model's ``gemm_workload`` names (ResNet:
+``stem``, ``s{stage}b{block}c{conv}``, ``s{stage}b{block}p``, ``fc``),
+so a plan validates directly against the workload the DSE scored.
+
+Every serve entry point that takes a ``PrecisionPolicy`` also accepts a
+``PrecisionPlan``; a uniform policy is the degenerate single-entry plan
+(``PrecisionPlan.uniform``), and ``resolve_policy`` collapses either
+into the per-layer ``PrecisionPolicy`` the kernels consume.  Boundary
+layers (first/last) stay pinned to 8 bit through the usual
+``PrecisionPolicy.bits_for`` rule regardless of the plan entry.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
+
+from repro.core.precision import (PrecisionPolicy, VALID_SLICES, VALID_WBITS,
+                                  footprint_report)
+
+__all__ = [
+    "LayerPlan",
+    "PrecisionPlan",
+    "as_plan",
+    "resolve_policy",
+    "resolve_dataflow",
+    "plan_footprint_report",
+    "validate_plan_json",
+]
+
+PLAN_VERSION = 1
+VALID_DATAFLOWS = ("auto", "im2col", "implicit")
+
+PolicyOrPlan = Union[PrecisionPolicy, "PrecisionPlan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One layer's deployment format.
+
+    Attributes:
+      w_bits:       weight word-length w_Q of this layer.
+      k:            operand slice (digit-plane width) of this layer.
+      channel_wise: per-output-channel step sizes gamma_w.
+      dataflow:     conv dataflow pin ('im2col'/'implicit') or 'auto'
+                    (per-layer DSE routing at serve time).
+    """
+
+    w_bits: int = 8
+    k: int = 4
+    channel_wise: bool = False
+    dataflow: str = "auto"
+
+    def __post_init__(self):
+        if self.w_bits not in VALID_WBITS:
+            raise ValueError(f"w_bits must be in {VALID_WBITS}, "
+                             f"got {self.w_bits}")
+        if self.k not in VALID_SLICES:
+            raise ValueError(f"k must be in {VALID_SLICES}, got {self.k}")
+        if self.dataflow not in VALID_DATAFLOWS:
+            raise ValueError(f"dataflow must be in {VALID_DATAFLOWS}, "
+                             f"got {self.dataflow!r}")
+
+    def to_json(self) -> Dict[str, object]:
+        return {"w_bits": self.w_bits, "k": self.k,
+                "channel_wise": self.channel_wise, "dataflow": self.dataflow}
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, object]) -> "LayerPlan":
+        extra = set(obj) - {"w_bits", "k", "channel_wise", "dataflow"}
+        if extra:
+            raise ValueError(f"unknown layer-plan keys: {sorted(extra)}")
+        return cls(
+            w_bits=int(obj.get("w_bits", 8)),
+            k=int(obj.get("k", 4)),
+            channel_wise=bool(obj.get("channel_wise", False)),
+            dataflow=str(obj.get("dataflow", "auto")),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Layer name -> LayerPlan mapping plus the plan-wide knobs.
+
+    ``layers`` is a sorted tuple of (name, LayerPlan) so the plan is
+    hashable — it can key jit closures and ``lru_cache`` entries exactly
+    like a ``PrecisionPolicy``.  ``default`` covers layers the plan does
+    not name (and IS the whole plan for the uniform degenerate case).
+    """
+
+    layers: Tuple[Tuple[str, LayerPlan], ...] = ()
+    default: LayerPlan = LayerPlan()
+    a_bits: int = 8
+    boundary_bits: int = 8
+    variant: str = "st"
+    quantize: bool = True
+    name: str = ""
+
+    def __post_init__(self):
+        if self.variant not in ("st", "sa"):
+            raise ValueError("variant must be 'st' or 'sa'")
+        if self.boundary_bits not in VALID_WBITS:
+            raise ValueError(f"boundary_bits must be in {VALID_WBITS}")
+        names = [n for n, _ in self.layers]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate plan layers: {dupes}")
+        object.__setattr__(
+            self, "layers",
+            tuple(sorted(self.layers, key=lambda e: e[0])))
+
+    # --- construction ------------------------------------------------------
+
+    @classmethod
+    def build(cls, layers: Mapping[str, LayerPlan], **kw) -> "PrecisionPlan":
+        return cls(layers=tuple(layers.items()), **kw)
+
+    @classmethod
+    def uniform(cls, policy: PrecisionPolicy, name: str = "") -> "PrecisionPlan":
+        """The degenerate single-entry plan of a uniform policy."""
+        return cls(
+            layers=(),
+            default=LayerPlan(w_bits=policy.inner_bits, k=policy.k,
+                              channel_wise=policy.channel_wise),
+            a_bits=policy.a_bits,
+            boundary_bits=policy.boundary_bits,
+            variant=policy.variant,
+            quantize=policy.quantize,
+            name=name or f"uniform_w{policy.inner_bits}k{policy.k}",
+        )
+
+    # --- per-layer resolution ----------------------------------------------
+
+    def layer(self, name: str) -> LayerPlan:
+        for n, lp in self.layers:
+            if n == name:
+                return lp
+        return self.default
+
+    def policy_for(self, name: str) -> PrecisionPolicy:
+        """Collapse one layer's entry into the kernel-facing policy.
+
+        Boundary pinning still runs through ``PrecisionPolicy.bits_for``:
+        callers pass their ``layer_class`` to the serve ops as before.
+        """
+        lp = self.layer(name)
+        return PrecisionPolicy(
+            a_bits=self.a_bits,
+            inner_bits=lp.w_bits,
+            boundary_bits=self.boundary_bits,
+            k=lp.k,
+            channel_wise=lp.channel_wise,
+            variant=self.variant,
+            quantize=self.quantize,
+        )
+
+    def dataflow_for(self, name: str) -> str:
+        return self.layer(name).dataflow
+
+    # --- introspection -----------------------------------------------------
+
+    @property
+    def layer_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.layers)
+
+    def distinct_wbits(self) -> Tuple[int, ...]:
+        bits = {lp.w_bits for _, lp in self.layers} | {self.default.w_bits}
+        return tuple(sorted(bits))
+
+    def validate_layers(self, known: Iterable[str]) -> None:
+        """Every named layer must exist in the model's workload."""
+        known_set = set(known)
+        unknown = [n for n, _ in self.layers if n not in known_set]
+        if unknown:
+            raise ValueError(
+                f"plan names layers absent from the model workload: "
+                f"{unknown}; known layers: {sorted(known_set)}")
+
+    # --- serialization -----------------------------------------------------
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "version": PLAN_VERSION,
+            "name": self.name,
+            "a_bits": self.a_bits,
+            "boundary_bits": self.boundary_bits,
+            "variant": self.variant,
+            "quantize": self.quantize,
+            "default": self.default.to_json(),
+            "layers": {n: lp.to_json() for n, lp in self.layers},
+        }
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, object]) -> "PrecisionPlan":
+        if not isinstance(obj, Mapping):
+            raise ValueError(f"plan JSON must be an object, got {type(obj)}")
+        version = obj.get("version", PLAN_VERSION)
+        if version != PLAN_VERSION:
+            raise ValueError(f"unsupported plan version {version}")
+        known = {"version", "name", "a_bits", "boundary_bits", "variant",
+                 "quantize", "default", "layers"}
+        extra = set(obj) - known
+        if extra:
+            raise ValueError(f"unknown plan keys: {sorted(extra)}")
+        layers_obj = obj.get("layers", {})
+        if not isinstance(layers_obj, Mapping):
+            raise ValueError("'layers' must map layer name -> entry")
+        return cls(
+            layers=tuple((str(n), LayerPlan.from_json(e))
+                         for n, e in layers_obj.items()),
+            default=LayerPlan.from_json(obj.get("default", {})),
+            a_bits=int(obj.get("a_bits", 8)),
+            boundary_bits=int(obj.get("boundary_bits", 8)),
+            variant=str(obj.get("variant", "st")),
+            quantize=bool(obj.get("quantize", True)),
+            name=str(obj.get("name", "")),
+        )
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def loads(cls, text: str) -> "PrecisionPlan":
+        return cls.from_json(json.loads(text))
+
+    def save(self, path) -> None:
+        Path(path).write_text(self.dumps())
+
+    @classmethod
+    def load(cls, path) -> "PrecisionPlan":
+        return cls.loads(Path(path).read_text())
+
+
+# --- policy-or-plan resolution (the serve stack's entry point) -------------
+
+
+def as_plan(policy: PolicyOrPlan, name: str = "") -> PrecisionPlan:
+    """Uniform policy -> degenerate plan; plan passes through."""
+    if isinstance(policy, PrecisionPlan):
+        return policy
+    return PrecisionPlan.uniform(policy, name=name)
+
+
+def resolve_policy(policy: PolicyOrPlan, layer_name: str) -> PrecisionPolicy:
+    """The per-layer ``PrecisionPolicy`` a kernel call should use.
+
+    A plain ``PrecisionPolicy`` resolves to itself for every layer (the
+    degenerate uniform plan) — existing call sites keep their exact
+    behavior.
+    """
+    if isinstance(policy, PrecisionPlan):
+        return policy.policy_for(layer_name)
+    return policy
+
+
+def resolve_dataflow(policy: PolicyOrPlan, layer_name: str,
+                     dataflow: str = "auto") -> str:
+    """Per-layer conv dataflow: an explicit non-'auto' argument wins
+    (benchmark pinning), else the plan's per-layer entry, else 'auto'."""
+    if dataflow != "auto":
+        return dataflow
+    if isinstance(policy, PrecisionPlan):
+        return policy.dataflow_for(layer_name)
+    return "auto"
+
+
+# --- footprint accounting (Table III, per-layer) ---------------------------
+
+
+def plan_footprint_report(
+    layer_params: Mapping[str, int],
+    layer_classes: Mapping[str, str],
+    plan: PolicyOrPlan,
+) -> Dict[str, float]:
+    """Table III accounting at per-layer word-lengths.
+
+    layer_params:  {layer_name: n_weights}.
+    layer_classes: {layer_name: 'inner' | 'boundary'}.
+    Returns the same keys as ``precision.footprint_report`` so existing
+    consumers (tab3 benchmark) can switch over without reshaping.
+    """
+    p = as_plan(plan)
+    fp_bytes = 4.0 * sum(layer_params.values())
+    q_bytes = 0.0
+    n_inner = n_bound = 0
+    for name, count in layer_params.items():
+        cls = layer_classes.get(name, "inner")
+        pol = p.policy_for(name)
+        bits = pol.bits_for(cls) if p.quantize else 32
+        q_bytes += count * bits / 8.0
+        if cls == "boundary":
+            n_bound += count
+        else:
+            n_inner += count
+    return {
+        "fp32_bytes": fp_bytes,
+        "quant_bytes": q_bytes,
+        "compression": fp_bytes / max(q_bytes, 1.0),
+        "inner_params": float(n_inner),
+        "boundary_params": float(n_bound),
+    }
+
+
+# --- schema validation CLI (CI hook) ---------------------------------------
+
+
+def validate_plan_json(path, arch: Optional[str] = None) -> PrecisionPlan:
+    """Load + schema-check a plan file; with ``arch``, also check every
+    named layer against that architecture's gemm workload."""
+    plan = PrecisionPlan.load(path)
+    if arch is not None:
+        from repro import configs  # late import: configs pulls model deps
+        api = configs.get(arch)
+        plan.validate_layers([g.name for g in api.gemm_workload(1)])
+    return plan
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Validate precision-plan JSON files "
+                    "(schema + optional per-arch layer-name check).")
+    ap.add_argument("command", choices=["validate"])
+    ap.add_argument("paths", nargs="+", help="plan JSON files")
+    ap.add_argument("--arch", default=None,
+                    help="check layer names against this arch's workload")
+    args = ap.parse_args(argv)
+    rc = 0
+    for path in args.paths:
+        try:
+            plan = validate_plan_json(path, arch=args.arch)
+        except (ValueError, OSError, json.JSONDecodeError) as e:
+            print(f"[plan] INVALID {path}: {e}", file=sys.stderr)
+            rc = 1
+            continue
+        print(f"[plan] ok {path}: {len(plan.layers)} named layers, "
+              f"w_bits {plan.distinct_wbits()}, default "
+              f"w{plan.default.w_bits}k{plan.default.k}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

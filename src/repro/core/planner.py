@@ -1,0 +1,409 @@
+"""Sensitivity-guided DSE over layer-wise precision plans (paper Fig. 9).
+
+The paper's accuracy-throughput exploration picks a per-layer weight
+word-length under a resource budget.  This module reproduces the loop on
+top of the existing cost model:
+
+  * **Sensitivity** — how much accuracy a layer loses at each w_Q.
+    Two backends share one output shape {layer: {w_bits: error}}:
+      - :func:`weight_ptq_sensitivity`: the analytic proxy — per-layer
+        PTQ weight quantization MSE (LSQ step init, Eq. 5 grid) scaled
+        by the layer's MAC count.  No forward pass; works at any scale.
+      - :func:`calibration_sensitivity`: the measured form — quantize
+        ONE layer at a time to each candidate w_Q (others pinned at
+        8 bit), forward a calibration batch, take the logit-MSE increase
+        over the uniform-w8 plan vs FP reference logits.
+  * **Latency** — per-layer roofline time from ``gemm_time`` under the
+    per-layer ``PlaneFormat``, each layer at its DSE-autotuned tile
+    (``autotune_tile``), summed over the workload.
+  * **Search** — greedy bit-descent: start every inner layer at 8 bit
+    and repeatedly drop the layer with the best latency-gain per unit
+    sensitivity-cost, recording a plan point per step; the trajectory
+    plus the uniform plans are then reduced to the Pareto front
+    (no point strictly worse in BOTH error and latency), the paper's
+    Fig. 9 frontier.
+
+Everything is pure-Python over the hashable ``PrecisionPlan`` — the
+emitted plans serialize to JSON and feed straight into
+``pack_for_serve``/``serve_forward``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import quant
+from repro.core.dse import Gemm, autotune_tile, gemm_time
+from repro.core.packing import PlaneFormat
+from repro.core.plan import LayerPlan, PrecisionPlan
+from repro.core.precision import PrecisionPolicy
+from repro.core.roofline import HW, TPU_V5E
+
+__all__ = [
+    "PlanPoint",
+    "PlanSearchResult",
+    "default_k",
+    "weight_ptq_sensitivity",
+    "calibration_sensitivity",
+    "layer_latency_table",
+    "plan_latency",
+    "greedy_bit_descent",
+    "pareto_front",
+    "plan_search",
+]
+
+BIT_OPTIONS = (8, 4, 2, 1)
+
+
+def default_k(w_bits: int) -> int:
+    """The repo-wide slice convention: k = min(w_Q, 4) (paper k in 1/2/4)."""
+    return min(w_bits, 4)
+
+
+# --- sensitivity backends --------------------------------------------------
+
+
+def weight_ptq_sensitivity(
+    weights: Mapping[str, np.ndarray],
+    *,
+    macs: Optional[Mapping[str, int]] = None,
+    bit_options: Sequence[int] = BIT_OPTIONS,
+) -> Dict[str, Dict[int, float]]:
+    """Analytic proxy: per-layer PTQ weight-quantization MSE x MACs.
+
+    ``weights`` maps workload layer name -> FP weight matrix.  Each layer
+    is PTQ-quantized at every candidate w_Q with the LSQ step-size
+    initialization (the same grid the packed deployment uses) and the
+    mean squared error is scaled by the layer's MAC count (``macs``,
+    default: weight size) — a layer whose error feeds many output pixels
+    costs proportionally more, the standard additive-independence proxy
+    of mixed-precision search (HAWQ-style).
+    """
+    out: Dict[str, Dict[int, float]] = {}
+    for name, w in weights.items():
+        wf = np.asarray(w, np.float64)
+        scale = float(macs[name]) if macs is not None else float(wf.size)
+        per_bits: Dict[int, float] = {}
+        for b in bit_options:
+            spec = quant.weight_spec(b)
+            gamma = np.asarray(quant.init_step_size(
+                np.asarray(wf, np.float32), spec), np.float64)
+            qn, qp = quant.qrange(spec)
+            codes = np.clip(np.round(wf / gamma), qn, qp)
+            err = float(np.mean((wf - codes * gamma) ** 2))
+            per_bits[b] = err * scale
+        out[name] = per_bits
+    return out
+
+
+def calibration_sensitivity(
+    forward_fn: Callable[[PrecisionPlan], np.ndarray],
+    layer_names: Sequence[str],
+    *,
+    bit_options: Sequence[int] = BIT_OPTIONS,
+    k_for_bits: Callable[[int], int] = default_k,
+    base_plan: Optional[PrecisionPlan] = None,
+) -> Dict[str, Dict[int, float]]:
+    """Measured PTQ sensitivity on a calibration batch.
+
+    ``forward_fn(plan)`` must run the model on the (closed-over)
+    calibration batch under ``plan`` and return logits.  For each layer
+    and each candidate w_Q the layer is dropped to that word-length
+    while every other layer stays at the 8-bit base; the sensitivity is
+    the increase in logit MSE (vs the FP reference logits) over the
+    uniform-w8 plan — so sens[l][8] == 0 by construction and lower bits
+    only ever cost more.
+    """
+    base = base_plan or PrecisionPlan.uniform(
+        PrecisionPolicy(inner_bits=8, k=default_k(8)))
+    ref = np.asarray(
+        forward_fn(dataclasses.replace(base, quantize=False)), np.float64)
+
+    def mse(plan: PrecisionPlan) -> float:
+        y = np.asarray(forward_fn(plan), np.float64)
+        return float(np.mean((y - ref) ** 2))
+
+    base_mse = mse(base)
+    out: Dict[str, Dict[int, float]] = {}
+    for name in layer_names:
+        per_bits: Dict[int, float] = {}
+        for b in bit_options:
+            if b == 8:
+                per_bits[b] = 0.0
+                continue
+            entry = LayerPlan(w_bits=b, k=k_for_bits(b),
+                              channel_wise=base.default.channel_wise)
+            # Replace (not append) any base entry for this layer — a
+            # base_plan that already names it must stay probe-able.
+            others = tuple(e for e in base.layers if e[0] != name)
+            probe = dataclasses.replace(
+                base, layers=others + ((name, entry),))
+            per_bits[b] = max(mse(probe) - base_mse, 0.0)
+        out[name] = per_bits
+    return out
+
+
+# --- latency model ---------------------------------------------------------
+
+
+def layer_latency_table(
+    gemms: Sequence[Gemm],
+    *,
+    bit_options: Sequence[int] = BIT_OPTIONS,
+    k_for_bits: Callable[[int], int] = default_k,
+    hw: HW = TPU_V5E,
+    variant: str = "st",
+) -> Dict[str, Dict[int, float]]:
+    """{layer: {w_bits: roofline_s}} with per-(layer, w_Q) autotuned tiles.
+
+    Boundary layers are pinned to 8 bit (the paper's first/last rule), so
+    their row is constant across ``bit_options`` — the greedy search then
+    never sees a gain from touching them.
+    """
+    out: Dict[str, Dict[int, float]] = {}
+    for g in gemms:
+        row: Dict[int, float] = {}
+        for b in bit_options:
+            eff_b = 8 if g.layer_class == "boundary" else b
+            kk = k_for_bits(eff_b)
+            fmt = PlaneFormat(w_bits=eff_b, k=kk, k_dim=g.k)
+            tile = autotune_tile(g.m, g.k, g.n, w_bits=eff_b, k=kk,
+                                 variant=variant, hw=hw)
+            c, m = gemm_time(g, tile, fmt, hw, variant)
+            row[b] = max(c, m)
+        out[g.name] = row
+    return out
+
+
+def plan_latency(
+    latency: Mapping[str, Mapping[int, float]],
+    bits: Mapping[str, int],
+) -> float:
+    """Roofline sum over ALL workload layers in the table: inner layers
+    at the plan's bit assignment, layers absent from ``bits`` (the
+    boundary stem/fc rows, constant across bit options) at their pinned
+    time — so PlanPoint latencies are whole-model, not inner-only."""
+    total = 0.0
+    for name, row in latency.items():
+        b = bits.get(name)
+        total += row[b] if b is not None else next(iter(row.values()))
+    return total
+
+
+# --- search ----------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanPoint:
+    """One evaluated plan: the Fig. 9 scatter point."""
+
+    name: str
+    plan: PrecisionPlan
+    bits: Tuple[Tuple[str, int], ...]     # inner layers only, sorted
+    error: float                          # accuracy-proxy cost (lower = better)
+    latency_s: float
+    footprint_bytes: float = 0.0
+
+    @property
+    def fps(self) -> float:
+        return 1.0 / self.latency_s if self.latency_s > 0 else math.inf
+
+    @property
+    def accuracy_proxy(self) -> float:
+        """Higher = better (Fig. 9 y-axis): the negated error cost."""
+        return -self.error
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "name": self.name,
+            "error": self.error,
+            "accuracy_proxy": self.accuracy_proxy,
+            "latency_s": self.latency_s,
+            "fps": self.fps,
+            "footprint_bytes": self.footprint_bytes,
+            "distinct_wbits": list(self.plan.distinct_wbits()),
+        }
+
+
+@dataclasses.dataclass
+class PlanSearchResult:
+    points: List[PlanPoint]               # every evaluated plan
+    frontier: List[PlanPoint]             # Pareto-optimal subset
+    chosen: PlanPoint                     # best under the budget
+
+    def frontier_rows(self) -> List[Dict[str, object]]:
+        return [p.row() for p in self.frontier]
+
+
+def pareto_front(points: Sequence[PlanPoint]) -> List[PlanPoint]:
+    """Non-dominated subset on (error, latency), both minimized.
+
+    A point is dominated when another is <= on both axes and strictly
+    better on at least one; the survivors are returned sorted by latency
+    (the Fig. 9 frontier, fastest first).
+    """
+    survivors = []
+    for p in points:
+        dominated = any(
+            (q.error <= p.error and q.latency_s <= p.latency_s)
+            and (q.error < p.error or q.latency_s < p.latency_s)
+            for q in points)
+        if not dominated:
+            survivors.append(p)
+    # Collapse exact duplicates on both axes (keep the first).
+    seen = set()
+    out = []
+    for p in sorted(survivors, key=lambda p: (p.latency_s, p.error)):
+        key = (p.error, p.latency_s)
+        if key not in seen:
+            seen.add(key)
+            out.append(p)
+    return out
+
+
+def _mk_plan(
+    bits: Mapping[str, int],
+    *,
+    k_for_bits: Callable[[int], int],
+    variant: str,
+    channel_wise: bool,
+    name: str,
+) -> PrecisionPlan:
+    layers = {
+        n: LayerPlan(w_bits=b, k=k_for_bits(b), channel_wise=channel_wise)
+        for n, b in bits.items()
+    }
+    return PrecisionPlan.build(
+        layers, default=LayerPlan(w_bits=8, k=k_for_bits(8),
+                                  channel_wise=channel_wise),
+        variant=variant, name=name)
+
+
+def greedy_bit_descent(
+    inner_layers: Sequence[str],
+    sensitivity: Mapping[str, Mapping[int, float]],
+    latency: Mapping[str, Mapping[int, float]],
+    *,
+    bit_options: Sequence[int] = BIT_OPTIONS,
+    k_for_bits: Callable[[int], int] = default_k,
+    variant: str = "st",
+    channel_wise: bool = False,
+    min_bits: int = 1,
+) -> List[PlanPoint]:
+    """Greedy descent from uniform-w8: one bit-drop per step.
+
+    At each step every inner layer's next-lower word-length is scored by
+    ``latency_gain / sensitivity_cost``; the best ratio wins and a plan
+    point is recorded.  The trajectory ends when no layer can drop
+    further (or no drop gains latency).
+    """
+    opts = sorted(set(bit_options), reverse=True)
+    bits = {n: opts[0] for n in inner_layers}
+    eps = 1e-30
+
+    def point(tag: str) -> PlanPoint:
+        plan = _mk_plan(bits, k_for_bits=k_for_bits, variant=variant,
+                        channel_wise=channel_wise, name=tag)
+        err = sum(sensitivity[n][b] for n, b in bits.items())
+        return PlanPoint(
+            name=tag, plan=plan, bits=tuple(sorted(bits.items())),
+            error=err, latency_s=plan_latency(latency, bits))
+
+    trajectory = [point("greedy_step0")]
+    step = 0
+    while True:
+        best: Optional[Tuple[float, str, int]] = None
+        for n in inner_layers:
+            cur = bits[n]
+            idx = opts.index(cur)
+            if idx + 1 >= len(opts) or opts[idx + 1] < min_bits:
+                continue
+            nb = opts[idx + 1]
+            gain = latency[n][cur] - latency[n][nb]
+            if gain <= 0:
+                continue
+            cost = max(sensitivity[n][nb] - sensitivity[n][cur], 0.0)
+            ratio = gain / (cost + eps)
+            if best is None or ratio > best[0]:
+                best = (ratio, n, nb)
+        if best is None:
+            break
+        _, n, nb = best
+        bits[n] = nb
+        step += 1
+        trajectory.append(point(f"greedy_step{step}"))
+    return trajectory
+
+
+def plan_search(
+    gemms: Sequence[Gemm],
+    sensitivity: Mapping[str, Mapping[int, float]],
+    *,
+    bit_options: Sequence[int] = BIT_OPTIONS,
+    k_for_bits: Callable[[int], int] = default_k,
+    hw: HW = TPU_V5E,
+    variant: str = "st",
+    channel_wise: bool = False,
+    layer_params: Optional[Mapping[str, int]] = None,
+    budget_bytes: Optional[float] = None,
+    budget_error: Optional[float] = None,
+) -> PlanSearchResult:
+    """The full sensitivity-guided DSE: greedy trajectory + uniform plans
+    -> Pareto front -> budgeted choice.
+
+    ``budget_bytes`` (packed-footprint ceiling) and ``budget_error``
+    (sensitivity ceiling) gate the chosen point: the LOWEST-ERROR
+    frontier point satisfying every given budget (accuracy is
+    sacrificed only as far as the budget forces — the paper's Table III
+    operating points), breaking error ties toward the faster plan and
+    falling back to the smallest-footprint frontier point when none
+    qualifies.
+    """
+    inner = [g.name for g in gemms if g.layer_class != "boundary"]
+    missing = [n for n in inner if n not in sensitivity]
+    if missing:
+        raise ValueError(f"sensitivity missing inner layers: {missing}")
+    if budget_bytes is not None and layer_params is None:
+        raise ValueError(
+            "budget_bytes requires layer_params (footprints are only "
+            "computed from per-layer weight counts)")
+    latency = layer_latency_table(
+        gemms, bit_options=bit_options, k_for_bits=k_for_bits, hw=hw,
+        variant=variant)
+
+    points = greedy_bit_descent(
+        inner, sensitivity, latency, bit_options=bit_options,
+        k_for_bits=k_for_bits, variant=variant, channel_wise=channel_wise)
+    # Uniform plans: the paper's Table III/IV rows, always in the scatter.
+    for b in sorted(set(bit_options), reverse=True):
+        bits = {n: b for n in inner}
+        plan = _mk_plan(bits, k_for_bits=k_for_bits, variant=variant,
+                        channel_wise=channel_wise, name=f"uniform_w{b}")
+        points.append(PlanPoint(
+            name=f"uniform_w{b}", plan=plan, bits=tuple(sorted(bits.items())),
+            error=sum(sensitivity[n][b] for n in inner),
+            latency_s=plan_latency(latency, bits)))
+
+    if layer_params is not None:
+        from repro.core.plan import plan_footprint_report
+        classes = {g.name: g.layer_class for g in gemms}
+        points = [
+            dataclasses.replace(p, footprint_bytes=plan_footprint_report(
+                layer_params, classes, p.plan)["quant_bytes"])
+            for p in points
+        ]
+
+    frontier = pareto_front(points)
+    feasible = [
+        p for p in frontier
+        if (budget_bytes is None or p.footprint_bytes <= budget_bytes)
+        and (budget_error is None or p.error <= budget_error)
+    ]
+    if feasible:
+        chosen = min(feasible, key=lambda p: (p.error, p.latency_s))
+    else:
+        chosen = min(frontier, key=lambda p: p.footprint_bytes)
+    return PlanSearchResult(points=points, frontier=frontier, chosen=chosen)

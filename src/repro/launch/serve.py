@@ -9,6 +9,18 @@ and runs batched greedy generation with per-phase timing.  On a real
 slice the same command serves the full config over the production mesh
 (weights sharded by SERVE_RULES; see launch/dryrun.py for the compiled
 proof of every cell).
+
+CNN archs serve batched images through ``ImageServer`` instead of the
+LM generator, and additionally accept a layer-wise precision plan:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch resnet18 --reduced \
+        --plan examples/plans/resnet18_mixed.json --batch 8
+
+The plan JSON (core/plan.py schema; emitted by the sensitivity-guided
+DSE in core/planner.py) assigns each layer its own
+(w_bits, k, channel_wise, dataflow); packing + serving resolve the same
+per-layer formats, so switching plan points is a re-pack, never a new
+serve graph implementation.
 """
 from __future__ import annotations
 
@@ -21,8 +33,44 @@ import numpy as np
 
 from repro import configs
 from repro.checkpoint import CheckpointStore
+from repro.core.plan import PrecisionPlan
 from repro.core.precision import PrecisionPolicy
-from repro.runtime.serve import Generator, pack_for_serving
+from repro.runtime.serve import Generator, ImageServer, pack_for_serving
+
+
+def _serve_cnn(api, policy_or_plan, args) -> int:
+    """Batched image serving of a packed CNN (optionally plan-wise)."""
+    mod, cfg = api.mod, api.cfg
+    rng = jax.random.PRNGKey(args.seed)
+    params = api.init_params(rng, "train")
+    state = mod.init_bn_state(mod.specs(cfg))
+
+    t0 = time.perf_counter()
+    packed = mod.pack_for_serve(cfg, params, state, policy_or_plan)
+    t_pack = time.perf_counter() - t0
+    n_bytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(packed))
+    tag = (policy_or_plan.name or "plan"
+           if isinstance(policy_or_plan, PrecisionPlan)
+           else f"w{policy_or_plan.inner_bits}k{policy_or_plan.k}")
+    print(f"[serve] packed {args.arch} [{tag}]: "
+          f"{n_bytes/2**20:.1f} MiB in {t_pack:.2f}s")
+
+    plan = (policy_or_plan if isinstance(policy_or_plan, PrecisionPlan)
+            else None)
+    server = ImageServer(api=api, params=packed, plan=plan,
+                         batch_buckets=(args.batch,))
+    imgs = np.asarray(
+        np.random.default_rng(args.seed).normal(
+            0.4, 0.5, (args.batch, cfg.img_size, cfg.img_size, 3)),
+        np.float32)
+    server.predict(imgs)  # compile
+    t0 = time.perf_counter()
+    logits = server.predict(imgs)
+    dt = time.perf_counter() - t0
+    print(f"[serve] {args.batch} images in {dt:.3f}s -> "
+          f"{args.batch/dt:.1f} images/s (img {cfg.img_size}, "
+          f"logits {logits.shape})")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -36,6 +84,9 @@ def main(argv=None) -> int:
     ap.add_argument("--k", type=int, default=None, choices=(1, 2, 4, 8))
     ap.add_argument("--channel-wise", action="store_true")
     ap.add_argument("--fp-baseline", action="store_true")
+    ap.add_argument("--plan", default=None,
+                    help="layer-wise precision plan JSON (CNN archs): "
+                         "per-layer w_bits/k/channel_wise/dataflow")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
@@ -50,7 +101,26 @@ def main(argv=None) -> int:
                                  channel_wise=args.channel_wise)
     else:
         policy = None
+
+    if args.plan is not None:
+        if (args.fp_baseline or args.w_bits or args.k
+                or args.channel_wise):
+            raise SystemExit(
+                "--plan carries the per-layer policy; it conflicts with "
+                "--w-bits/--k/--channel-wise/--fp-baseline")
+        plan = PrecisionPlan.load(args.plan)
+        api = configs.get(args.arch, reduced=args.reduced, policy=plan)
+        if api.family != "cnn":
+            raise SystemExit(
+                f"--plan is supported for the CNN family; {args.arch} is "
+                f"{api.family!r} (LM layer naming lands with plan-aware "
+                f"pack_tree)")
+        plan.validate_layers(g.name for g in api.gemm_workload(1))
+        return _serve_cnn(api, plan, args)
+
     api = configs.get(args.arch, reduced=args.reduced, policy=policy)
+    if api.family == "cnn":
+        return _serve_cnn(api, api.policy, args)
 
     rng = jax.random.PRNGKey(args.seed)
     params = api.init_params(rng, "train")

@@ -18,6 +18,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as plan_lib
 from repro.core.dse import Gemm
 from repro.core.precision import PrecisionPolicy
 from repro.nn import layers as nnl
@@ -26,7 +27,13 @@ from repro.nn.param import ParamSpec
 
 __all__ = ["ResNetConfig", "RESNET_STAGES", "specs", "forward",
            "gemm_workload", "model_flops", "init_bn_state",
-           "pack_for_serve", "serve_forward"]
+           "pack_for_serve", "serve_forward", "layer_param_counts",
+           "layer_classes", "layer_weights", "inner_layer_names"]
+
+# Block param keys -> gemm_workload name suffixes: plan layer names are
+# the workload names ("s0b0c1", "s0b0p", ...), the same ids the DSE
+# scores, so one vocabulary covers cost model, plan JSON, and pack/serve.
+_PLAN_SUFFIX = {"conv1": "c1", "conv2": "c2", "conv3": "c3", "proj": "p"}
 
 RESNET_STAGES = {
     18: ("basic", (2, 2, 2, 2)),
@@ -116,26 +123,35 @@ def bn_apply(p, state, x, *, training: bool, momentum: float = 0.9):
 # --- blocks -----------------------------------------------------------------
 
 
-def _basic_spec(cin, cout, stride):
+def _no_cw(suffix: str) -> bool:
+    return False
+
+
+def _basic_spec(cin, cout, stride, cw=_no_cw):
     s = {
-        "conv1": qconv_spec(cin, cout, 3), "bn1": bn_spec(cout),
-        "conv2": qconv_spec(cout, cout, 3), "bn2": bn_spec(cout),
+        "conv1": qconv_spec(cin, cout, 3, channel_wise=cw("c1")),
+        "bn1": bn_spec(cout),
+        "conv2": qconv_spec(cout, cout, 3, channel_wise=cw("c2")),
+        "bn2": bn_spec(cout),
     }
     if stride != 1 or cin != cout:
-        s["proj"] = qconv_spec(cin, cout, 1)
+        s["proj"] = qconv_spec(cin, cout, 1, channel_wise=cw("p"))
         s["bn_proj"] = bn_spec(cout)
     return s
 
 
-def _bottleneck_spec(cin, cmid, stride):
+def _bottleneck_spec(cin, cmid, stride, cw=_no_cw):
     cout = 4 * cmid
     s = {
-        "conv1": qconv_spec(cin, cmid, 1), "bn1": bn_spec(cmid),
-        "conv2": qconv_spec(cmid, cmid, 3), "bn2": bn_spec(cmid),
-        "conv3": qconv_spec(cmid, cout, 1), "bn3": bn_spec(cout),
+        "conv1": qconv_spec(cin, cmid, 1, channel_wise=cw("c1")),
+        "bn1": bn_spec(cmid),
+        "conv2": qconv_spec(cmid, cmid, 3, channel_wise=cw("c2")),
+        "bn2": bn_spec(cmid),
+        "conv3": qconv_spec(cmid, cout, 1, channel_wise=cw("c3")),
+        "bn3": bn_spec(cout),
     }
     if stride != 1 or cin != cout:
-        s["proj"] = qconv_spec(cin, cout, 1)
+        s["proj"] = qconv_spec(cin, cout, 1, channel_wise=cw("p"))
         s["bn_proj"] = bn_spec(cout)
     return s
 
@@ -155,45 +171,57 @@ def _block_channels(cfg: ResNetConfig):
 def specs(cfg: ResNetConfig, mode: str = "train",
           policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
     del mode  # resnet serves via the same QAT tree (packed offline)
+
+    def cw(name: str) -> bool:
+        # Per-layer channel-wise flag (plan-aware): channel-wise layers
+        # carry a per-output-channel gw; per-tensor layers a scalar.
+        return plan_lib.resolve_policy(policy, name).channel_wise
+
     tree: Dict = {
-        "stem": qconv_spec(3, cfg.width, 7, layer_class="boundary"),
+        "stem": qconv_spec(3, cfg.width, 7, layer_class="boundary",
+                           channel_wise=cw("stem")),
         "bn_stem": bn_spec(cfg.width),
         "fc": Q.qlinear_spec(cfg.fc_in, cfg.n_classes,
                              axes=("embed", "vocab"),
-                             layer_class="boundary"),
+                             layer_class="boundary",
+                             channel_wise=cw("fc")),
     }
     mk = _bottleneck_spec if cfg.block == "bottleneck" else _basic_spec
     for si, bi, cin, cmid, stride in _block_channels(cfg):
-        tree[f"s{si}b{bi}"] = mk(cin, cmid, stride)
+        key = f"s{si}b{bi}"
+        tree[key] = mk(cin, cmid, stride,
+                       cw=lambda sfx, _k=key: cw(_k + sfx))
     return tree
 
 
-def _basic_fwd(p, st, x, policy, stride, training):
-    h = qconv_apply(p["conv1"], x, policy, k=3, stride=stride)
+def _basic_fwd(p, st, x, policy, stride, training, lname=""):
+    pol = lambda sfx: plan_lib.resolve_policy(policy, lname + sfx)
+    h = qconv_apply(p["conv1"], x, pol("c1"), k=3, stride=stride)
     h, st1 = bn_apply(p["bn1"], st["bn1"], h, training=training)
     h = jax.nn.relu(h)
-    h = qconv_apply(p["conv2"], h, policy, k=3)
+    h = qconv_apply(p["conv2"], h, pol("c2"), k=3)
     h, st2 = bn_apply(p["bn2"], st["bn2"], h, training=training)
     new_st = {"bn1": st1, "bn2": st2}
     if "proj" in p:
-        x = qconv_apply(p["proj"], x, policy, k=1, stride=stride)
+        x = qconv_apply(p["proj"], x, pol("p"), k=1, stride=stride)
         x, stp = bn_apply(p["bn_proj"], st["bn_proj"], x, training=training)
         new_st["bn_proj"] = stp
     return jax.nn.relu(x + h), new_st
 
 
-def _bottleneck_fwd(p, st, x, policy, stride, training):
-    h = qconv_apply(p["conv1"], x, policy, k=1)
+def _bottleneck_fwd(p, st, x, policy, stride, training, lname=""):
+    pol = lambda sfx: plan_lib.resolve_policy(policy, lname + sfx)
+    h = qconv_apply(p["conv1"], x, pol("c1"), k=1)
     h, st1 = bn_apply(p["bn1"], st["bn1"], h, training=training)
     h = jax.nn.relu(h)
-    h = qconv_apply(p["conv2"], h, policy, k=3, stride=stride)
+    h = qconv_apply(p["conv2"], h, pol("c2"), k=3, stride=stride)
     h, st2 = bn_apply(p["bn2"], st["bn2"], h, training=training)
     h = jax.nn.relu(h)
-    h = qconv_apply(p["conv3"], h, policy, k=1)
+    h = qconv_apply(p["conv3"], h, pol("c3"), k=1)
     h, st3 = bn_apply(p["bn3"], st["bn3"], h, training=training)
     new_st = {"bn1": st1, "bn2": st2, "bn3": st3}
     if "proj" in p:
-        x = qconv_apply(p["proj"], x, policy, k=1, stride=stride)
+        x = qconv_apply(p["proj"], x, pol("p"), k=1, stride=stride)
         x, stp = bn_apply(p["bn_proj"], st["bn_proj"], x, training=training)
         new_st["bn_proj"] = stp
     return jax.nn.relu(x + h), new_st
@@ -202,7 +230,8 @@ def _bottleneck_fwd(p, st, x, policy, stride, training):
 def apply_with_state(cfg: ResNetConfig, params, state, images, policy,
                      *, training: bool = False):
     """images (B,H,W,3) -> (logits (B,classes), new bn state)."""
-    x = qconv_apply(params["stem"], images, policy, k=7, stride=2,
+    x = qconv_apply(params["stem"], images,
+                    plan_lib.resolve_policy(policy, "stem"), k=7, stride=2,
                     layer_class="boundary", quantize_act=False)
     x, st_stem = bn_apply(params["bn_stem"], state["bn_stem"], x,
                           training=training)
@@ -213,12 +242,13 @@ def apply_with_state(cfg: ResNetConfig, params, state, images, policy,
     fwd = _bottleneck_fwd if cfg.block == "bottleneck" else _basic_fwd
     for si, bi, cin, cmid, stride in _block_channels(cfg):
         key = f"s{si}b{bi}"
-        x, st = fwd(params[key], state[key], x, policy, stride, training)
+        x, st = fwd(params[key], state[key], x, policy, stride, training,
+                    lname=key)
         new_state[key] = st
     x = jnp.mean(x, axis=(1, 2))
     logits = Q.qlinear_apply(
-        {k: v for k, v in params["fc"].items() if k != Q.QMARK}, x, policy,
-        layer_class="boundary")
+        {k: v for k, v in params["fc"].items() if k != Q.QMARK}, x,
+        plan_lib.resolve_policy(policy, "fc"), layer_class="boundary")
     return logits, new_state
 
 
@@ -261,16 +291,25 @@ def pack_for_serve(cfg: ResNetConfig, params, state, policy):
     (Q.pack_qlinear); every BatchNorm is folded into the (scale, shift)
     pair its following matmul applies in the fused kernel epilogue —
     after this, the serve graph contains no standalone BN op at all.
+
+    ``policy`` may be a uniform ``PrecisionPolicy`` or a layer-wise
+    ``PrecisionPlan``: each layer packs at its OWN (w_bits, k,
+    channel_wise) — plane count, packed-K bytes, and gamma layout all
+    vary per layer, and ``serve_forward`` resolves the identical
+    per-layer format so the packed tree and the serve graph agree.
     """
-    def pack(sub, layer_class):
+    if isinstance(policy, plan_lib.PrecisionPlan):
+        policy.validate_layers(g.name for g in gemm_workload(cfg, 1))
+
+    def pack(sub, layer_class, lname):
         return Q.pack_qlinear(
-            {k: v for k, v in sub.items() if k != Q.QMARK}, policy,
-            layer_class)
+            {k: v for k, v in sub.items() if k != Q.QMARK},
+            plan_lib.resolve_policy(policy, lname), layer_class)
 
     out = {
-        "stem": pack(params["stem"], "boundary"),
+        "stem": pack(params["stem"], "boundary", "stem"),
         "bn_stem": _fold_bn(params["bn_stem"], state["bn_stem"]),
-        "fc": pack(params["fc"], "boundary"),
+        "fc": pack(params["fc"], "boundary", "fc"),
     }
     for si, bi, cin, cmid, stride in _block_channels(cfg):
         key = f"s{si}b{bi}"
@@ -280,54 +319,66 @@ def pack_for_serve(cfg: ResNetConfig, params, state, policy):
             if name.startswith("bn"):
                 packed[name] = _fold_bn(sub, st[name])
             else:
-                packed[name] = pack(sub, "inner")
+                packed[name] = pack(sub, "inner", key + _PLAN_SUFFIX[name])
         out[key] = packed
     return out
 
 
-def _shortcut(p, x, policy, stride, impl, tile, dataflow):
+def _layer_kw(policy, lname, dataflow):
+    """Per-layer serve resolution: policy + conv dataflow for one layer."""
+    return {"policy": plan_lib.resolve_policy(policy, lname),
+            "dataflow": plan_lib.resolve_dataflow(policy, lname, dataflow)}
+
+
+def _shortcut(p, x, policy, stride, impl, tile, dataflow, lname=""):
     """Identity or projection shortcut (projection: conv + folded BN)."""
     if "proj" not in p:
         return x
     s, t = p["bn_proj"]
+    kw = _layer_kw(policy, lname + "p", dataflow)
     return Q.qconv_serve_apply(
-        p["proj"], x, policy, k=1, stride=stride, impl=impl, tile=tile,
+        p["proj"], x, kw["policy"], k=1, stride=stride, impl=impl, tile=tile,
         epilogue=Q.EpilogueSpec(bn=True), scale=s, shift=t,
-        dataflow=dataflow)
+        dataflow=kw["dataflow"])
 
 
-def _basic_serve(p, x, policy, stride, impl, tile, dataflow):
-    sc = _shortcut(p, x, policy, stride, impl, tile, dataflow)
+def _basic_serve(p, x, policy, stride, impl, tile, dataflow, lname=""):
+    sc = _shortcut(p, x, policy, stride, impl, tile, dataflow, lname)
     s1, t1 = p["bn1"]
+    kw = _layer_kw(policy, lname + "c1", dataflow)
     h = Q.qconv_serve_apply(
-        p["conv1"], x, policy, k=3, stride=stride, impl=impl, tile=tile,
-        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1, shift=t1,
-        dataflow=dataflow)
+        p["conv1"], x, kw["policy"], k=3, stride=stride, impl=impl,
+        tile=tile, epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1,
+        shift=t1, dataflow=kw["dataflow"])
     s2, t2 = p["bn2"]
     # conv2 carries BN2 + shortcut add + final ReLU in one kernel epilogue.
+    kw = _layer_kw(policy, lname + "c2", dataflow)
     return Q.qconv_serve_apply(
-        p["conv2"], h, policy, k=3, impl=impl, tile=tile,
+        p["conv2"], h, kw["policy"], k=3, impl=impl, tile=tile,
         epilogue=Q.EpilogueSpec(bn=True, residual=True, relu=True),
-        scale=s2, shift=t2, residual=sc, dataflow=dataflow)
+        scale=s2, shift=t2, residual=sc, dataflow=kw["dataflow"])
 
 
-def _bottleneck_serve(p, x, policy, stride, impl, tile, dataflow):
-    sc = _shortcut(p, x, policy, stride, impl, tile, dataflow)
+def _bottleneck_serve(p, x, policy, stride, impl, tile, dataflow, lname=""):
+    sc = _shortcut(p, x, policy, stride, impl, tile, dataflow, lname)
     s1, t1 = p["bn1"]
+    kw = _layer_kw(policy, lname + "c1", dataflow)
     h = Q.qconv_serve_apply(
-        p["conv1"], x, policy, k=1, impl=impl, tile=tile,
+        p["conv1"], x, kw["policy"], k=1, impl=impl, tile=tile,
         epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1, shift=t1,
-        dataflow=dataflow)
+        dataflow=kw["dataflow"])
     s2, t2 = p["bn2"]
+    kw = _layer_kw(policy, lname + "c2", dataflow)
     h = Q.qconv_serve_apply(
-        p["conv2"], h, policy, k=3, stride=stride, impl=impl, tile=tile,
-        epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s2, shift=t2,
-        dataflow=dataflow)
+        p["conv2"], h, kw["policy"], k=3, stride=stride, impl=impl,
+        tile=tile, epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s2,
+        shift=t2, dataflow=kw["dataflow"])
     s3, t3 = p["bn3"]
+    kw = _layer_kw(policy, lname + "c3", dataflow)
     return Q.qconv_serve_apply(
-        p["conv3"], h, policy, k=1, impl=impl, tile=tile,
+        p["conv3"], h, kw["policy"], k=1, impl=impl, tile=tile,
         epilogue=Q.EpilogueSpec(bn=True, residual=True, relu=True),
-        scale=s3, shift=t3, residual=sc, dataflow=dataflow)
+        scale=s3, shift=t3, residual=sc, dataflow=kw["dataflow"])
 
 
 def serve_forward(cfg: ResNetConfig, packed, images, policy, *,
@@ -342,25 +393,33 @@ def serve_forward(cfg: ResNetConfig, packed, images, policy, *,
     path the network serves without ever materializing a patch matrix.
     ``dataflow='im2col'`` pins the old materialized path (benchmarks
     use it as the baseline).
+
+    ``policy`` may also be a ``PrecisionPlan``: every layer resolves its
+    own (w_bits, k, channel_wise, dataflow) — matching the per-layer
+    formats ``pack_for_serve`` packed — while an explicit non-'auto'
+    ``dataflow`` argument still pins every conv globally (benchmarks).
     """
     s, t = packed["bn_stem"]
     # The stem sees raw (possibly mean-normalized) pixels that straddle
     # zero; QAT ran it with unquantized activations, so serve uses
     # symmetric signed codes (act_zero=0) — unsigned Eq. 5 codes would
     # clamp every negative input away.
+    kw = _layer_kw(policy, "stem", dataflow)
     x = Q.qconv_serve_apply(
-        packed["stem"], images, policy, k=7, stride=2,
+        packed["stem"], images, kw["policy"], k=7, stride=2,
         layer_class="boundary", impl=impl, tile=tile, act_signed=True,
         epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s, shift=t,
-        dataflow=dataflow)
+        dataflow=kw["dataflow"])
     x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
     fwd = _bottleneck_serve if cfg.block == "bottleneck" else _basic_serve
     for si, bi, cin, cmid, stride in _block_channels(cfg):
-        x = fwd(packed[f"s{si}b{bi}"], x, policy, stride, impl, tile,
-                dataflow)
+        key = f"s{si}b{bi}"
+        x = fwd(packed[key], x, policy, stride, impl, tile, dataflow,
+                lname=key)
     x = jnp.mean(x, axis=(1, 2))
-    return Q.qlinear_serve_apply(packed["fc"], x, policy,
+    return Q.qlinear_serve_apply(packed["fc"], x,
+                                 plan_lib.resolve_policy(policy, "fc"),
                                  layer_class="boundary", impl=impl, tile=tile)
 
 
@@ -404,6 +463,32 @@ def param_counts(cfg: ResNetConfig) -> Dict[str, int]:
         else:
             inner += n
     return {"inner": inner, "boundary": bound}
+
+
+def layer_param_counts(cfg: ResNetConfig) -> Dict[str, int]:
+    """{workload layer name: weight count} — the planner's footprint input."""
+    return {g.name: g.k * g.n for g in gemm_workload(cfg, batch=1)}
+
+
+def layer_classes(cfg: ResNetConfig) -> Dict[str, str]:
+    return {g.name: g.layer_class for g in gemm_workload(cfg, batch=1)}
+
+
+def inner_layer_names(cfg: ResNetConfig) -> List[str]:
+    return [g.name for g in gemm_workload(cfg, batch=1)
+            if g.layer_class != "boundary"]
+
+
+def layer_weights(cfg: ResNetConfig, params) -> Dict[str, jax.Array]:
+    """{workload layer name: FP weight matrix} from a QAT param tree —
+    the planner's PTQ-sensitivity input."""
+    out = {"stem": params["stem"]["w"], "fc": params["fc"]["w"]}
+    for si, bi, cin, cmid, stride in _block_channels(cfg):
+        key = f"s{si}b{bi}"
+        for pkey, sfx in _PLAN_SUFFIX.items():
+            if pkey in params[key]:
+                out[key + sfx] = params[key][pkey]["w"]
+    return out
 
 
 def model_flops(cfg: ResNetConfig, *, batch: int = None, tokens: int = None,

@@ -288,10 +288,10 @@ def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: str
 
 
 def qconv_spec(cin: int, cout: int, k: int, *, layer_class: str = "inner",
-               name_axes: Tuple[Optional[str], str] = ("embed", "mlp")
-               ) -> Dict[str, ParamSpec]:
+               name_axes: Tuple[Optional[str], str] = ("embed", "mlp"),
+               channel_wise: bool = False) -> Dict[str, ParamSpec]:
     return qlinear_spec(k * k * cin, cout, axes=name_axes,
-                        layer_class=layer_class)
+                        layer_class=layer_class, channel_wise=channel_wise)
 
 
 def qconv_apply(p, x, policy, *, k: int, stride: int = 1, padding="SAME",

@@ -49,6 +49,11 @@ class ImageServer:
 
     ``params`` is a ``models.resnet.pack_for_serve`` tree (or any CNN
     family module exposing ``serve_forward``).
+
+    ``plan`` (a ``core.plan.PrecisionPlan``) overrides the api's uniform
+    policy with a layer-wise one — ``params`` must then be packed under
+    the same plan.  Serving a different plan point is a re-pack plus a
+    new ``ImageServer``; the model and kernel code never change.
     """
 
     api: Any
@@ -56,6 +61,7 @@ class ImageServer:
     batch_buckets: tuple = (1, 2, 4, 8)
     impl: str = "auto"
     dataflow: str = "auto"
+    plan: Any = None
 
     def __post_init__(self):
         if self.api.family != "cnn":
@@ -67,7 +73,8 @@ class ImageServer:
     def _fn(self, bucket: int):
         """One jitted serve graph per batch bucket."""
         if bucket not in self._fns:
-            mod, cfg, pol = self.api.mod, self.api.cfg, self.api.policy
+            mod, cfg = self.api.mod, self.api.cfg
+            pol = self.plan if self.plan is not None else self.api.policy
             self._fns[bucket] = jax.jit(
                 lambda p, im: mod.serve_forward(
                     cfg, p, im, pol, impl=self.impl, dataflow=self.dataflow))

@@ -270,6 +270,94 @@ class TestResNetBlocksEndToEnd:
                                       np.asarray(y_p, np.float32))
 
 
+class TestChannelWiseConvDataflows:
+    """Satellite: per-channel step sizes gamma_w are bit-exact through
+    BOTH conv dataflows (implicit + im2col), st/sa, xla/pallas — not
+    just the GEMM path (test_kernels.test_channel_wise_gamma)."""
+
+    def _packed_conv(self, rng, *, w_bits=4, kq=2, c=8, n=16, ksz=3,
+                     variant="st"):
+        from repro.nn import quantized as Q
+        pol = PrecisionPolicy(inner_bits=w_bits, k=kq, channel_wise=True,
+                              variant=variant)
+        kdim = ksz * ksz * c
+        p = {
+            "w": jnp.asarray(rng.normal(0, 0.1, (kdim, n)), jnp.float32),
+            # per-OUTPUT-channel step sizes, deliberately non-uniform
+            "gw": jnp.asarray(rng.uniform(0.005, 0.05, (n,)), jnp.float32),
+            "ga": jnp.asarray(0.04, jnp.float32),
+        }
+        packed = Q.pack_qlinear(p, pol, "inner")
+        x = jnp.asarray(rng.normal(0.5, 0.4, (2, 9, 9, c)), jnp.float32)
+        return Q, pol, p, packed, x, ksz
+
+    @pytest.mark.parametrize("variant", ["st", "sa"])
+    @pytest.mark.parametrize("impl", ["xla", "pallas"])
+    def test_dataflows_bit_exact(self, variant, impl, rng):
+        Q, pol, p, packed, x, ksz = self._packed_conv(rng, variant=variant)
+        y_i = Q.qconv_serve_apply(packed, x, pol, k=ksz, impl=impl,
+                                  dataflow="im2col")
+        y_d = Q.qconv_serve_apply(packed, x, pol, k=ksz, impl=impl,
+                                  dataflow="implicit")
+        np.testing.assert_array_equal(np.asarray(y_i, np.float32),
+                                      np.asarray(y_d, np.float32))
+
+    @pytest.mark.parametrize("w_bits,kq", [(4, 2), (2, 2), (8, 4)])
+    def test_matches_oracle(self, w_bits, kq, rng):
+        """Both dataflows equal the explicit patch-gather mpmm oracle
+        under a per-channel gamma."""
+        Q, pol, p, packed, x, ksz = self._packed_conv(
+            rng, w_bits=w_bits, kq=kq)
+        fmt = PlaneFormat(w_bits=w_bits, k=kq, k_dim=p["w"].shape[0])
+        a = ops.quantize_activations(x, packed["ga"], 8)
+        y_ref = ref.conv_ref(a, packed["planes"], fmt, packed["gamma"],
+                             act_zero=128, kh=ksz, kw=ksz)
+        for impl in ("xla", "pallas"):
+            for df in ("im2col", "implicit"):
+                y = Q.qconv_serve_apply(packed, x, pol, k=ksz, impl=impl,
+                                        dataflow=df,
+                                        compute_dtype=jnp.float32)
+                np.testing.assert_array_equal(
+                    np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+                    err_msg=f"{impl}/{df}")
+
+    def test_gamma_is_genuinely_per_channel(self, rng):
+        """The packed gamma must vary across output channels and the
+        codes must use each channel's own quantization grid."""
+        from repro.core import quant
+        Q, pol, p, packed, x, ksz = self._packed_conv(rng)
+        g = np.asarray(packed["gamma"])[0]
+        assert np.unique(g).size > 1
+        np.testing.assert_allclose(
+            g, np.asarray(p["gw"], np.float32) * float(p["ga"]), rtol=1e-6)
+        # channel 0 codes on channel 0's grid
+        w_int = np.asarray(quant.quantize_int(
+            p["w"], p["gw"][None, :],
+            quant.weight_spec(pol.inner_bits)))
+        expect0 = np.clip(np.round(np.asarray(p["w"])[:, 0]
+                                   / float(p["gw"][0])), -8, 7)
+        np.testing.assert_array_equal(w_int[:, 0], expect0)
+
+    def test_epilogue_with_channel_wise(self, rng):
+        """BN + residual + ReLU fused epilogues on top of per-channel
+        gamma, both dataflows."""
+        Q, pol, p, packed, x, ksz = self._packed_conv(rng)
+        n = p["w"].shape[1]
+        scale = jnp.asarray(rng.uniform(0.5, 2.0, (1, n)), jnp.float32)
+        shift = jnp.asarray(rng.normal(0, 1, (1, n)), jnp.float32)
+        res = jnp.asarray(rng.normal(0, 1, (2, 9, 9, n)), jnp.float32)
+        spec = EpilogueSpec(bn=True, residual=True, relu=True)
+        outs = []
+        for impl in ("xla", "pallas"):
+            for df in ("im2col", "implicit"):
+                outs.append(np.asarray(Q.qconv_serve_apply(
+                    packed, x, pol, k=ksz, impl=impl, dataflow=df,
+                    epilogue=spec, scale=scale, shift=shift, residual=res),
+                    np.float32))
+        for o in outs[1:]:
+            np.testing.assert_array_equal(outs[0], o)
+
+
 class TestPlanesOneFastPath:
     """Satellite: w8/k8 recombination is a pure byte reinterpret."""
 

@@ -1,0 +1,445 @@
+"""Layer-wise precision plans + the sensitivity-guided planner.
+
+Covers the PR-3 subsystem: PrecisionPlan schema/round-trip/validation,
+per-layer pack/serve bit-exactness (>= 3 distinct word-lengths through
+every dataflow), the degenerate uniform plan == the old uniform-policy
+path, sensitivity backends, greedy bit-descent invariants, the Pareto
+front (no dominated point), and the Table III footprint accounting at
+per-layer word-lengths (paper compression factors).
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core.dse import Gemm
+from repro.core.plan import (LayerPlan, PrecisionPlan, as_plan,
+                             plan_footprint_report, resolve_dataflow,
+                             resolve_policy, validate_plan_json)
+from repro.core.precision import PrecisionPolicy, footprint_report
+from repro.models import resnet as R
+from repro.nn import param as nnp
+
+
+def _smoke_cfg(stages=(1, 1)):
+    return R.ResNetConfig(name="r18-plan", depth=18, n_classes=8,
+                          img_size=16, width=16, stages_override=stages)
+
+
+def _packed_net(key, policy_or_plan, stages=(1, 1)):
+    cfg = _smoke_cfg(stages)
+    specs = R.specs(cfg, policy=policy_or_plan)
+    params = nnp.init_params(specs, key)
+    state = R.init_bn_state(specs)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        0.4, 0.6, (2, 16, 16, 3)), jnp.float32)
+    _, state = R.apply_with_state(cfg, params, state, x, policy_or_plan,
+                                  training=True)
+    packed = R.pack_for_serve(cfg, params, state, policy_or_plan)
+    return cfg, params, state, packed, x
+
+
+def _mixed_plan(cfg, *, channel_wise=False):
+    """>= 3 distinct inner word-lengths over the net's workload names."""
+    names = R.inner_layer_names(cfg)
+    assert len(names) >= 3
+    cycle = [(2, 2), (4, 4), (8, 4), (1, 1)]
+    layers = {
+        n: LayerPlan(w_bits=w, k=k, channel_wise=channel_wise)
+        for n, (w, k) in zip(names, [cycle[i % 4] for i in range(len(names))])
+    }
+    return PrecisionPlan.build(layers, name="mixed-test")
+
+
+class TestPlanSchema:
+    def test_json_round_trip(self):
+        plan = _mixed_plan(_smoke_cfg())
+        again = PrecisionPlan.loads(plan.dumps())
+        assert again == plan
+        assert again.distinct_wbits() == plan.distinct_wbits()
+
+    def test_layers_sorted_and_hashable(self):
+        a = PrecisionPlan(layers=(("b", LayerPlan()), ("a", LayerPlan())))
+        b = PrecisionPlan(layers=(("a", LayerPlan()), ("b", LayerPlan())))
+        assert a == b and hash(a) == hash(b)
+
+    def test_rejects_bad_wbits_and_k(self):
+        with pytest.raises(ValueError):
+            LayerPlan(w_bits=3)
+        with pytest.raises(ValueError):
+            LayerPlan(k=3)
+        with pytest.raises(ValueError):
+            LayerPlan(dataflow="direct")
+
+    def test_rejects_duplicates_and_unknown_keys(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            PrecisionPlan(layers=(("a", LayerPlan()), ("a", LayerPlan())))
+        with pytest.raises(ValueError, match="unknown"):
+            PrecisionPlan.from_json({"version": 1, "nope": 1})
+        with pytest.raises(ValueError, match="unknown"):
+            LayerPlan.from_json({"w_bits": 4, "bits": 4})
+
+    def test_rejects_wrong_version(self):
+        with pytest.raises(ValueError, match="version"):
+            PrecisionPlan.from_json({"version": 99})
+
+    def test_validate_layers_catches_unknown_names(self):
+        cfg = _smoke_cfg()
+        plan = PrecisionPlan(layers=(("s9b9c9", LayerPlan()),))
+        with pytest.raises(ValueError, match="s9b9c9"):
+            plan.validate_layers(g.name for g in R.gemm_workload(cfg, 1))
+
+    def test_example_plan_file_validates(self):
+        from pathlib import Path
+        path = (Path(__file__).resolve().parent.parent / "examples" /
+                "plans" / "resnet18_mixed.json")
+        plan = validate_plan_json(path, arch="resnet18")
+        assert len(plan.distinct_wbits()) >= 3
+
+    def test_pack_rejects_plan_with_unknown_layer(self, key):
+        cfg = _smoke_cfg()
+        specs = R.specs(cfg)
+        params = nnp.init_params(specs, key)
+        state = R.init_bn_state(specs)
+        bad = PrecisionPlan(layers=(("not_a_layer", LayerPlan()),))
+        with pytest.raises(ValueError, match="not_a_layer"):
+            R.pack_for_serve(cfg, params, state, bad)
+
+
+class TestResolution:
+    def test_plain_policy_resolves_to_itself(self):
+        pol = PrecisionPolicy(inner_bits=4, k=2)
+        assert resolve_policy(pol, "anything") is pol
+        assert resolve_dataflow(pol, "anything") == "auto"
+
+    def test_uniform_plan_matches_policy(self):
+        pol = PrecisionPolicy(inner_bits=2, k=2, variant="sa",
+                              channel_wise=True)
+        plan = PrecisionPlan.uniform(pol)
+        assert plan.policy_for("any_layer") == pol
+        assert as_plan(pol).policy_for("x") == pol
+        assert as_plan(plan) is plan
+
+    def test_named_layer_overrides_default(self):
+        plan = PrecisionPlan(
+            layers=(("deep", LayerPlan(w_bits=1, k=1)),),
+            default=LayerPlan(w_bits=8, k=4))
+        assert plan.policy_for("deep").inner_bits == 1
+        assert plan.policy_for("other").inner_bits == 8
+
+    def test_boundary_stays_pinned(self):
+        plan = PrecisionPlan(layers=(("stem", LayerPlan(w_bits=1, k=1)),))
+        assert plan.policy_for("stem").bits_for("boundary") == 8
+
+    def test_dataflow_precedence(self):
+        plan = PrecisionPlan(
+            layers=(("l", LayerPlan(dataflow="implicit")),))
+        # plan entry wins under 'auto'; an explicit pin wins over the plan
+        assert resolve_dataflow(plan, "l") == "implicit"
+        assert resolve_dataflow(plan, "other") == "auto"
+        assert resolve_dataflow(plan, "l", "im2col") == "im2col"
+
+    def test_fp_plan_resolves_unquantized(self):
+        plan = dataclasses.replace(PrecisionPlan(), quantize=False)
+        assert not plan.policy_for("x").quantize
+
+
+class TestPlanServing:
+    """The acceptance criterion: a >= 3-word-length plan serves packed
+    ResNet-18 bit-exactly against the per-layer reference path."""
+
+    def test_uniform_plan_bit_exact_vs_policy_path(self, key):
+        pol = PrecisionPolicy(inner_bits=4, k=2)
+        cfg, params, state, packed, x = _packed_net(key, pol)
+        plan = PrecisionPlan.uniform(pol)
+        packed_plan = R.pack_for_serve(cfg, params, state, plan)
+        y_pol = R.serve_forward(cfg, packed, x, pol, impl="xla")
+        y_plan = R.serve_forward(cfg, packed_plan, x, plan, impl="xla")
+        np.testing.assert_array_equal(np.asarray(y_pol, np.float32),
+                                      np.asarray(y_plan, np.float32))
+
+    def test_mixed_plan_dataflows_bit_exact(self, key):
+        cfg = _smoke_cfg()
+        plan = _mixed_plan(cfg)
+        assert len(plan.distinct_wbits()) >= 3
+        cfg, params, state, packed, x = _packed_net(key, plan)
+        y_ref = R.serve_forward(cfg, packed, x, plan, impl="xla",
+                                dataflow="im2col")  # per-layer reference
+        for impl, df in (("xla", "implicit"), ("xla", "auto"),
+                         ("pallas", "auto")):
+            y = R.serve_forward(cfg, packed, x, plan, impl=impl,
+                                dataflow=df)
+            np.testing.assert_array_equal(
+                np.asarray(y_ref, np.float32), np.asarray(y, np.float32),
+                err_msg=f"{impl}/{df}")
+
+    def test_mixed_plan_bottleneck_bit_exact(self, key):
+        """Bottleneck blocks (c1/c2/c3 + projection) under a mixed plan."""
+        cfg = R.ResNetConfig(name="r50-plan", depth=50, n_classes=8,
+                             img_size=16, width=16, stages_override=(1,))
+        plan = _mixed_plan(cfg)
+        specs = R.specs(cfg, policy=plan)
+        params = nnp.init_params(specs, key)
+        state = R.init_bn_state(specs)
+        x = jnp.asarray(np.random.default_rng(3).normal(
+            0.4, 0.6, (2, 16, 16, 3)), jnp.float32)
+        _, state = R.apply_with_state(cfg, params, state, x, plan,
+                                      training=True)
+        packed = R.pack_for_serve(cfg, params, state, plan)
+        y_i = R.serve_forward(cfg, packed, x, plan, impl="xla",
+                              dataflow="im2col")
+        y_d = R.serve_forward(cfg, packed, x, plan, impl="xla",
+                              dataflow="implicit")
+        np.testing.assert_array_equal(np.asarray(y_i, np.float32),
+                                      np.asarray(y_d, np.float32))
+
+    def test_mixed_plan_packs_per_layer_formats(self, key):
+        """Plane count / packed-K bytes really differ per layer."""
+        cfg = _smoke_cfg()
+        plan = _mixed_plan(cfg)
+        cfg, params, state, packed, x = _packed_net(key, plan)
+        shapes = {}
+        for name in R.inner_layer_names(cfg):
+            blk, sfx = name[:4], name[4:]
+            pkey = {"c1": "conv1", "c2": "conv2", "c3": "conv3",
+                    "p": "proj"}[sfx]
+            lp = plan.layer(name)
+            planes = packed[blk][pkey]["planes"]
+            expect_p = -(-lp.w_bits // lp.k)
+            assert planes.shape[0] == expect_p, name
+            shapes[name] = planes.shape
+        assert len({s[0] for s in shapes.values()}) >= 2  # plane counts vary
+
+    def test_mixed_plan_qat_forward_runs(self, key):
+        """The plan-aware QAT path (PTQ evaluation) stays finite."""
+        cfg = _smoke_cfg()
+        plan = _mixed_plan(cfg)
+        specs = R.specs(cfg, policy=plan)
+        params = nnp.init_params(specs, key)
+        x = jnp.asarray(np.random.default_rng(1).normal(
+            0.4, 0.6, (2, 16, 16, 3)), jnp.float32)
+        logits = R.forward(cfg, params, x, plan, mode="serve")
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_channel_wise_plan_layer(self, key):
+        """A plan mixing channel-wise and per-tensor layers packs a
+        per-channel gamma exactly where the plan says so."""
+        cfg = _smoke_cfg()
+        names = R.inner_layer_names(cfg)
+        plan = PrecisionPlan.build(
+            {names[0]: LayerPlan(w_bits=4, k=2, channel_wise=True),
+             names[1]: LayerPlan(w_bits=4, k=2, channel_wise=False)})
+        cfg, params, state, packed, x = _packed_net(key, plan)
+        y0 = R.serve_forward(cfg, packed, x, plan, impl="xla",
+                             dataflow="im2col")
+        y1 = R.serve_forward(cfg, packed, x, plan, impl="xla",
+                             dataflow="implicit")
+        np.testing.assert_array_equal(np.asarray(y0, np.float32),
+                                      np.asarray(y1, np.float32))
+
+
+class TestSensitivity:
+    def test_weight_ptq_monotone_in_bits(self, rng):
+        w = rng.normal(0, 0.1, (64, 32))
+        sens = planner.weight_ptq_sensitivity({"l": w})["l"]
+        assert sens[1] > sens[2] > sens[4] > sens[8] >= 0.0
+
+    def test_macs_scale(self, rng):
+        w = rng.normal(0, 0.1, (32, 16))
+        s1 = planner.weight_ptq_sensitivity({"l": w}, macs={"l": 10})["l"]
+        s2 = planner.weight_ptq_sensitivity({"l": w}, macs={"l": 1000})["l"]
+        assert s2[2] == pytest.approx(100 * s1[2])
+
+    def test_calibration_sensitivity_measured(self, key):
+        cfg = _smoke_cfg(stages=(1,))
+        specs = R.specs(cfg)
+        params = nnp.init_params(specs, key)
+        state = R.init_bn_state(specs)
+        x = jnp.asarray(np.random.default_rng(2).normal(
+            0.4, 0.6, (4, 16, 16, 3)), jnp.float32)
+
+        def fwd(plan):
+            return R.forward(cfg, params, x, plan, mode="serve",
+                             state=state)
+
+        names = R.inner_layer_names(cfg)
+        sens = planner.calibration_sensitivity(fwd, names,
+                                               bit_options=(8, 4, 1))
+        for n in names:
+            assert sens[n][8] == 0.0
+            assert sens[n][1] >= sens[n][4] >= 0.0
+        # 1-bit weights must measurably hurt at least one layer
+        assert max(sens[n][1] for n in names) > 0.0
+
+    def test_base_plan_may_name_probed_layers(self, key):
+        """Probing replaces (not duplicates) a base-plan entry."""
+        cfg = _smoke_cfg(stages=(1,))
+        specs = R.specs(cfg)
+        params = nnp.init_params(specs, key)
+        x = jnp.asarray(np.random.default_rng(4).normal(
+            0.4, 0.6, (2, 16, 16, 3)), jnp.float32)
+        names = R.inner_layer_names(cfg)
+        base = PrecisionPlan.build({names[0]: LayerPlan(w_bits=8, k=4)})
+        sens = planner.calibration_sensitivity(
+            lambda plan: R.forward(cfg, params, x, plan, mode="serve"),
+            names[:1], bit_options=(8, 2), base_plan=base)
+        assert sens[names[0]][2] >= 0.0
+
+
+class TestSearch:
+    def _toy(self):
+        gemms = [
+            Gemm("stem", 64, 27, 16, layer_class="boundary"),
+            Gemm("a", 256, 144, 16),
+            Gemm("b", 256, 144, 32),
+            Gemm("c", 64, 288, 64),
+            Gemm("fc", 4, 64, 8, layer_class="boundary"),
+        ]
+        sens = {n: {8: 0.0, 4: w, 2: 3 * w, 1: 10 * w}
+                for n, w in (("a", 1.0), ("b", 5.0), ("c", 0.2))}
+        return gemms, sens
+
+    def test_greedy_monotone(self):
+        gemms, sens = self._toy()
+        lat = planner.layer_latency_table(gemms)
+        traj = planner.greedy_bit_descent(["a", "b", "c"], sens, lat)
+        assert len(traj) > 1
+        for p, q in zip(traj, traj[1:]):
+            assert q.latency_s <= p.latency_s        # descent gains speed
+            assert q.error >= p.error                # and never accuracy
+            drops = [(n, b) for (n, b), (n2, b2) in zip(q.bits, p.bits)
+                     if b != b2]
+            assert len(drops) == 1                   # one bit-drop per step
+
+    def test_least_sensitive_layer_drops_first(self):
+        gemms, sens = self._toy()
+        lat = planner.layer_latency_table(gemms)
+        traj = planner.greedy_bit_descent(["a", "b", "c"], sens, lat)
+        first = dict(traj[1].bits)
+        assert first["c"] == 4 and first["a"] == 8 and first["b"] == 8
+
+    def test_plan_latency_includes_boundary_layers(self):
+        """PlanPoint latencies are whole-model: the pinned-8-bit stem/fc
+        rows count even though the bit assignment only names inner
+        layers."""
+        gemms, sens = self._toy()
+        lat = planner.layer_latency_table(gemms)
+        bits = {"a": 8, "b": 8, "c": 8}
+        inner_only = sum(lat[n][8] for n in bits)
+        total = planner.plan_latency(lat, bits)
+        assert total == pytest.approx(
+            inner_only + lat["stem"][8] + lat["fc"][8])
+        assert total > inner_only
+
+    def test_pareto_front_has_no_dominated_point(self):
+        gemms, sens = self._toy()
+        res = planner.plan_search(gemms, sens)
+        assert len(res.frontier) >= 3
+        for p in res.frontier:
+            for q in res.frontier:
+                dominated = (q.error <= p.error
+                             and q.latency_s <= p.latency_s
+                             and (q.error < p.error
+                                  or q.latency_s < p.latency_s))
+                assert not dominated, (p.name, q.name)
+
+    def test_pareto_front_drops_dominated_point(self):
+        mk = lambda name, e, l: planner.PlanPoint(
+            name=name, plan=PrecisionPlan(), bits=(), error=e, latency_s=l)
+        pts = [mk("good", 1.0, 1.0), mk("bad", 2.0, 2.0), mk("fast", 2.0, 0.5)]
+        front = planner.pareto_front(pts)
+        assert {p.name for p in front} == {"good", "fast"}
+
+    def test_budget_bytes_picks_lowest_error_under_budget(self):
+        gemms, sens = self._toy()
+        params = {g.name: g.k * g.n for g in gemms}
+        res = planner.plan_search(gemms, sens, layer_params=params)
+        fp = 4 * sum(params.values())
+        res_b = planner.plan_search(gemms, sens, layer_params=params,
+                                    budget_bytes=fp / 8.0)
+        assert res_b.chosen.footprint_bytes <= fp / 8.0
+        # lowest error among feasible frontier points
+        for p in res_b.frontier:
+            if p.footprint_bytes <= fp / 8.0:
+                assert res_b.chosen.error <= p.error
+        assert res.points  # unbudgeted search still returns the scatter
+
+    def test_budget_without_layer_params_raises(self):
+        gemms, sens = self._toy()
+        with pytest.raises(ValueError, match="layer_params"):
+            planner.plan_search(gemms, sens, budget_bytes=1e6)
+
+    def test_missing_sensitivity_raises(self):
+        gemms, sens = self._toy()
+        del sens["b"]
+        with pytest.raises(ValueError, match="b"):
+            planner.plan_search(gemms, sens)
+
+    def test_uniform_points_present(self):
+        gemms, sens = self._toy()
+        res = planner.plan_search(gemms, sens)
+        names = {p.name for p in res.points}
+        assert {"uniform_w8", "uniform_w4", "uniform_w2",
+                "uniform_w1"} <= names
+
+
+class TestFootprint:
+    """Satellite: Table III compression factors from the per-layer path."""
+
+    def test_uniform_plan_matches_footprint_report(self):
+        cfg = R.ResNetConfig(name="resnet18", depth=18, n_classes=1000,
+                             img_size=224)
+        pol = PrecisionPolicy(inner_bits=2, k=2)
+        rep_old = footprint_report(R.param_counts(cfg), pol)
+        rep_new = plan_footprint_report(
+            R.layer_param_counts(cfg), R.layer_classes(cfg),
+            PrecisionPlan.uniform(pol))
+        assert rep_new["quant_bytes"] == pytest.approx(
+            rep_old["quant_bytes"])
+        assert rep_new["compression"] == pytest.approx(
+            rep_old["compression"])
+        assert rep_new["inner_params"] == rep_old["inner_params"]
+
+    def test_fp_plan_is_identity(self):
+        cfg = _smoke_cfg()
+        plan = dataclasses.replace(PrecisionPlan(), quantize=False)
+        rep = plan_footprint_report(R.layer_param_counts(cfg),
+                                    R.layer_classes(cfg), plan)
+        assert rep["compression"] == pytest.approx(1.0)
+
+    @pytest.mark.parametrize("depth,paper_comp", [(18, 4.9), (152, 9.4)])
+    def test_paper_table3_compression_for_mixed_plans(self, depth,
+                                                      paper_comp):
+        """The planner hits the paper's w2 rows: greedy bit-descent under
+        the paper's byte budget lands a mixed plan whose compression is
+        ~4.9x (ResNet-18) / ~9.4x (ResNet-152) vs the fp32 baseline.
+
+        (The paper's Table III w2 deployments are themselves layer-wise
+        mixtures — a uniform inner-w2 assignment would compress ~14x;
+        the reported 4.9x/9.4x correspond to sensitive layers staying
+        at higher word-lengths.)
+        """
+        cfg = R.ResNetConfig(name=f"resnet{depth}", depth=depth,
+                             n_classes=1000, img_size=224)
+        gemms = R.gemm_workload(cfg, 1)
+        # Synthetic MAC-proportional sensitivity: the footprint of the
+        # budget-gated plan depends only on the descent hitting the byte
+        # budget, not on the exact error scale.
+        sens = {g.name: {8: 0.0, 4: 1e-9 * g.macs, 2: 3e-9 * g.macs,
+                         1: 1e-8 * g.macs}
+                for g in gemms if g.layer_class != "boundary"}
+        layer_params = R.layer_param_counts(cfg)
+        fp_bytes = 4.0 * sum(layer_params.values())
+        budget = fp_bytes / paper_comp
+        res = planner.plan_search(gemms, sens, layer_params=layer_params,
+                                  budget_bytes=budget)
+        comp = fp_bytes / res.chosen.footprint_bytes
+        # At least the paper's factor (the budget is a ceiling), within
+        # the granularity of one greedy layer-drop above it.
+        assert comp >= paper_comp * 0.99, comp
+        assert comp <= paper_comp * 1.35, comp
+        assert len(res.chosen.plan.distinct_wbits()) >= 2  # genuinely mixed

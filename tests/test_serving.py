@@ -86,6 +86,34 @@ def test_channel_wise_packing(key):
     assert bool(jnp.isfinite(out).all())
 
 
+def test_olmoe_channel_wise_policy(key):
+    """Regression (PR-3 satellite): olmoe's default policy must carry
+    channel_wise=True — its per-expert step sizes ARE the paper's
+    channel-wise quantization mapped onto the expert axis — and flipping
+    the flag must be behavior-neutral for the per-expert (lead-dim) gw
+    layout, so enabling it can never regress accuracy."""
+    api = configs.get("olmoe-1b-7b", reduced=True)
+    assert api.policy.channel_wise
+    params = api.init_params(key, "train")
+    # per-expert step-size banks: gw carries the expert lead dim
+    n_exp = api.cfg.moe.n_experts
+    assert params["layers"]["moe"]["gate"]["gw"].shape[-1] == n_exp
+    packed = pack_for_serving(api, params)
+    toks = jnp.ones((2, 8), jnp.int32)
+    out = api.forward(packed, toks, mode="serve")
+    assert bool(jnp.isfinite(out).all())
+    api0 = configs.get(
+        "olmoe-1b-7b", reduced=True,
+        policy=PrecisionPolicy(inner_bits=4, k=4, channel_wise=False))
+    out_train = api.forward(params, toks, mode="train")
+    out_train0 = api0.forward(params, toks, mode="train")
+    np.testing.assert_array_equal(np.asarray(out_train, np.float32),
+                                  np.asarray(out_train0, np.float32))
+    out0 = api0.forward(pack_for_serving(api0, params), toks, mode="serve")
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(out0, np.float32))
+
+
 def test_fp_baseline_serving(key):
     """policy.quantize=False: the paper's FP rows (bf16 deployment)."""
     pol = PrecisionPolicy(quantize=False)
