@@ -25,6 +25,7 @@ MODULES = [
     ("micro", "benchmarks.kernel_micro"),
     ("serve", "benchmarks.resnet_serve"),
     ("pareto", "benchmarks.pareto_serve"),
+    ("lm_plan", "benchmarks.lm_plan_serve"),
 ]
 
 

@@ -19,8 +19,14 @@ unchanged — a new plan is a re-pack, never a new FPGA image.  A
     }
 
 Layer names are the model's ``gemm_workload`` names (ResNet:
-``stem``, ``s{stage}b{block}c{conv}``, ``s{stage}b{block}p``, ``fc``),
+``stem``, ``s{stage}b{block}c{conv}``, ``s{stage}b{block}p``, ``fc``;
+LM families: the projection names ``q``/``k``/``v``/``o``/``mlp``/
+``expert``/..., optionally scoped to one decoder layer as ``l{i}.q``),
 so a plan validates directly against the workload the DSE scored.
+Resolution is hierarchical: an exact entry wins, else scope prefixes
+are stripped one at a time (``l3.q`` falls back to ``q``), else the
+plan default applies — so one ``q`` entry covers every depth while
+``l3.q`` pins a single layer (DESIGN.md §7).
 
 Every serve entry point that takes a ``PrecisionPolicy`` also accepts a
 ``PrecisionPlan``; a uniform policy is the degenerate single-entry plan
@@ -118,6 +124,7 @@ class PrecisionPlan:
     variant: str = "st"
     quantize: bool = True
     name: str = ""
+    arch: str = ""   # optional: the architecture this plan targets (CI gate)
 
     def __post_init__(self):
         if self.variant not in ("st", "sa"):
@@ -155,10 +162,18 @@ class PrecisionPlan:
     # --- per-layer resolution ----------------------------------------------
 
     def layer(self, name: str) -> LayerPlan:
-        for n, lp in self.layers:
-            if n == name:
-                return lp
-        return self.default
+        """Hierarchical lookup: exact entry first, then the name with its
+        scope prefixes stripped one segment at a time (``l3.mlp`` falls
+        back to ``mlp``), then the plan default.  A scoped entry always
+        beats a base entry for the layers it names."""
+        entries = dict(self.layers)
+        probe = name
+        while True:
+            if probe in entries:
+                return entries[probe]
+            if "." not in probe:
+                return self.default
+            probe = probe.split(".", 1)[1]
 
     def policy_for(self, name: str) -> PrecisionPolicy:
         """Collapse one layer's entry into the kernel-facing policy.
@@ -202,7 +217,7 @@ class PrecisionPlan:
     # --- serialization -----------------------------------------------------
 
     def to_json(self) -> Dict[str, object]:
-        return {
+        out: Dict[str, object] = {
             "version": PLAN_VERSION,
             "name": self.name,
             "a_bits": self.a_bits,
@@ -212,6 +227,9 @@ class PrecisionPlan:
             "default": self.default.to_json(),
             "layers": {n: lp.to_json() for n, lp in self.layers},
         }
+        if self.arch:
+            out["arch"] = self.arch
+        return out
 
     @classmethod
     def from_json(cls, obj: Mapping[str, object]) -> "PrecisionPlan":
@@ -220,8 +238,8 @@ class PrecisionPlan:
         version = obj.get("version", PLAN_VERSION)
         if version != PLAN_VERSION:
             raise ValueError(f"unsupported plan version {version}")
-        known = {"version", "name", "a_bits", "boundary_bits", "variant",
-                 "quantize", "default", "layers"}
+        known = {"version", "name", "arch", "a_bits", "boundary_bits",
+                 "variant", "quantize", "default", "layers"}
         extra = set(obj) - known
         if extra:
             raise ValueError(f"unknown plan keys: {sorted(extra)}")
@@ -237,6 +255,7 @@ class PrecisionPlan:
             variant=str(obj.get("variant", "st")),
             quantize=bool(obj.get("quantize", True)),
             name=str(obj.get("name", "")),
+            arch=str(obj.get("arch", "")),
         )
 
     def dumps(self) -> str:
@@ -328,36 +347,68 @@ def plan_footprint_report(
 
 
 def validate_plan_json(path, arch: Optional[str] = None) -> PrecisionPlan:
-    """Load + schema-check a plan file; with ``arch``, also check every
-    named layer against that architecture's gemm workload."""
+    """Load + schema-check a plan file; with ``arch`` (or the plan's own
+    embedded ``arch`` key), also check every named layer against that
+    architecture's plan-layer namespace (base workload names + scoped
+    ``l{i}.name`` forms where the family defines them)."""
     plan = PrecisionPlan.load(path)
+    arch = arch or plan.arch or None
     if arch is not None:
         from repro import configs  # late import: configs pulls model deps
         api = configs.get(arch)
-        plan.validate_layers([g.name for g in api.gemm_workload(1)])
+        plan.validate_layers(api.plan_layer_names())
     return plan
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         description="Validate precision-plan JSON files "
-                    "(schema + optional per-arch layer-name check).")
+                    "(schema + per-arch layer-name check; the arch comes "
+                    "from --arch or each plan's own 'arch' key).")
     ap.add_argument("command", choices=["validate"])
     ap.add_argument("paths", nargs="+", help="plan JSON files")
     ap.add_argument("--arch", default=None,
-                    help="check layer names against this arch's workload")
+                    help="check layer names against this arch's workload "
+                         "(overrides the plans' embedded arch)")
+    ap.add_argument("--schema-only", action="store_true",
+                    help="allow plans with no arch (schema check only; "
+                         "without this flag an arch-less plan is an error "
+                         "so the CI gate always layer-checks)")
     args = ap.parse_args(argv)
+    from repro import configs  # late import: configs pulls model deps
+    known_archs = configs.ARCH_NAMES + configs.RESNET_NAMES
+    if args.arch is not None and args.arch not in known_archs:
+        print(f"[plan] unknown arch {args.arch!r}; available: "
+              f"{', '.join(known_archs)}", file=sys.stderr)
+        return 2
     rc = 0
     for path in args.paths:
         try:
             plan = validate_plan_json(path, arch=args.arch)
+            if (args.arch or plan.arch) is None or \
+                    not (args.arch or plan.arch):
+                if not args.schema_only:
+                    print(f"[plan] INVALID {path}: no arch to validate "
+                          f"layer names against (embed an 'arch' key, "
+                          f"pass --arch, or pass --schema-only)",
+                          file=sys.stderr)
+                    rc = 1
+                    continue
+        except KeyError:
+            # a plan file embedding an arch outside the registry
+            plan_arch = PrecisionPlan.load(path).arch
+            print(f"[plan] unknown arch {plan_arch!r} in {path}; "
+                  f"available: {', '.join(known_archs)}", file=sys.stderr)
+            return 2
         except (ValueError, OSError, json.JSONDecodeError) as e:
             print(f"[plan] INVALID {path}: {e}", file=sys.stderr)
             rc = 1
             continue
         print(f"[plan] ok {path}: {len(plan.layers)} named layers, "
               f"w_bits {plan.distinct_wbits()}, default "
-              f"w{plan.default.w_bits}k{plan.default.k}")
+              f"w{plan.default.w_bits}k{plan.default.k}"
+              + (f", arch {args.arch or plan.arch}"
+                 if (args.arch or plan.arch) else ""))
     return rc
 
 

@@ -11,16 +11,21 @@ slice the same command serves the full config over the production mesh
 proof of every cell).
 
 CNN archs serve batched images through ``ImageServer`` instead of the
-LM generator, and additionally accept a layer-wise precision plan:
+LM generator.  EVERY arch additionally accepts a layer-wise precision
+plan — CNNs per conv layer, LM families per projection (``q``, ``mlp``,
+``expert``, ...) or per decoder depth (``l3.mlp``):
 
     PYTHONPATH=src python -m repro.launch.serve --arch resnet18 --reduced \
         --plan examples/plans/resnet18_mixed.json --batch 8
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \
+        --plan examples/plans/granite_8b_mixed.json --batch 4
 
 The plan JSON (core/plan.py schema; emitted by the sensitivity-guided
 DSE in core/planner.py) assigns each layer its own
 (w_bits, k, channel_wise, dataflow); packing + serving resolve the same
-per-layer formats, so switching plan points is a re-pack, never a new
-serve graph implementation.
+per-layer formats through the shared funnel (depth-heterogeneous LM
+plans serve via format-grouped scans), so switching plan points is a
+re-pack, never a new serve graph implementation.
 """
 from __future__ import annotations
 
@@ -85,8 +90,9 @@ def main(argv=None) -> int:
     ap.add_argument("--channel-wise", action="store_true")
     ap.add_argument("--fp-baseline", action="store_true")
     ap.add_argument("--plan", default=None,
-                    help="layer-wise precision plan JSON (CNN archs): "
-                         "per-layer w_bits/k/channel_wise/dataflow")
+                    help="layer-wise precision plan JSON (any arch): "
+                         "per-layer w_bits/k/channel_wise/dataflow, "
+                         "validated against the arch's layer namespace")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
@@ -102,6 +108,7 @@ def main(argv=None) -> int:
     else:
         policy = None
 
+    plan = None
     if args.plan is not None:
         if (args.fp_baseline or args.w_bits or args.k
                 or args.channel_wise):
@@ -109,21 +116,23 @@ def main(argv=None) -> int:
                 "--plan carries the per-layer policy; it conflicts with "
                 "--w-bits/--k/--channel-wise/--fp-baseline")
         plan = PrecisionPlan.load(args.plan)
-        api = configs.get(args.arch, reduced=args.reduced, policy=plan)
-        if api.family != "cnn":
-            raise SystemExit(
-                f"--plan is supported for the CNN family; {args.arch} is "
-                f"{api.family!r} (LM layer naming lands with plan-aware "
-                f"pack_tree)")
-        plan.validate_layers(g.name for g in api.gemm_workload(1))
-        return _serve_cnn(api, plan, args)
+        policy = plan  # the plan IS the api policy, any family
 
     api = configs.get(args.arch, reduced=args.reduced, policy=policy)
+    if plan is not None:
+        plan.validate_layers(api.plan_layer_names())
     if api.family == "cnn":
         return _serve_cnn(api, api.policy, args)
 
     rng = jax.random.PRNGKey(args.seed)
-    params = api.init_params(rng, "train")
+    # Init/restore always use the uniform single-stack layout: trainer
+    # checkpoints are written under the uniform policy, and a
+    # depth-scoped plan's grouped specs would not match their leaf
+    # paths.  pack_for_serving re-groups the stack to the plan's layout
+    # (the train-once / re-pack-any-plan-point flow, DESIGN.md §7.3).
+    init_api = (configs.get(args.arch, reduced=args.reduced)
+                if plan is not None else api)
+    params = init_api.init_params(rng, "train")
     if args.ckpt_dir:
         store = CheckpointStore(args.ckpt_dir)
         _, state = store.restore({"params": params})
@@ -134,9 +143,15 @@ def main(argv=None) -> int:
     packed = pack_for_serving(api, params)
     t_pack = time.perf_counter() - t0
     n_bytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(packed))
-    print(f"[serve] packed {args.arch} at w_Q="
-          f"{'FP' if not api.policy.quantize else api.policy.inner_bits} "
-          f"k={api.policy.k}: {n_bytes/2**20:.1f} MiB in {t_pack:.2f}s")
+    if isinstance(api.policy, PrecisionPlan):
+        tag = (f"plan [{api.policy.name or args.plan}] w_bits "
+               f"{'/'.join(map(str, api.policy.distinct_wbits()))}")
+    elif not api.policy.quantize:
+        tag = "w_Q=FP"
+    else:
+        tag = f"w_Q={api.policy.inner_bits} k={api.policy.k}"
+    print(f"[serve] packed {args.arch} at {tag}: "
+          f"{n_bytes/2**20:.1f} MiB in {t_pack:.2f}s")
 
     gen = Generator(api=api, params=packed)
     prompts = np.asarray(

@@ -72,6 +72,16 @@ class ModelAPI:
     def gemm_workload(self, tokens: int):
         return self.mod.gemm_workload(self.cfg, tokens)
 
+    def plan_layer_names(self):
+        """Every layer name a PrecisionPlan may bind for this arch: the
+        family's full namespace (base workload names + depth-scoped
+        ``l{i}.name`` forms where the family supports them), falling
+        back to the gemm-workload names."""
+        fn = getattr(self.mod, "plan_layer_names", None)
+        if fn is not None:
+            return fn(self.cfg)
+        return [g.name for g in self.gemm_workload(1)]
+
     def model_flops(self, *, tokens: int, step: str) -> float:
         return self.mod.model_flops(self.cfg, tokens=tokens, step=step)
 

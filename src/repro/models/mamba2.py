@@ -55,10 +55,11 @@ def specs(cfg: Mamba2Config, mode: str = "train",
         "final_norm": nnl.rmsnorm_spec(cfg.d_model),
         "head": (Q.qlinear_serve_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab),
                                       axes=("embed", "vocab"),
-                                      layer_class="boundary", policy=policy)
+                                      layer_class="boundary", policy=policy,
+                                      name="head")
                  if serve else
                  Q.qlinear_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab), axes=("embed", "vocab"),
-                                layer_class="boundary")),
+                                layer_class="boundary", name="head")),
         "layers": {
             "ln": _stack(nnl.rmsnorm_spec(cfg.d_model), lead, lead_axes),
             "ssm": nnssm.ssm_spec(cfg.ssm, lead=lead, lead_axes=lead_axes,
@@ -84,10 +85,11 @@ def _head(cfg, params, x, policy, serve, impl):
     x = nnl.rmsnorm_apply(params["final_norm"], x)
     if serve:
         logits = Q.qlinear_serve_apply(params["head"], x, policy,
-                                       layer_class="boundary", impl=impl)
+                                       layer_class="boundary", impl=impl,
+                                       name="head")
     else:
         logits = Q.qlinear_apply(params["head"], x, policy,
-                                 layer_class="boundary")
+                                 layer_class="boundary", name="head")
     return logits[..., :cfg.vocab]  # drop TP vocab padding
 
 

@@ -72,10 +72,15 @@ def _stack(spec, lead, lead_axes):
             for k, v in spec.items()}
 
 
+# gemm_workload name map of the attention projections: q/k/v/o answer to
+# the aggregated attn_q / attn_kv / attn_o workload entries.
+_ATTN_NAMES = {"q": "attn_q", "k": "attn_kv", "v": "attn_kv", "o": "attn_o"}
+
+
 def _mlp_spec(cfg, *, lead, lead_axes, serve, policy):
     mk = functools.partial(
         Q.qlinear_serve_spec if serve else Q.qlinear_spec,
-        lead=lead, lead_axes=lead_axes)
+        lead=lead, lead_axes=lead_axes, name="mlp")
     kw = {"policy": policy} if serve else {}
     return {
         "gate": mk(cfg.d_model, cfg.d_ff, axes=("embed", "mlp"), **kw),
@@ -100,7 +105,7 @@ def _a_layer_spec(cfg, *, lead, lead_axes, serve, policy):
         "ln1": _stack(nnl.rmsnorm_spec(cfg.d_model), lead, lead_axes),
         "attn": attn.gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
                               lead=lead, lead_axes=lead_axes, serve=serve,
-                              policy=policy),
+                              policy=policy, names=_ATTN_NAMES),
         "ln2": _stack(nnl.rmsnorm_spec(cfg.d_model), lead, lead_axes),
         "mlp": _mlp_spec(cfg, lead=lead, lead_axes=lead_axes, serve=serve,
                          policy=policy),
@@ -118,10 +123,11 @@ def specs(cfg: RGConfig, mode: str = "train",
         "final_norm": nnl.rmsnorm_spec(cfg.d_model),
         "head": (Q.qlinear_serve_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab),
                                       axes=("embed", "vocab"),
-                                      layer_class="boundary", policy=policy)
+                                      layer_class="boundary", policy=policy,
+                                      name="head")
                  if serve else
                  Q.qlinear_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab), axes=("embed", "vocab"),
-                                layer_class="boundary")),
+                                layer_class="boundary", name="head")),
         # superblock = (R, R, A), scanned
         "supers": {
             "r1": _r_layer_spec(cfg, lead=lead, lead_axes=lax_, serve=serve,
@@ -138,16 +144,21 @@ def specs(cfg: RGConfig, mode: str = "train",
     return tree
 
 
+def _mlp_fwd(p, h, policy, serve, impl):
+    fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
+          if serve else Q.qlinear_apply)
+    g = fn(p["gate"], h, policy, name="mlp")
+    u = fn(p["up"], h, policy, name="mlp")
+    return fn(p["down"], nnl.swiglu_combine(g, u), policy, name="mlp")
+
+
 def _r_fwd(cfg, p, x, policy, serve, impl, h0=None):
     h = nnl.rmsnorm_apply(p["ln1"], x)
     o, st = nnr.rglru_block_forward(p["rnn"], h, policy, cfg.rnn,
                                     serve=serve, impl=impl, h0=h0)
     x = x + o
     h = nnl.rmsnorm_apply(p["ln2"], x)
-    fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
-          if serve else Q.qlinear_apply)
-    g, u = fn(p["mlp"]["gate"], h, policy), fn(p["mlp"]["up"], h, policy)
-    x = x + fn(p["mlp"]["down"], nnl.swiglu_combine(g, u), policy)
+    x = x + _mlp_fwd(p["mlp"], h, policy, serve, impl)
     return constrain(x, ("batch", "seq", "act_embed")), st
 
 
@@ -156,13 +167,11 @@ def _a_fwd(cfg, p, x, policy, sin, cos, serve, impl):
     o, kv = attn.gqa_prefill(p["attn"], h, policy, n_heads=cfg.n_heads,
                              n_kv=cfg.n_kv, head_dim=cfg.hd, sin=sin, cos=cos,
                              window=cfg.window, serve=serve, impl=impl,
-                             chunk=cfg.attn_chunk, attn_impl=cfg.attn_impl)
+                             chunk=cfg.attn_chunk, attn_impl=cfg.attn_impl,
+                             names=_ATTN_NAMES)
     x = x + o
     h = nnl.rmsnorm_apply(p["ln2"], x)
-    fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
-          if serve else Q.qlinear_apply)
-    g, u = fn(p["mlp"]["gate"], h, policy), fn(p["mlp"]["up"], h, policy)
-    x = x + fn(p["mlp"]["down"], nnl.swiglu_combine(g, u), policy)
+    x = x + _mlp_fwd(p["mlp"], h, policy, serve, impl)
     return constrain(x, ("batch", "seq", "act_embed")), kv
 
 
@@ -188,10 +197,11 @@ def _head(cfg, params, x, policy, serve, impl):
     x = nnl.rmsnorm_apply(params["final_norm"], x)
     if serve:
         logits = Q.qlinear_serve_apply(params["head"], x, policy,
-                                       layer_class="boundary", impl=impl)
+                                       layer_class="boundary", impl=impl,
+                                       name="head")
     else:
         logits = Q.qlinear_apply(params["head"], x, policy,
-                                 layer_class="boundary")
+                                 layer_class="boundary", name="head")
     return logits[..., :cfg.vocab]  # drop TP vocab padding
 
 
@@ -258,9 +268,12 @@ def _attn_ring_step(cfg, p, x, k_cache, v_cache, length, policy, sin, cos,
     fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
           if serve else Q.qlinear_apply)
     h = nnl.rmsnorm_apply(p["ln1"], x)
-    q = fn(p["attn"]["q"], h, policy).reshape(b, 1, cfg.n_heads, cfg.hd)
-    k = fn(p["attn"]["k"], h, policy).reshape(b, 1, cfg.n_kv, cfg.hd)
-    v = fn(p["attn"]["v"], h, policy).reshape(b, 1, cfg.n_kv, cfg.hd)
+    q = fn(p["attn"]["q"], h, policy,
+           name=_ATTN_NAMES["q"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+    k = fn(p["attn"]["k"], h, policy,
+           name=_ATTN_NAMES["k"]).reshape(b, 1, cfg.n_kv, cfg.hd)
+    v = fn(p["attn"]["v"], h, policy,
+           name=_ATTN_NAMES["v"]).reshape(b, 1, cfg.n_kv, cfg.hd)
     q = nnl.apply_rotary(q, sin, cos)
     k = nnl.apply_rotary(k, sin, cos)
     slot = jnp.mod(length, w)
@@ -272,10 +285,9 @@ def _attn_ring_step(cfg, p, x, k_cache, v_cache, length, policy, sin, cos,
     mask_len = jnp.where(valid_all, w, length + 1)
     o = attn.decode_attention(q, k_cache, v_cache, mask_len)
     o = o.reshape(b, 1, cfg.n_heads * cfg.hd)
-    x = x + fn(p["attn"]["o"], o, policy)
+    x = x + fn(p["attn"]["o"], o, policy, name=_ATTN_NAMES["o"])
     h = nnl.rmsnorm_apply(p["ln2"], x)
-    g, u = fn(p["mlp"]["gate"], h, policy), fn(p["mlp"]["up"], h, policy)
-    x = x + fn(p["mlp"]["down"], nnl.swiglu_combine(g, u), policy)
+    x = x + _mlp_fwd(p["mlp"], h, policy, serve, impl)
     return x, k_cache, v_cache
 
 
@@ -285,10 +297,7 @@ def _r_step(cfg, p, x, st, policy, serve, impl):
                                  serve=serve, impl=impl)
     x = x + o
     h = nnl.rmsnorm_apply(p["ln2"], x)
-    fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
-          if serve else Q.qlinear_apply)
-    g, u = fn(p["mlp"]["gate"], h, policy), fn(p["mlp"]["up"], h, policy)
-    x = x + fn(p["mlp"]["down"], nnl.swiglu_combine(g, u), policy)
+    x = x + _mlp_fwd(p["mlp"], h, policy, serve, impl)
     return x, st
 
 

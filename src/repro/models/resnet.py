@@ -28,7 +28,8 @@ from repro.nn.param import ParamSpec
 __all__ = ["ResNetConfig", "RESNET_STAGES", "specs", "forward",
            "gemm_workload", "model_flops", "init_bn_state",
            "pack_for_serve", "serve_forward", "layer_param_counts",
-           "layer_classes", "layer_weights", "inner_layer_names"]
+           "layer_classes", "layer_weights", "inner_layer_names",
+           "plan_layer_names"]
 
 # Block param keys -> gemm_workload name suffixes: plan layer names are
 # the workload names ("s0b0c1", "s0b0p", ...), the same ids the DSE
@@ -123,35 +124,44 @@ def bn_apply(p, state, x, *, training: bool, momentum: float = 0.9):
 # --- blocks -----------------------------------------------------------------
 
 
-def _no_cw(suffix: str) -> bool:
-    return False
+def _cw(policy, name: str) -> bool:
+    """Per-layer channel-wise flag via the shared resolver: channel-wise
+    layers carry a per-output-channel gw; per-tensor layers a scalar."""
+    return plan_lib.resolve_policy(policy, name).channel_wise
 
 
-def _basic_spec(cin, cout, stride, cw=_no_cw):
+def _qc(cin, cout, k, policy, name, layer_class="inner"):
+    """One conv spec, its workload name riding in the marker (the shared
+    funnel resolves the identical per-layer format at pack/serve time)."""
+    return qconv_spec(cin, cout, k, layer_class=layer_class, name=name,
+                      channel_wise=_cw(policy, name))
+
+
+def _basic_spec(cin, cout, stride, policy, lname):
     s = {
-        "conv1": qconv_spec(cin, cout, 3, channel_wise=cw("c1")),
+        "conv1": _qc(cin, cout, 3, policy, lname + "c1"),
         "bn1": bn_spec(cout),
-        "conv2": qconv_spec(cout, cout, 3, channel_wise=cw("c2")),
+        "conv2": _qc(cout, cout, 3, policy, lname + "c2"),
         "bn2": bn_spec(cout),
     }
     if stride != 1 or cin != cout:
-        s["proj"] = qconv_spec(cin, cout, 1, channel_wise=cw("p"))
+        s["proj"] = _qc(cin, cout, 1, policy, lname + "p")
         s["bn_proj"] = bn_spec(cout)
     return s
 
 
-def _bottleneck_spec(cin, cmid, stride, cw=_no_cw):
+def _bottleneck_spec(cin, cmid, stride, policy, lname):
     cout = 4 * cmid
     s = {
-        "conv1": qconv_spec(cin, cmid, 1, channel_wise=cw("c1")),
+        "conv1": _qc(cin, cmid, 1, policy, lname + "c1"),
         "bn1": bn_spec(cmid),
-        "conv2": qconv_spec(cmid, cmid, 3, channel_wise=cw("c2")),
+        "conv2": _qc(cmid, cmid, 3, policy, lname + "c2"),
         "bn2": bn_spec(cmid),
-        "conv3": qconv_spec(cmid, cout, 1, channel_wise=cw("c3")),
+        "conv3": _qc(cmid, cout, 1, policy, lname + "c3"),
         "bn3": bn_spec(cout),
     }
     if stride != 1 or cin != cout:
-        s["proj"] = qconv_spec(cin, cout, 1, channel_wise=cw("p"))
+        s["proj"] = _qc(cin, cout, 1, policy, lname + "p")
         s["bn_proj"] = bn_spec(cout)
     return s
 
@@ -171,57 +181,51 @@ def _block_channels(cfg: ResNetConfig):
 def specs(cfg: ResNetConfig, mode: str = "train",
           policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
     del mode  # resnet serves via the same QAT tree (packed offline)
-
-    def cw(name: str) -> bool:
-        # Per-layer channel-wise flag (plan-aware): channel-wise layers
-        # carry a per-output-channel gw; per-tensor layers a scalar.
-        return plan_lib.resolve_policy(policy, name).channel_wise
-
     tree: Dict = {
-        "stem": qconv_spec(3, cfg.width, 7, layer_class="boundary",
-                           channel_wise=cw("stem")),
+        "stem": _qc(3, cfg.width, 7, policy, "stem", layer_class="boundary"),
         "bn_stem": bn_spec(cfg.width),
         "fc": Q.qlinear_spec(cfg.fc_in, cfg.n_classes,
                              axes=("embed", "vocab"),
-                             layer_class="boundary",
-                             channel_wise=cw("fc")),
+                             layer_class="boundary", name="fc",
+                             channel_wise=_cw(policy, "fc")),
     }
     mk = _bottleneck_spec if cfg.block == "bottleneck" else _basic_spec
     for si, bi, cin, cmid, stride in _block_channels(cfg):
         key = f"s{si}b{bi}"
-        tree[key] = mk(cin, cmid, stride,
-                       cw=lambda sfx, _k=key: cw(_k + sfx))
+        tree[key] = mk(cin, cmid, stride, policy, key)
     return tree
 
 
 def _basic_fwd(p, st, x, policy, stride, training, lname=""):
-    pol = lambda sfx: plan_lib.resolve_policy(policy, lname + sfx)
-    h = qconv_apply(p["conv1"], x, pol("c1"), k=3, stride=stride)
+    h = qconv_apply(p["conv1"], x, policy, k=3, stride=stride,
+                    name=lname + "c1")
     h, st1 = bn_apply(p["bn1"], st["bn1"], h, training=training)
     h = jax.nn.relu(h)
-    h = qconv_apply(p["conv2"], h, pol("c2"), k=3)
+    h = qconv_apply(p["conv2"], h, policy, k=3, name=lname + "c2")
     h, st2 = bn_apply(p["bn2"], st["bn2"], h, training=training)
     new_st = {"bn1": st1, "bn2": st2}
     if "proj" in p:
-        x = qconv_apply(p["proj"], x, pol("p"), k=1, stride=stride)
+        x = qconv_apply(p["proj"], x, policy, k=1, stride=stride,
+                        name=lname + "p")
         x, stp = bn_apply(p["bn_proj"], st["bn_proj"], x, training=training)
         new_st["bn_proj"] = stp
     return jax.nn.relu(x + h), new_st
 
 
 def _bottleneck_fwd(p, st, x, policy, stride, training, lname=""):
-    pol = lambda sfx: plan_lib.resolve_policy(policy, lname + sfx)
-    h = qconv_apply(p["conv1"], x, pol("c1"), k=1)
+    h = qconv_apply(p["conv1"], x, policy, k=1, name=lname + "c1")
     h, st1 = bn_apply(p["bn1"], st["bn1"], h, training=training)
     h = jax.nn.relu(h)
-    h = qconv_apply(p["conv2"], h, pol("c2"), k=3, stride=stride)
+    h = qconv_apply(p["conv2"], h, policy, k=3, stride=stride,
+                    name=lname + "c2")
     h, st2 = bn_apply(p["bn2"], st["bn2"], h, training=training)
     h = jax.nn.relu(h)
-    h = qconv_apply(p["conv3"], h, pol("c3"), k=1)
+    h = qconv_apply(p["conv3"], h, policy, k=1, name=lname + "c3")
     h, st3 = bn_apply(p["bn3"], st["bn3"], h, training=training)
     new_st = {"bn1": st1, "bn2": st2, "bn3": st3}
     if "proj" in p:
-        x = qconv_apply(p["proj"], x, pol("p"), k=1, stride=stride)
+        x = qconv_apply(p["proj"], x, policy, k=1, stride=stride,
+                        name=lname + "p")
         x, stp = bn_apply(p["bn_proj"], st["bn_proj"], x, training=training)
         new_st["bn_proj"] = stp
     return jax.nn.relu(x + h), new_st
@@ -230,9 +234,8 @@ def _bottleneck_fwd(p, st, x, policy, stride, training, lname=""):
 def apply_with_state(cfg: ResNetConfig, params, state, images, policy,
                      *, training: bool = False):
     """images (B,H,W,3) -> (logits (B,classes), new bn state)."""
-    x = qconv_apply(params["stem"], images,
-                    plan_lib.resolve_policy(policy, "stem"), k=7, stride=2,
-                    layer_class="boundary", quantize_act=False)
+    x = qconv_apply(params["stem"], images, policy, k=7, stride=2,
+                    layer_class="boundary", quantize_act=False, name="stem")
     x, st_stem = bn_apply(params["bn_stem"], state["bn_stem"], x,
                           training=training)
     x = jax.nn.relu(x)
@@ -248,7 +251,7 @@ def apply_with_state(cfg: ResNetConfig, params, state, images, policy,
     x = jnp.mean(x, axis=(1, 2))
     logits = Q.qlinear_apply(
         {k: v for k, v in params["fc"].items() if k != Q.QMARK}, x,
-        plan_lib.resolve_policy(policy, "fc"), layer_class="boundary")
+        policy, layer_class="boundary", name="fc")
     return logits, new_state
 
 
@@ -287,47 +290,31 @@ def _fold_bn(bn_params, bn_state, eps: float = 1e-5):
 def pack_for_serve(cfg: ResNetConfig, params, state, policy):
     """Trained QAT tree + BN running stats -> deployed serve tree.
 
-    Every qconv/qlinear subtree becomes packed digit planes
-    (Q.pack_qlinear); every BatchNorm is folded into the (scale, shift)
-    pair its following matmul applies in the fused kernel epilogue —
-    after this, the serve graph contains no standalone BN op at all.
-
-    ``policy`` may be a uniform ``PrecisionPolicy`` or a layer-wise
-    ``PrecisionPlan``: each layer packs at its OWN (w_bits, k,
-    channel_wise) — plane count, packed-K bytes, and gamma layout all
-    vary per layer, and ``serve_forward`` resolves the identical
-    per-layer format so the packed tree and the serve graph agree.
+    Every qconv/qlinear subtree becomes packed digit planes through the
+    SHARED plan-aware funnel (``Q.pack_tree`` — the spec markers carry
+    each layer's workload name, so a ``PrecisionPlan`` packs every layer
+    at its own (w_bits, k, channel_wise): plane count, packed-K bytes
+    and gamma layout all vary per layer).  Every BatchNorm is folded
+    into the (scale, shift) pair its following matmul applies in the
+    fused kernel epilogue — after this, the serve graph contains no
+    standalone BN op at all.  ``serve_forward`` resolves the identical
+    per-layer formats, so the packed tree and the serve graph agree.
     """
     if isinstance(policy, plan_lib.PrecisionPlan):
-        policy.validate_layers(g.name for g in gemm_workload(cfg, 1))
-
-    def pack(sub, layer_class, lname):
-        return Q.pack_qlinear(
-            {k: v for k, v in sub.items() if k != Q.QMARK},
-            plan_lib.resolve_policy(policy, lname), layer_class)
-
-    out = {
-        "stem": pack(params["stem"], "boundary", "stem"),
-        "bn_stem": _fold_bn(params["bn_stem"], state["bn_stem"]),
-        "fc": pack(params["fc"], "boundary", "fc"),
-    }
-    for si, bi, cin, cmid, stride in _block_channels(cfg):
-        key = f"s{si}b{bi}"
-        blk, st = params[key], state[key]
-        packed = {}
-        for name, sub in blk.items():
-            if name.startswith("bn"):
-                packed[name] = _fold_bn(sub, st[name])
-            else:
-                packed[name] = pack(sub, "inner", key + _PLAN_SUFFIX[name])
-        out[key] = packed
+        policy.validate_layers(plan_layer_names(cfg))
+    sp = specs(cfg, policy=policy)
+    packed = Q.pack_tree(params, sp, policy)
+    out = {}
+    for key, sub in packed.items():
+        if key.startswith("bn"):
+            out[key] = _fold_bn(params[key], state[key])
+        elif Q.is_qlinear(sp[key]):
+            out[key] = sub
+        else:  # residual block: fold its BNs, keep the packed convs
+            out[key] = {n: (_fold_bn(params[key][n], state[key][n])
+                            if n.startswith("bn") else v)
+                        for n, v in sub.items()}
     return out
-
-
-def _layer_kw(policy, lname, dataflow):
-    """Per-layer serve resolution: policy + conv dataflow for one layer."""
-    return {"policy": plan_lib.resolve_policy(policy, lname),
-            "dataflow": plan_lib.resolve_dataflow(policy, lname, dataflow)}
 
 
 def _shortcut(p, x, policy, stride, impl, tile, dataflow, lname=""):
@@ -335,50 +322,46 @@ def _shortcut(p, x, policy, stride, impl, tile, dataflow, lname=""):
     if "proj" not in p:
         return x
     s, t = p["bn_proj"]
-    kw = _layer_kw(policy, lname + "p", dataflow)
     return Q.qconv_serve_apply(
-        p["proj"], x, kw["policy"], k=1, stride=stride, impl=impl, tile=tile,
+        p["proj"], x, policy, k=1, stride=stride, impl=impl, tile=tile,
         epilogue=Q.EpilogueSpec(bn=True), scale=s, shift=t,
-        dataflow=kw["dataflow"])
+        dataflow=dataflow, name=lname + "p")
 
 
 def _basic_serve(p, x, policy, stride, impl, tile, dataflow, lname=""):
     sc = _shortcut(p, x, policy, stride, impl, tile, dataflow, lname)
     s1, t1 = p["bn1"]
-    kw = _layer_kw(policy, lname + "c1", dataflow)
     h = Q.qconv_serve_apply(
-        p["conv1"], x, kw["policy"], k=3, stride=stride, impl=impl,
+        p["conv1"], x, policy, k=3, stride=stride, impl=impl,
         tile=tile, epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1,
-        shift=t1, dataflow=kw["dataflow"])
+        shift=t1, dataflow=dataflow, name=lname + "c1")
     s2, t2 = p["bn2"]
     # conv2 carries BN2 + shortcut add + final ReLU in one kernel epilogue.
-    kw = _layer_kw(policy, lname + "c2", dataflow)
     return Q.qconv_serve_apply(
-        p["conv2"], h, kw["policy"], k=3, impl=impl, tile=tile,
+        p["conv2"], h, policy, k=3, impl=impl, tile=tile,
         epilogue=Q.EpilogueSpec(bn=True, residual=True, relu=True),
-        scale=s2, shift=t2, residual=sc, dataflow=kw["dataflow"])
+        scale=s2, shift=t2, residual=sc, dataflow=dataflow,
+        name=lname + "c2")
 
 
 def _bottleneck_serve(p, x, policy, stride, impl, tile, dataflow, lname=""):
     sc = _shortcut(p, x, policy, stride, impl, tile, dataflow, lname)
     s1, t1 = p["bn1"]
-    kw = _layer_kw(policy, lname + "c1", dataflow)
     h = Q.qconv_serve_apply(
-        p["conv1"], x, kw["policy"], k=1, impl=impl, tile=tile,
+        p["conv1"], x, policy, k=1, impl=impl, tile=tile,
         epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s1, shift=t1,
-        dataflow=kw["dataflow"])
+        dataflow=dataflow, name=lname + "c1")
     s2, t2 = p["bn2"]
-    kw = _layer_kw(policy, lname + "c2", dataflow)
     h = Q.qconv_serve_apply(
-        p["conv2"], h, kw["policy"], k=3, stride=stride, impl=impl,
+        p["conv2"], h, policy, k=3, stride=stride, impl=impl,
         tile=tile, epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s2,
-        shift=t2, dataflow=kw["dataflow"])
+        shift=t2, dataflow=dataflow, name=lname + "c2")
     s3, t3 = p["bn3"]
-    kw = _layer_kw(policy, lname + "c3", dataflow)
     return Q.qconv_serve_apply(
-        p["conv3"], h, kw["policy"], k=1, impl=impl, tile=tile,
+        p["conv3"], h, policy, k=1, impl=impl, tile=tile,
         epilogue=Q.EpilogueSpec(bn=True, residual=True, relu=True),
-        scale=s3, shift=t3, residual=sc, dataflow=kw["dataflow"])
+        scale=s3, shift=t3, residual=sc, dataflow=dataflow,
+        name=lname + "c3")
 
 
 def serve_forward(cfg: ResNetConfig, packed, images, policy, *,
@@ -395,8 +378,9 @@ def serve_forward(cfg: ResNetConfig, packed, images, policy, *,
     use it as the baseline).
 
     ``policy`` may also be a ``PrecisionPlan``: every layer resolves its
-    own (w_bits, k, channel_wise, dataflow) — matching the per-layer
-    formats ``pack_for_serve`` packed — while an explicit non-'auto'
+    own (w_bits, k, channel_wise, dataflow) through the shared funnel
+    inside ``Q.qconv_serve_apply`` — matching the per-layer formats
+    ``pack_for_serve`` packed — while an explicit non-'auto'
     ``dataflow`` argument still pins every conv globally (benchmarks).
     """
     s, t = packed["bn_stem"]
@@ -404,12 +388,11 @@ def serve_forward(cfg: ResNetConfig, packed, images, policy, *,
     # zero; QAT ran it with unquantized activations, so serve uses
     # symmetric signed codes (act_zero=0) — unsigned Eq. 5 codes would
     # clamp every negative input away.
-    kw = _layer_kw(policy, "stem", dataflow)
     x = Q.qconv_serve_apply(
-        packed["stem"], images, kw["policy"], k=7, stride=2,
+        packed["stem"], images, policy, k=7, stride=2,
         layer_class="boundary", impl=impl, tile=tile, act_signed=True,
         epilogue=Q.EpilogueSpec(bn=True, relu=True), scale=s, shift=t,
-        dataflow=kw["dataflow"])
+        dataflow=dataflow, name="stem")
     x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
     fwd = _bottleneck_serve if cfg.block == "bottleneck" else _basic_serve
@@ -418,9 +401,9 @@ def serve_forward(cfg: ResNetConfig, packed, images, policy, *,
         x = fwd(packed[key], x, policy, stride, impl, tile, dataflow,
                 lname=key)
     x = jnp.mean(x, axis=(1, 2))
-    return Q.qlinear_serve_apply(packed["fc"], x,
-                                 plan_lib.resolve_policy(policy, "fc"),
-                                 layer_class="boundary", impl=impl, tile=tile)
+    return Q.qlinear_serve_apply(packed["fc"], x, policy,
+                                 layer_class="boundary", impl=impl,
+                                 tile=tile, name="fc")
 
 
 def gemm_workload(cfg: ResNetConfig, batch: int = 1) -> List[Gemm]:
@@ -477,6 +460,12 @@ def layer_classes(cfg: ResNetConfig) -> Dict[str, str]:
 def inner_layer_names(cfg: ResNetConfig) -> List[str]:
     return [g.name for g in gemm_workload(cfg, batch=1)
             if g.layer_class != "boundary"]
+
+
+def plan_layer_names(cfg: ResNetConfig) -> List[str]:
+    """The plan namespace: resnet layers are all named per-instance, so
+    the workload names ARE the full namespace (no scoped forms)."""
+    return [g.name for g in gemm_workload(cfg, batch=1)]
 
 
 def layer_weights(cfg: ResNetConfig, params) -> Dict[str, jax.Array]:

@@ -8,6 +8,18 @@ Layers are scanned (scan-over-layers with jax.checkpoint remat) so
 lowering a 96-layer model is one rolled HLO loop; heterogeneous prefix
 layers (deepseek's dense-MLP first layer) are unrolled separately.
 
+Layer namespace (DESIGN.md §7): every projection answers to a workload
+layer name — the per-layer gemm names ``q``/``k``/``v``/``o`` (MLA:
+``q``/``dkv``/``uk``/``uv``/``o``), ``mlp``, ``expert``/``shared`` and
+the boundary ``head`` — optionally scoped to one decoder layer as
+``l{i}.name``.  A ``PrecisionPlan`` with depth-scoped entries makes the
+layer stack format-heterogeneous; since per-layer plane counts break a
+homogeneous ``lax.scan``, the stack is partitioned into contiguous
+FORMAT GROUPS (one scan per run of identical per-layer formats,
+order-preserving) at spec, QAT-forward, pack and serve time alike.
+The uniform case is the degenerate single group — byte-identical trees
+and graphs to the pre-plan behavior.
+
 Three entry points per mode:
   forward      — full-sequence teacher-forced logits (train / eval)
   prefill      — full-sequence forward that also returns the KV cache
@@ -17,11 +29,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as plan_lib
 from repro.core.dse import Gemm
 from repro.core.precision import PrecisionPolicy
 from repro.nn import attention as attn
@@ -33,7 +46,8 @@ from repro.nn.param import ParamSpec
 from repro.nn.partitioning import constrain
 
 __all__ = ["MLAConfig", "TransformerConfig", "specs", "forward", "prefill",
-           "decode_step", "cache_specs", "gemm_workload", "model_flops"]
+           "decode_step", "cache_specs", "gemm_workload", "model_flops",
+           "plan_layer_names", "scan_format_groups", "regroup_layers"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,14 +95,125 @@ class TransformerConfig:
 
 
 # --------------------------------------------------------------------------
+# Layer namespace + format groups
+# --------------------------------------------------------------------------
+
+
+def _layer_bases(cfg: TransformerConfig, dense_mlp: bool) -> Tuple[str, ...]:
+    """Base workload layer names of one decoder layer."""
+    a = (("q", "dkv", "uk", "uv", "o") if cfg.mla is not None
+         else ("q", "k", "v", "o"))
+    if cfg.moe is not None and not dense_mlp:
+        m = ("expert",) + (("shared",) if cfg.moe.n_shared else ())
+    else:
+        m = ("mlp",)
+    return a + m
+
+
+def plan_layer_names(cfg: TransformerConfig) -> List[str]:
+    """Every name a PrecisionPlan may bind for this config: the base
+    per-projection names (one entry covers all depths) plus the
+    depth-scoped ``l{i}.name`` forms, and the boundary ``head``."""
+    names = {"head"}
+    for i in range(cfg.n_layers):
+        bases = _layer_bases(cfg, dense_mlp=i < cfg.dense_first_n)
+        names.update(bases)
+        names.update(f"l{i}.{b}" for b in bases)
+    return sorted(names)
+
+
+def _layer_signature(cfg, policy, i: int):
+    """The format tuple that decides scan-group membership of depth i."""
+    return tuple(plan_lib.resolve_policy(policy, f"l{i}.{b}")
+                 for b in _layer_bases(cfg, dense_mlp=False))
+
+
+def scan_format_groups(cfg: TransformerConfig, policy) -> List[Tuple[int, int]]:
+    """Partition the scanned stack into contiguous runs of identical
+    per-layer formats: [(start_depth, length), ...] in depth order.
+
+    A uniform policy (or a plan with no depth-scoped entries) yields one
+    group — the pre-plan homogeneous scan.  Heterogeneous plans get one
+    ``lax.scan`` per run; order is preserved so the residual-stream
+    carry threads the layers exactly as before.
+    """
+    groups: List[List[int]] = []
+    prev_sig = None
+    for i in range(cfg.dense_first_n, cfg.n_layers):
+        sig = _layer_signature(cfg, policy, i)
+        if groups and sig == prev_sig:
+            groups[-1][1] += 1
+        else:
+            groups.append([i, 1])
+            prev_sig = sig
+    return [tuple(g) for g in groups]
+
+
+def _layer_groups(cfg, params_layers, policy):
+    """[(lname_prefix, group_param_subtree, start, length)] for iterating
+    the (possibly grouped) 'layers' entry of a param/spec tree."""
+    groups = scan_format_groups(cfg, policy)
+    if len(groups) == 1:
+        s, n = groups[0]
+        return [(f"l{s}.", params_layers, s, n)]
+    return [(f"l{s}.", params_layers[f"g{j}"], s, n)
+            for j, (s, n) in enumerate(groups)]
+
+
+def regroup_layers(cfg, params, policy):
+    """Re-layout a param tree's 'layers' stack to ``policy``'s format
+    groups.
+
+    The deployment flow is train ONCE (uniform QAT, one homogeneous
+    stack), then re-pack per plan point: a depth-heterogeneous plan
+    needs the stack split into its format groups before the per-group
+    formats can differ.  Slicing the lead axis per group is exactly the
+    paper's re-pack — no parameter changes, just layout.  Identity when
+    the plan is uniform or the tree is already grouped.
+    """
+    if "layers" not in params:
+        return params
+    groups = scan_format_groups(cfg, policy)
+    lp = params["layers"]
+
+    def lead_len(tree):
+        # first leaf with a real lead extent (robust to zero-size leaves)
+        for leaf in jax.tree.leaves(tree):
+            if getattr(leaf, "ndim", 0) and leaf.shape[0]:
+                return leaf.shape[0]
+        return None
+
+    if isinstance(lp, dict) and "g0" in lp:
+        if len(lp) == len(groups) and all(
+                lead_len(lp[f"g{j}"]) == n
+                for j, (_s, n) in enumerate(groups)):
+            return params  # already in this plan's group layout
+        # flatten a foreign group layout back to one stack (depth order)
+        parts = [lp[f"g{j}"] for j in range(len(lp))]
+        lp = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+    if len(groups) == 1:
+        out = dict(params)
+        out["layers"] = lp
+        return out
+    nd = cfg.dense_first_n
+    out = dict(params)
+    out["layers"] = {
+        f"g{j}": jax.tree.map(lambda a, _s=s, _n=n: a[_s - nd:_s - nd + _n],
+                              lp)
+        for j, (s, n) in enumerate(groups)
+    }
+    return out
+
+
+# --------------------------------------------------------------------------
 # Specs
 # --------------------------------------------------------------------------
 
 
-def _mlp_spec(cfg, d_ff, *, lead, lead_axes, serve, policy):
+def _mlp_spec(cfg, d_ff, *, lead, lead_axes, serve, policy, lname=""):
     mk = functools.partial(
         Q.qlinear_serve_spec if serve else Q.qlinear_spec,
-        lead=lead, lead_axes=lead_axes,
+        lead=lead, lead_axes=lead_axes, name=lname + "mlp",
     )
     kw = {"policy": policy} if serve else {}
     if cfg.act == "swiglu":
@@ -103,19 +228,21 @@ def _mlp_spec(cfg, d_ff, *, lead, lead_axes, serve, policy):
     }
 
 
-def _attn_spec(cfg, *, lead, lead_axes, serve, policy):
+def _attn_spec(cfg, *, lead, lead_axes, serve, policy, lname=""):
     if cfg.mla is not None:
         return attn.mla_spec(
             cfg.d_model, cfg.n_heads,
             kv_lora=cfg.mla.kv_lora, qk_nope=cfg.mla.qk_nope,
             qk_rope=cfg.mla.qk_rope, v_head=cfg.mla.v_head,
-            lead=lead, lead_axes=lead_axes, serve=serve, policy=policy)
+            lead=lead, lead_axes=lead_axes, serve=serve, policy=policy,
+            lname=lname)
     return attn.gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
                          lead=lead, lead_axes=lead_axes, serve=serve,
-                         policy=policy)
+                         policy=policy, lname=lname)
 
 
-def _layer_spec(cfg, *, lead, lead_axes, serve, policy, dense_mlp=False):
+def _layer_spec(cfg, *, lead, lead_axes, serve, policy, dense_mlp=False,
+                lname=""):
     nspec, _ = cfg.norm_fns
     stack = lambda s: {k: ParamSpec(shape=lead + v.shape, dtype=v.dtype,
                                     axes=lead_axes + v.axes, init=v.init,
@@ -125,38 +252,57 @@ def _layer_spec(cfg, *, lead, lead_axes, serve, policy, dense_mlp=False):
         "ln1": stack(nspec(cfg.d_model)),
         "ln2": stack(nspec(cfg.d_model)),
         "attn": _attn_spec(cfg, lead=lead, lead_axes=lead_axes, serve=serve,
-                           policy=policy),
+                           policy=policy, lname=lname),
     }
     if cfg.moe is not None and not dense_mlp:
         spec["moe"] = nnmoe.moe_spec(cfg.moe, lead=lead, lead_axes=lead_axes,
-                                     serve=serve, policy=policy)
+                                     serve=serve, policy=policy, lname=lname)
     else:
         ff = cfg.dense_ff if dense_mlp and cfg.dense_ff else cfg.d_ff
         spec["mlp"] = _mlp_spec(cfg, ff, lead=lead, lead_axes=lead_axes,
-                                serve=serve, policy=policy)
+                                serve=serve, policy=policy, lname=lname)
     return spec
 
 
 def specs(cfg: TransformerConfig, mode: str = "train",
           policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
-    """Full parameter-spec tree for one mode ('train' | 'serve')."""
+    """Full parameter-spec tree for one mode ('train' | 'serve').
+
+    ``policy`` may be a ``PrecisionPlan``; with depth-scoped entries the
+    'layers' stack splits into format groups ``{'g0': ..., 'g1': ...}``
+    (one stacked subtree per contiguous run of identical formats), each
+    layer at its own (w_bits, k) spec shapes.  The uniform case keeps
+    the single stacked subtree — byte-identical to the pre-plan tree.
+    """
     serve = mode == "serve"
     nspec, _ = cfg.norm_fns
     n_scan = cfg.n_layers - cfg.dense_first_n
     vp = nnl.pad_vocab(cfg.vocab)
+    groups = scan_format_groups(cfg, policy)
+    if len(groups) == 1:
+        s0 = groups[0][0]
+        layers_spec = _layer_spec(
+            cfg, lead=(n_scan,) if cfg.scan_layers else (),
+            lead_axes=("layers",) if cfg.scan_layers else (),
+            serve=serve, policy=policy, lname=f"l{s0}.")
+    else:
+        layers_spec = {
+            f"g{j}": _layer_spec(cfg, lead=(n,), lead_axes=("layers",),
+                                 serve=serve, policy=policy, lname=f"l{s}.")
+            for j, (s, n) in enumerate(groups)
+        }
     tree: Dict[str, Any] = {
         "embed": (nnl.embed_serve_spec(vp, cfg.d_model, policy)
                   if serve else nnl.embed_spec(vp, cfg.d_model)),
         "final_norm": nspec(cfg.d_model),
         "head": (Q.qlinear_serve_spec(cfg.d_model, vp,
                                       axes=("embed", "vocab"),
-                                      layer_class="boundary", policy=policy)
+                                      layer_class="boundary", policy=policy,
+                                      name="head")
                  if serve else
                  Q.qlinear_spec(cfg.d_model, vp, axes=("embed", "vocab"),
-                                layer_class="boundary")),
-        "layers": _layer_spec(cfg, lead=(n_scan,) if cfg.scan_layers else (),
-                              lead_axes=("layers",) if cfg.scan_layers else (),
-                              serve=serve, policy=policy),
+                                layer_class="boundary", name="head")),
+        "layers": layers_spec,
     }
     if not cfg.scan_layers and n_scan > 1:
         raise ValueError("unscanned multi-layer stacks not supported; "
@@ -164,7 +310,7 @@ def specs(cfg: TransformerConfig, mode: str = "train",
     for i in range(cfg.dense_first_n):
         tree[f"dense_layer_{i}"] = _layer_spec(
             cfg, lead=(), lead_axes=(), serve=serve, policy=policy,
-            dense_mlp=True)
+            dense_mlp=True, lname=f"l{i}.")
     return tree
 
 
@@ -173,22 +319,26 @@ def specs(cfg: TransformerConfig, mode: str = "train",
 # --------------------------------------------------------------------------
 
 
-def _apply_mlp(cfg, p, x, policy, serve, impl, dense_mlp=False):
+def _apply_mlp(cfg, p, x, policy, serve, impl, dense_mlp=False, lname=""):
     fn = (functools.partial(Q.qlinear_serve_apply, impl=impl)
           if serve else Q.qlinear_apply)
     if cfg.moe is not None and not dense_mlp:
-        return nnmoe.moe_apply(p["moe"], x, policy, cfg.moe, serve=serve, impl=impl)
+        return nnmoe.moe_apply(p["moe"], x, policy, cfg.moe, serve=serve,
+                               impl=impl, lname=lname)
     mp = p["mlp"]
+    nm = lname + "mlp"
     if cfg.act == "swiglu":
-        g, u = fn(mp["gate"], x, policy), fn(mp["up"], x, policy)
+        g = fn(mp["gate"], x, policy, name=nm)
+        u = fn(mp["up"], x, policy, name=nm)
         h = nnl.swiglu_combine(g, u)
     else:
-        h = fn(mp["up"], x, policy)
+        h = fn(mp["up"], x, policy, name=nm)
         h = nnl.squared_relu(h) if cfg.act == "sq_relu" else nnl.gelu(h)
-    return fn(mp["down"], h, policy)
+    return fn(mp["down"], h, policy, name=nm)
 
 
-def _layer_fwd(cfg, p, x, policy, sin, cos, *, serve, impl, dense_mlp=False):
+def _layer_fwd(cfg, p, x, policy, sin, cos, *, serve, impl, dense_mlp=False,
+               lname=""):
     """Pre-norm block; returns (x, kv_cache_of_layer)."""
     _, napply = cfg.norm_fns
     h = napply(p["ln1"], x)
@@ -197,16 +347,17 @@ def _layer_fwd(cfg, p, x, policy, sin, cos, *, serve, impl, dense_mlp=False):
             p["attn"], h, policy, n_heads=cfg.n_heads,
             kv_lora=cfg.mla.kv_lora, qk_nope=cfg.mla.qk_nope,
             qk_rope=cfg.mla.qk_rope, v_head=cfg.mla.v_head,
-            sin=sin, cos=cos, serve=serve, impl=impl, chunk=cfg.attn_chunk)
+            sin=sin, cos=cos, serve=serve, impl=impl, chunk=cfg.attn_chunk,
+            lname=lname)
     else:
         o, cache = attn.gqa_prefill(
             p["attn"], h, policy, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
             head_dim=cfg.hd, sin=sin, cos=cos, serve=serve, impl=impl,
-            chunk=cfg.attn_chunk, attn_impl=cfg.attn_impl)
+            chunk=cfg.attn_chunk, attn_impl=cfg.attn_impl, lname=lname)
     x = x + o
     x = constrain(x, ("batch", "seq", "act_embed"))
     h = napply(p["ln2"], x)
-    x = x + _apply_mlp(cfg, p, h, policy, serve, impl, dense_mlp)
+    x = x + _apply_mlp(cfg, p, h, policy, serve, impl, dense_mlp, lname)
     return constrain(x, ("batch", "seq", "act_embed")), cache
 
 
@@ -221,21 +372,23 @@ def _head(cfg, params, x, policy, serve, impl):
     x = napply(params["final_norm"], x)
     if serve:
         logits = Q.qlinear_serve_apply(params["head"], x, policy,
-                                       layer_class="boundary", impl=impl)
+                                       layer_class="boundary", impl=impl,
+                                       name="head")
     else:
         logits = Q.qlinear_apply(params["head"], x, policy,
-                                 layer_class="boundary")
+                                 layer_class="boundary", name="head")
     return logits[..., :cfg.vocab]  # drop TP vocab padding
 
 
-def _body_constrain(cfg, lp, serve, policy):
+def _body_constrain(cfg, lp, serve, policy, lname=""):
     """Re-pin the per-layer param slice to its FSDP sharding inside the
     scan body.  Without this, GSPMD hoists the weight all-gather out of
     the layer loop and materializes EVERY layer's gathered f32 weights at
     once (+8.5 GiB/device for granite-34b — §Perf, FSDP-scan fix); the
     constraint keeps the stacked master sharded so each iteration gathers
     only its own slice, which remat then frees."""
-    spec = _layer_spec(cfg, lead=(), lead_axes=(), serve=serve, policy=policy)
+    spec = _layer_spec(cfg, lead=(), lead_axes=(), serve=serve, policy=policy,
+                       lname=lname)
 
     def rec(sp, leaf):
         if isinstance(sp, ParamSpec):
@@ -252,30 +405,37 @@ def _body_constrain(cfg, lp, serve, policy):
 
 def _run_layers(cfg, params, x, policy, sin, cos, *, serve, impl,
                 collect_cache: bool):
-    """Dense-prefix layers unrolled, the remainder scanned."""
-    prefix_caches = []
+    """Dense-prefix layers unrolled, the remainder scanned — one scan per
+    format group (heterogeneous plans), order-preserving."""
+    params = regroup_layers(cfg, params, policy)
+    cache_parts = []
     for i in range(cfg.dense_first_n):
         x, cache_i = _layer_fwd(cfg, params[f"dense_layer_{i}"], x, policy,
-                                sin, cos, serve=serve, impl=impl, dense_mlp=True)
+                                sin, cos, serve=serve, impl=impl,
+                                dense_mlp=True, lname=f"l{i}.")
         if collect_cache:
-            prefix_caches.append(cache_i)
-
-    def body(carry, lp):
-        lp = _body_constrain(cfg, lp, serve, policy)
-        y, cache = _layer_fwd(cfg, lp, carry, policy, sin, cos,
-                              serve=serve, impl=impl)
-        return y, cache if collect_cache else None
+            cache_parts.append(jax.tree.map(lambda v: v[None], cache_i))
 
     pol = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
            if cfg.remat_policy == "dots" else None)
-    fn = jax.checkpoint(body, policy=pol) if cfg.remat else body
-    x, caches = jax.lax.scan(fn, x, params["layers"],
-                             unroll=True if cfg.scan_unroll else 1)
-    if collect_cache and cfg.dense_first_n:
-        pc = jax.tree.map(lambda *xs: jnp.stack(xs), *prefix_caches) \
-            if cfg.dense_first_n > 1 else jax.tree.map(lambda v: v[None], prefix_caches[0])
-        caches = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
-                              pc, caches)
+    for lname, lp_group, _s, _n in _layer_groups(cfg, params["layers"],
+                                                 policy):
+        def body(carry, lp, _lname=lname):
+            lp = _body_constrain(cfg, lp, serve, policy, _lname)
+            y, cache = _layer_fwd(cfg, lp, carry, policy, sin, cos,
+                                  serve=serve, impl=impl, lname=_lname)
+            return y, cache if collect_cache else None
+
+        fn = jax.checkpoint(body, policy=pol) if cfg.remat else body
+        x, caches = jax.lax.scan(fn, x, lp_group,
+                                 unroll=True if cfg.scan_unroll else 1)
+        if collect_cache:
+            cache_parts.append(caches)
+    if not collect_cache:
+        return x, None
+    caches = (cache_parts[0] if len(cache_parts) == 1 else
+              jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                           *cache_parts))
     return x, caches
 
 
@@ -342,6 +502,7 @@ def decode_step(cfg: TransformerConfig, params, cache, tokens: jax.Array,
     Returns (logits (B, V), new cache).
     """
     serve = mode == "serve"
+    params = regroup_layers(cfg, params, policy)
     b = tokens.shape[0]
     x = _embed(cfg, params, tokens, serve)
     pos = jnp.broadcast_to(length[None, None] if length.ndim == 0 else length,
@@ -349,7 +510,7 @@ def decode_step(cfg: TransformerConfig, params, cache, tokens: jax.Array,
     rope_dim = cfg.mla.qk_rope if cfg.mla is not None else cfg.hd
     sin, cos = nnl.rotary_cache(pos, rope_dim, cfg.rope_base)
 
-    def one_layer(x, lp, c1, c2, dense_mlp=False):
+    def one_layer(x, lp, c1, c2, dense_mlp=False, lname=""):
         _, napply = cfg.norm_fns
         h = napply(lp["ln1"], x)
         if cfg.mla is not None:
@@ -357,38 +518,47 @@ def decode_step(cfg: TransformerConfig, params, cache, tokens: jax.Array,
                 lp["attn"], h, (c1, c2), length, policy,
                 n_heads=cfg.n_heads, kv_lora=cfg.mla.kv_lora,
                 qk_nope=cfg.mla.qk_nope, qk_rope=cfg.mla.qk_rope,
-                v_head=cfg.mla.v_head, sin=sin, cos=cos, serve=serve, impl=impl)
+                v_head=cfg.mla.v_head, sin=sin, cos=cos, serve=serve,
+                impl=impl, lname=lname)
         else:
             o, (c1, c2) = attn.gqa_decode(
                 lp["attn"], h, (c1, c2), length, policy,
                 n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
-                sin=sin, cos=cos, serve=serve, impl=impl)
+                sin=sin, cos=cos, serve=serve, impl=impl, lname=lname)
         x = x + o
         h = napply(lp["ln2"], x)
-        x = x + _apply_mlp(cfg, lp, h, policy, serve, impl, dense_mlp)
+        x = x + _apply_mlp(cfg, lp, h, policy, serve, impl, dense_mlp, lname)
         return x, c1, c2
 
     c1_all, c2_all = cache
     nd = cfg.dense_first_n
-    x_new_caches = []
+    c1_parts, c2_parts = [], []
     for i in range(nd):
         x, c1_i, c2_i = one_layer(x, params[f"dense_layer_{i}"],
-                                  c1_all[i], c2_all[i], dense_mlp=True)
-        x_new_caches.append((c1_i, c2_i))
+                                  c1_all[i], c2_all[i], dense_mlp=True,
+                                  lname=f"l{i}.")
+        c1_parts.append(c1_i[None])
+        c2_parts.append(c2_i[None])
 
-    def body(carry, xs):
-        lp, c1, c2 = xs
-        y, c1, c2 = one_layer(carry, lp, c1, c2)
-        return y, (c1, c2)
+    # One scan per format group (uniform plans: exactly one), the cache
+    # stack sliced to the group's depth range.
+    for lname, lp_group, start, n in _layer_groups(cfg, params["layers"],
+                                                   policy):
+        def body(carry, xs, _lname=lname):
+            lp, c1, c2 = xs
+            y, c1, c2 = one_layer(carry, lp, c1, c2, lname=_lname)
+            return y, (c1, c2)
 
-    x, (c1_s, c2_s) = jax.lax.scan(body, x, (params["layers"],
-                                             c1_all[nd:], c2_all[nd:]),
-                                   unroll=True if cfg.scan_unroll else 1)
-    if nd:
-        c1_pre = jnp.stack([c[0] for c in x_new_caches])
-        c2_pre = jnp.stack([c[1] for c in x_new_caches])
-        c1_s = jnp.concatenate([c1_pre, c1_s], axis=0)
-        c2_s = jnp.concatenate([c2_pre, c2_s], axis=0)
+        x, (c1_g, c2_g) = jax.lax.scan(
+            body, x, (lp_group, c1_all[start:start + n],
+                      c2_all[start:start + n]),
+            unroll=True if cfg.scan_unroll else 1)
+        c1_parts.append(c1_g)
+        c2_parts.append(c2_g)
+    c1_s = (c1_parts[0] if len(c1_parts) == 1
+            else jnp.concatenate(c1_parts, axis=0))
+    c2_s = (c2_parts[0] if len(c2_parts) == 1
+            else jnp.concatenate(c2_parts, axis=0))
     logits = _head(cfg, params, x, policy, serve, impl)
     return logits[:, 0, :], (c1_s, c2_s)
 

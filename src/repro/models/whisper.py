@@ -56,9 +56,18 @@ def _stack(spec, lead, lead_axes):
             for k, v in spec.items()}
 
 
-def _mlp_spec(cfg, *, lead, lead_axes, serve, policy):
+# gemm_workload name maps: whisper's workload aggregates q/k/v/o into one
+# entry per attention kind, and cross-attention splits by operand rows
+# (q/o run over tokens -> dec_cross_q; k/v over frames -> dec_cross_kv).
+_ENC_ATTN = {k: "enc_qkvo" for k in ("q", "k", "v", "o")}
+_DEC_ATTN = {k: "dec_self_qkvo" for k in ("q", "k", "v", "o")}
+_X_ATTN = {"q": "dec_cross_q", "o": "dec_cross_q",
+           "k": "dec_cross_kv", "v": "dec_cross_kv"}
+
+
+def _mlp_spec(cfg, *, lead, lead_axes, serve, policy, name):
     mk = functools.partial(Q.qlinear_serve_spec if serve else Q.qlinear_spec,
-                           lead=lead, lead_axes=lead_axes)
+                           lead=lead, lead_axes=lead_axes, name=name)
     kw = {"policy": policy} if serve else {}
     return {
         "up": mk(cfg.d_model, cfg.d_ff, axes=("embed", "mlp"), **kw),
@@ -66,25 +75,27 @@ def _mlp_spec(cfg, *, lead, lead_axes, serve, policy):
     }
 
 
-def _enc_layer(cfg, lead, lead_axes, serve, policy):
+def _enc_layer(cfg, lead, lead_axes, serve, policy, *, attn_names=_ENC_ATTN,
+               mlp_name="enc_mlp"):
     return {
         "ln1": _stack(nnl.layernorm_spec(cfg.d_model), lead, lead_axes),
         "attn": attn.gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.hd,
                               lead=lead, lead_axes=lead_axes, serve=serve,
-                              policy=policy),
+                              policy=policy, names=attn_names),
         "ln2": _stack(nnl.layernorm_spec(cfg.d_model), lead, lead_axes),
         "mlp": _mlp_spec(cfg, lead=lead, lead_axes=lead_axes, serve=serve,
-                         policy=policy),
+                         policy=policy, name=mlp_name),
     }
 
 
 def _dec_layer(cfg, lead, lead_axes, serve, policy):
     return {
-        **_enc_layer(cfg, lead, lead_axes, serve, policy),
+        **_enc_layer(cfg, lead, lead_axes, serve, policy,
+                     attn_names=_DEC_ATTN, mlp_name="dec_mlp"),
         "ln_x": _stack(nnl.layernorm_spec(cfg.d_model), lead, lead_axes),
         "xattn": attn.gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.hd,
                                lead=lead, lead_axes=lead_axes, serve=serve,
-                               policy=policy),
+                               policy=policy, names=_X_ATTN),
     }
 
 
@@ -101,10 +112,11 @@ def specs(cfg: WhisperConfig, mode: str = "train",
         "dec_norm": nnl.layernorm_spec(cfg.d_model),
         "head": (Q.qlinear_serve_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab),
                                       axes=("embed", "vocab"),
-                                      layer_class="boundary", policy=policy)
+                                      layer_class="boundary", policy=policy,
+                                      name="head")
                  if serve else
                  Q.qlinear_spec(cfg.d_model, nnl.pad_vocab(cfg.vocab), axes=("embed", "vocab"),
-                                layer_class="boundary")),
+                                layer_class="boundary", name="head")),
     }
 
 
@@ -130,12 +142,14 @@ def encode(cfg, params, frames, policy, *, serve, impl):
         o, _ = attn.gqa_prefill(lp["attn"], h, policy, n_heads=cfg.n_heads,
                                 n_kv=cfg.n_heads, head_dim=cfg.hd,
                                 sin=sin, cos=cos, causal=False, rope=False,
-                                serve=serve, impl=impl, chunk=cfg.attn_chunk)
+                                serve=serve, impl=impl, chunk=cfg.attn_chunk,
+                                names=_ENC_ATTN)
         y = carry + o
         h = nnl.layernorm_apply(lp["ln2"], y)
         fn = _qapply(serve, impl)
-        y = y + fn(lp["mlp"]["down"], nnl.gelu(fn(lp["mlp"]["up"], h, policy)),
-                   policy)
+        y = y + fn(lp["mlp"]["down"],
+                   nnl.gelu(fn(lp["mlp"]["up"], h, policy, name="enc_mlp")),
+                   policy, name="enc_mlp")
         return constrain(y, ("batch", "frames", "act_embed")), None
 
     fn_ = jax.checkpoint(body) if cfg.remat else body
@@ -150,19 +164,25 @@ def _dec_layer_fwd(cfg, lp, x, enc_out, policy, sin, cos, serve, impl):
     o, kv = attn.gqa_prefill(lp["attn"], h, policy, n_heads=cfg.n_heads,
                              n_kv=cfg.n_heads, head_dim=cfg.hd,
                              sin=sin, cos=cos, causal=True, rope=False,
-                             serve=serve, impl=impl, chunk=cfg.attn_chunk)
+                             serve=serve, impl=impl, chunk=cfg.attn_chunk,
+                             names=_DEC_ATTN)
     x = x + o
     # cross attention: KV from encoder output
     b, t, _ = enc_out.shape
     h = nnl.layernorm_apply(lp["ln_x"], x)
-    q = fn(lp["xattn"]["q"], h, policy).reshape(*h.shape[:2], cfg.n_heads, cfg.hd)
-    k = fn(lp["xattn"]["k"], enc_out, policy).reshape(b, t, cfg.n_heads, cfg.hd)
-    v = fn(lp["xattn"]["v"], enc_out, policy).reshape(b, t, cfg.n_heads, cfg.hd)
+    q = fn(lp["xattn"]["q"], h, policy,
+           name=_X_ATTN["q"]).reshape(*h.shape[:2], cfg.n_heads, cfg.hd)
+    k = fn(lp["xattn"]["k"], enc_out, policy,
+           name=_X_ATTN["k"]).reshape(b, t, cfg.n_heads, cfg.hd)
+    v = fn(lp["xattn"]["v"], enc_out, policy,
+           name=_X_ATTN["v"]).reshape(b, t, cfg.n_heads, cfg.hd)
     o = attn.chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
-    x = x + fn(lp["xattn"]["o"], o.reshape(*h.shape[:2], -1), policy)
+    x = x + fn(lp["xattn"]["o"], o.reshape(*h.shape[:2], -1), policy,
+               name=_X_ATTN["o"])
     h = nnl.layernorm_apply(lp["ln2"], x)
-    x = x + fn(lp["mlp"]["down"], nnl.gelu(fn(lp["mlp"]["up"], h, policy)),
-               policy)
+    x = x + fn(lp["mlp"]["down"],
+               nnl.gelu(fn(lp["mlp"]["up"], h, policy, name="dec_mlp")),
+               policy, name="dec_mlp")
     return constrain(x, ("batch", "seq", "act_embed")), (kv, (k, v))
 
 
@@ -190,7 +210,8 @@ def forward(cfg, params, tokens, policy, *, frames=None, mode="train",
                         unroll=True if cfg.scan_unroll else 1)
     x = nnl.layernorm_apply(params["dec_norm"], x)
     fn = _qapply(serve, impl)
-    logits = fn(params["head"], x, policy, layer_class="boundary")
+    logits = fn(params["head"], x, policy, layer_class="boundary",
+                name="head")
     return logits[..., :cfg.vocab]  # drop TP vocab padding
 
 
@@ -216,7 +237,8 @@ def prefill(cfg, params, tokens, policy, *, frames=None, impl="xla",
                                           unroll=True if cfg.scan_unroll else 1)
     x = nnl.layernorm_apply(params["dec_norm"], x)
     fn = _qapply(serve, impl)
-    logits = fn(params["head"], x[:, -1:, :], policy, layer_class="boundary")
+    logits = fn(params["head"], x[:, -1:, :], policy, layer_class="boundary",
+                name="head")
     return logits[:, 0, :cfg.vocab], {"self": self_kv, "cross": cross_kv}
 
 
@@ -249,15 +271,19 @@ def decode_step(cfg, params, cache, tokens, length, policy, *,
         o, (sk, sv) = attn.gqa_decode(lp["attn"], h, (sk, sv), length, policy,
                                       n_heads=cfg.n_heads, n_kv=cfg.n_heads,
                                       head_dim=cfg.hd, sin=sin, cos=cos,
-                                      rope=False, serve=serve, impl=impl)
+                                      rope=False, serve=serve, impl=impl,
+                                      names=_DEC_ATTN)
         y = carry + o
         h = nnl.layernorm_apply(lp["ln_x"], y)
-        q = fn(lp["xattn"]["q"], h, policy).reshape(b, 1, cfg.n_heads, cfg.hd)
+        q = fn(lp["xattn"]["q"], h, policy,
+               name=_X_ATTN["q"]).reshape(b, 1, cfg.n_heads, cfg.hd)
         o = attn.decode_attention(q, ck, cv, jnp.asarray(cfg.n_audio))
-        y = y + fn(lp["xattn"]["o"], o.reshape(b, 1, -1), policy)
+        y = y + fn(lp["xattn"]["o"], o.reshape(b, 1, -1), policy,
+                   name=_X_ATTN["o"])
         h = nnl.layernorm_apply(lp["ln2"], y)
-        y = y + fn(lp["mlp"]["down"], nnl.gelu(fn(lp["mlp"]["up"], h, policy)),
-                   policy)
+        y = y + fn(lp["mlp"]["down"],
+                   nnl.gelu(fn(lp["mlp"]["up"], h, policy, name="dec_mlp")),
+                   policy, name="dec_mlp")
         return y, (sk, sv)
 
     sk, sv = cache["self"]
@@ -265,7 +291,8 @@ def decode_step(cfg, params, cache, tokens, length, policy, *,
     x, (sk, sv) = jax.lax.scan(body, x, (params["dec_layers"], sk, sv, ck, cv),
                                unroll=True if cfg.scan_unroll else 1)
     x = nnl.layernorm_apply(params["dec_norm"], x)
-    logits = fn(params["head"], x, policy, layer_class="boundary")
+    logits = fn(params["head"], x, policy, layer_class="boundary",
+                name="head")
     return logits[:, 0, :cfg.vocab], {"self": (sk, sv), "cross": (ck, cv)}
 
 

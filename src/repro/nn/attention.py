@@ -140,30 +140,47 @@ def decode_attention(
 # ---------------------------------------------------------------------------
 
 
+GQA_NAMES = {"q": "q", "k": "k", "v": "v", "o": "o"}
+
+
+def _gqa_names(lname: str, names: Optional[Dict[str, str]]) -> Dict[str, str]:
+    """Full workload layer names of the four projections: scope prefix +
+    the family's base names (whisper maps q/k/v/o onto its own workload
+    vocabulary, e.g. all four -> 'enc_qkvo')."""
+    base = names or GQA_NAMES
+    return {k: lname + base[k] for k in ("q", "k", "v", "o")}
+
+
 def gqa_spec(
     d_model: int, n_heads: int, n_kv: int, head_dim: int,
     *, lead=(), lead_axes=(), serve: bool = False,
     policy: PrecisionPolicy = PrecisionPolicy(),
+    lname: str = "", names: Optional[Dict[str, str]] = None,
 ) -> Dict:
     mk = functools.partial(
         quantized.qlinear_serve_spec if serve else quantized.qlinear_spec,
         lead=lead, lead_axes=lead_axes,
     )
     kw = {"policy": policy} if serve else {}
+    nm = _gqa_names(lname, names)
     return {
-        "q": mk(d_model, n_heads * head_dim, axes=("embed", "heads"), **kw),
-        "k": mk(d_model, n_kv * head_dim, axes=("embed", "kv_heads"), **kw),
-        "v": mk(d_model, n_kv * head_dim, axes=("embed", "kv_heads"), **kw),
-        "o": mk(n_heads * head_dim, d_model, axes=("heads", "act_embed"), **kw),
+        "q": mk(d_model, n_heads * head_dim, axes=("embed", "heads"),
+                name=nm["q"], **kw),
+        "k": mk(d_model, n_kv * head_dim, axes=("embed", "kv_heads"),
+                name=nm["k"], **kw),
+        "v": mk(d_model, n_kv * head_dim, axes=("embed", "kv_heads"),
+                name=nm["v"], **kw),
+        "o": mk(n_heads * head_dim, d_model, axes=("heads", "act_embed"),
+                name=nm["o"], **kw),
     }
 
 
 gqa_serve_spec = functools.partial(gqa_spec, serve=True)
 
 
-def _proj(p, x, policy, serve, **kw):
+def _proj(p, x, policy, serve, name="", **kw):
     fn = quantized.qlinear_serve_apply if serve else quantized.qlinear_apply
-    return fn(p, x, policy, **kw)
+    return fn(p, x, policy, name=name, **kw)
 
 
 def _flash_ok(mesh, rules, b: int, s: int, n_heads: int) -> bool:
@@ -225,13 +242,15 @@ def gqa_prefill(
     causal: bool = True, window: Optional[int] = None,
     serve: bool = False, rope: bool = True, chunk: int = 1024,
     impl: str = "xla", attn_impl: str = "xla",
+    lname: str = "", names: Optional[Dict[str, str]] = None,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Returns (out (B,S,D), (k_cache, v_cache) at (B,S,KVH,Dh))."""
     b, s, _ = x.shape
     kw = {"impl": impl} if serve else {}
-    q = _proj(p["q"], x, policy, serve, **kw).reshape(b, s, n_heads, head_dim)
-    k = _proj(p["k"], x, policy, serve, **kw).reshape(b, s, n_kv, head_dim)
-    v = _proj(p["v"], x, policy, serve, **kw).reshape(b, s, n_kv, head_dim)
+    nm = _gqa_names(lname, names)
+    q = _proj(p["q"], x, policy, serve, nm["q"], **kw).reshape(b, s, n_heads, head_dim)
+    k = _proj(p["k"], x, policy, serve, nm["k"], **kw).reshape(b, s, n_kv, head_dim)
+    v = _proj(p["v"], x, policy, serve, nm["v"], **kw).reshape(b, s, n_kv, head_dim)
     if rope:
         q = layers.apply_rotary(q, sin, cos)
         k = layers.apply_rotary(k, sin, cos)
@@ -248,7 +267,7 @@ def gqa_prefill(
         o = chunked_attention(q, kx, vx, causal=causal, window=window,
                               chunk=chunk)
     o = o.reshape(b, s, n_heads * head_dim)
-    return _proj(p["o"], o, policy, serve, **kw), (k, v)
+    return _proj(p["o"], o, policy, serve, nm["o"], **kw), (k, v)
 
 
 def gqa_decode(
@@ -257,14 +276,16 @@ def gqa_decode(
     *, n_heads: int, n_kv: int, head_dim: int,
     sin: jax.Array, cos: jax.Array, window: Optional[int] = None,
     serve: bool = True, rope: bool = True, impl: str = "xla",
+    lname: str = "", names: Optional[Dict[str, str]] = None,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """One-token step. x: (B, 1, D); cache (B,Smax,KVH,Dh); length = tokens
     already in cache (the new token is written at index `length`)."""
     b = x.shape[0]
     kw = {"impl": impl} if serve else {}
-    q = _proj(p["q"], x, policy, serve, **kw).reshape(b, 1, n_heads, head_dim)
-    k = _proj(p["k"], x, policy, serve, **kw).reshape(b, 1, n_kv, head_dim)
-    v = _proj(p["v"], x, policy, serve, **kw).reshape(b, 1, n_kv, head_dim)
+    nm = _gqa_names(lname, names)
+    q = _proj(p["q"], x, policy, serve, nm["q"], **kw).reshape(b, 1, n_heads, head_dim)
+    k = _proj(p["k"], x, policy, serve, nm["k"], **kw).reshape(b, 1, n_kv, head_dim)
+    v = _proj(p["v"], x, policy, serve, nm["v"], **kw).reshape(b, 1, n_kv, head_dim)
     if rope:
         q = layers.apply_rotary(q, sin, cos)
         k = layers.apply_rotary(k, sin, cos)
@@ -275,7 +296,7 @@ def gqa_decode(
                                            (0, length, 0, 0))
     o = decode_attention(q, k_cache, v_cache, length + 1, window=window)
     o = o.reshape(b, 1, n_heads * head_dim)
-    return _proj(p["o"], o, policy, serve, **kw), (k_cache, v_cache)
+    return _proj(p["o"], o, policy, serve, nm["o"], **kw), (k_cache, v_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -287,7 +308,7 @@ def gqa_decode(
 def mla_spec(
     d_model: int, n_heads: int, *, kv_lora: int, qk_nope: int, qk_rope: int,
     v_head: int, lead=(), lead_axes=(), serve: bool = False,
-    policy: PrecisionPolicy = PrecisionPolicy(),
+    policy: PrecisionPolicy = PrecisionPolicy(), lname: str = "",
 ) -> Dict:
     mk = functools.partial(
         quantized.qlinear_serve_spec if serve else quantized.qlinear_spec,
@@ -295,11 +316,16 @@ def mla_spec(
     )
     kw = {"policy": policy} if serve else {}
     return {
-        "q": mk(d_model, n_heads * (qk_nope + qk_rope), axes=("embed", "heads"), **kw),
-        "dkv": mk(d_model, kv_lora + qk_rope, axes=("embed", "qk_dim"), **kw),
-        "uk": mk(kv_lora, n_heads * qk_nope, axes=("qk_dim", "heads"), **kw),
-        "uv": mk(kv_lora, n_heads * v_head, axes=("qk_dim", "heads"), **kw),
-        "o": mk(n_heads * v_head, d_model, axes=("heads", "act_embed"), **kw),
+        "q": mk(d_model, n_heads * (qk_nope + qk_rope), axes=("embed", "heads"),
+                name=lname + "q", **kw),
+        "dkv": mk(d_model, kv_lora + qk_rope, axes=("embed", "qk_dim"),
+                  name=lname + "dkv", **kw),
+        "uk": mk(kv_lora, n_heads * qk_nope, axes=("qk_dim", "heads"),
+                 name=lname + "uk", **kw),
+        "uv": mk(kv_lora, n_heads * v_head, axes=("qk_dim", "heads"),
+                 name=lname + "uv", **kw),
+        "o": mk(n_heads * v_head, d_model, axes=("heads", "act_embed"),
+                name=lname + "o", **kw),
         "kv_norm": {
             k: ParamSpec(shape=lead + v.shape, dtype=v.dtype,
                          axes=tuple(lead_axes) + v.axes, init=v.init)
@@ -311,13 +337,15 @@ def mla_spec(
 mla_serve_spec = functools.partial(mla_spec, serve=True)
 
 
-def _mla_qkv(p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos, impl):
+def _mla_qkv(p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos,
+             impl, lname=""):
     b, s, _ = x.shape
     kw = {"impl": impl} if serve else {}
-    q = _proj(p["q"], x, policy, serve, **kw).reshape(b, s, n_heads, qk_nope + qk_rope)
+    q = _proj(p["q"], x, policy, serve, lname + "q",
+              **kw).reshape(b, s, n_heads, qk_nope + qk_rope)
     q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
     q_rope = layers.apply_rotary(q_rope, sin, cos)
-    ckv_full = _proj(p["dkv"], x, policy, serve, **kw)
+    ckv_full = _proj(p["dkv"], x, policy, serve, lname + "dkv", **kw)
     c_kv, k_rope = ckv_full[..., :kv_lora], ckv_full[..., kv_lora:]
     c_kv = layers.rmsnorm_apply(p["kv_norm"], c_kv)
     k_rope = layers.apply_rotary(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]
@@ -326,12 +354,14 @@ def _mla_qkv(p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos, 
 
 def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, policy, serve,
                 n_heads, qk_nope, qk_rope, v_head, *, causal, q_offset, impl,
-                chunk=1024):
+                chunk=1024, lname=""):
     """Expand latent -> K/V and run chunked attention."""
     b, sk = c_kv.shape[:2]
     kw = {"impl": impl} if serve else {}
-    k_nope = _proj(p["uk"], c_kv, policy, serve, **kw).reshape(b, sk, n_heads, qk_nope)
-    v = _proj(p["uv"], c_kv, policy, serve, **kw).reshape(b, sk, n_heads, v_head)
+    k_nope = _proj(p["uk"], c_kv, policy, serve, lname + "uk",
+                   **kw).reshape(b, sk, n_heads, qk_nope)
+    v = _proj(p["uv"], c_kv, policy, serve, lname + "uv",
+              **kw).reshape(b, sk, n_heads, v_head)
     k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (b, sk, n_heads, qk_rope))
     k = jnp.concatenate([k_nope, k_rope_b.astype(k_nope.dtype)], axis=-1)
     q = jnp.concatenate([q_nope, q_rope.astype(q_nope.dtype)], axis=-1)
@@ -342,22 +372,25 @@ def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, policy, serve,
 
 
 def mla_prefill(p, x, policy, *, n_heads, kv_lora, qk_nope, qk_rope, v_head,
-                sin, cos, serve=False, impl="xla", chunk=1024):
+                sin, cos, serve=False, impl="xla", chunk=1024, lname=""):
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(
-        p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos, impl)
+        p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos,
+        impl, lname)
     kw = {"impl": impl} if serve else {}
     o = _mla_attend(p, q_nope, q_rope, c_kv, k_rope, policy, serve,
                     n_heads, qk_nope, qk_rope, v_head,
-                    causal=True, q_offset=0, impl=impl, chunk=chunk)
-    return _proj(p["o"], o, policy, serve, **kw), (c_kv, k_rope)
+                    causal=True, q_offset=0, impl=impl, chunk=chunk,
+                    lname=lname)
+    return _proj(p["o"], o, policy, serve, lname + "o", **kw), (c_kv, k_rope)
 
 
 def mla_decode(p, x, cache, length, policy, *, n_heads, kv_lora, qk_nope,
-               qk_rope, v_head, sin, cos, serve=True, impl="xla"):
+               qk_rope, v_head, sin, cos, serve=True, impl="xla", lname=""):
     """cache: (c_kv (B,Smax,r), k_rope (B,Smax,qk_rope))."""
     b = x.shape[0]
     q_nope, q_rope, c_new, kr_new = _mla_qkv(
-        p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos, impl)
+        p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos,
+        impl, lname)
     c_cache, kr_cache = cache
     c_cache = jax.lax.dynamic_update_slice(
         c_cache, c_new.astype(c_cache.dtype), (0, length, 0))
@@ -366,12 +399,14 @@ def mla_decode(p, x, cache, length, policy, *, n_heads, kv_lora, qk_nope,
     smax = c_cache.shape[1]
     kw = {"impl": impl} if serve else {}
     # Mask by validity: expand all cached latents, mask scores beyond length.
-    k_nope = _proj(p["uk"], c_cache, policy, serve, **kw).reshape(b, smax, n_heads, qk_nope)
-    v = _proj(p["uv"], c_cache, policy, serve, **kw).reshape(b, smax, n_heads, v_head)
+    k_nope = _proj(p["uk"], c_cache, policy, serve, lname + "uk",
+                   **kw).reshape(b, smax, n_heads, qk_nope)
+    v = _proj(p["uv"], c_cache, policy, serve, lname + "uv",
+              **kw).reshape(b, smax, n_heads, v_head)
     k_rope_b = jnp.broadcast_to(kr_cache[:, :, None, :], (b, smax, n_heads, qk_rope))
     k = jnp.concatenate([k_nope, k_rope_b.astype(k_nope.dtype)], axis=-1)
     q = jnp.concatenate([q_nope, q_rope.astype(q_nope.dtype)], axis=-1)
     o = decode_attention(q, k, v, length + 1,
                          softmax_scale=(qk_nope + qk_rope) ** -0.5)
     o = o.reshape(b, 1, n_heads * v_head)
-    return _proj(p["o"], o, policy, serve, **kw), (c_cache, kr_cache)
+    return _proj(p["o"], o, policy, serve, lname + "o", **kw), (c_cache, kr_cache)

@@ -46,10 +46,14 @@ class MoEConfig:
 
 
 def moe_spec(cfg: MoEConfig, *, lead=(), lead_axes=(), serve=False,
-             policy: PrecisionPolicy = PrecisionPolicy()) -> Dict:
+             policy: PrecisionPolicy = PrecisionPolicy(),
+             lname: str = "") -> Dict:
     mk = functools.partial(
         quantized.qlinear_serve_spec if serve else quantized.qlinear_spec,
         lead=lead + (cfg.n_experts,), lead_axes=lead_axes + ("experts",),
+        # One workload layer name covers the whole expert bank — the
+        # gemm_workload 'expert' entry is its DSE unit.
+        name=lname + "expert",
     )
     kw = {"policy": policy} if serve else {}
     spec = {
@@ -64,7 +68,7 @@ def moe_spec(cfg: MoEConfig, *, lead=(), lead_axes=(), serve=False,
     if cfg.n_shared:
         mk2 = functools.partial(
             quantized.qlinear_serve_spec if serve else quantized.qlinear_spec,
-            lead=lead, lead_axes=lead_axes,
+            lead=lead, lead_axes=lead_axes, name=lname + "shared",
         )
         spec["shared_gate"] = mk2(cfg.d_model, cfg.shared_hidden,
                                   axes=("embed", "mlp"), **kw)
@@ -75,7 +79,7 @@ def moe_spec(cfg: MoEConfig, *, lead=(), lead_axes=(), serve=False,
     return spec
 
 
-def _expert_ffn(p, x, policy, cfg: MoEConfig, serve, impl):
+def _expert_ffn(p, x, policy, cfg: MoEConfig, serve, impl, lname=""):
     """x: (B, E, C, D) -> (B, E, C, D); one qlinear bank per expert.
 
     vmapped over the expert axis (params axis 0, activations axis 1) so
@@ -84,12 +88,13 @@ def _expert_ffn(p, x, policy, cfg: MoEConfig, serve, impl):
     """
     fn = (functools.partial(quantized.qlinear_serve_apply, impl=impl)
           if serve else quantized.qlinear_apply)
+    nm = lname + "expert"
 
     def one(pg, pu, pd, xe):                    # xe: (B, C, D)
-        g = fn(pg, xe, policy)
-        u = fn(pu, xe, policy)
+        g = fn(pg, xe, policy, name=nm)
+        u = fn(pu, xe, policy, name=nm)
         h = layers.swiglu_combine(g, u) if cfg.act == "swiglu" else layers.gelu(g)
-        return fn(pd, h, policy)
+        return fn(pd, h, policy, name=nm)
 
     strip = lambda t: {k: v for k, v in t.items() if k != quantized.QMARK}
     return jax.vmap(one, in_axes=(0, 0, 0, 1), out_axes=1)(
@@ -98,7 +103,7 @@ def _expert_ffn(p, x, policy, cfg: MoEConfig, serve, impl):
 
 def moe_apply(
     p: Dict, x: jax.Array, policy: PrecisionPolicy, cfg: MoEConfig,
-    *, serve: bool = False, impl: str = "xla",
+    *, serve: bool = False, impl: str = "xla", lname: str = "",
 ) -> jax.Array:
     """x: (B, S, D) -> (B, S, D).
 
@@ -129,7 +134,7 @@ def moe_apply(
     vals, tok_idx = jax.lax.top_k(jnp.swapaxes(sel, 1, 2), cap)  # (B, E, C)
     xg = jax.vmap(lambda xb, ib: jnp.take(xb, ib, axis=0))(x, tok_idx)
     xg = constrain(xg, ("batch", "experts", "cap", "act_embed"))
-    h = _expert_ffn(p, xg, policy, cfg, serve, impl)             # (B, E, C, D)
+    h = _expert_ffn(p, xg, policy, cfg, serve, impl, lname)      # (B, E, C, D)
     h = h * vals[..., None].astype(h.dtype)
     h = constrain(h, ("batch", "experts", "cap", "act_embed"))
 
@@ -143,8 +148,9 @@ def moe_apply(
     if cfg.n_shared:
         fn = (functools.partial(quantized.qlinear_serve_apply, impl=impl)
               if serve else quantized.qlinear_apply)
-        g = fn(p["shared_gate"], x, policy)
-        u = fn(p["shared_up"], x, policy)
+        nm = lname + "shared"
+        g = fn(p["shared_gate"], x, policy, name=nm)
+        u = fn(p["shared_up"], x, policy, name=nm)
         hs = layers.swiglu_combine(g, u) if cfg.act == "swiglu" else layers.gelu(g)
-        y = y + fn(p["shared_down"], hs, policy).astype(y.dtype)
+        y = y + fn(p["shared_down"], hs, policy, name=nm).astype(y.dtype)
     return y

@@ -13,7 +13,13 @@ layer (layer-wise) and gamma_w per output channel (channel-wise) without
 touching the kernel, the paper's "no new FPGA image" property.
 
 A qlinear param subtree is identified by the marker key '__q__'; tree
-transformations (pack_tree) rewrite those subtrees wholesale.
+transformations (pack_tree) rewrite those subtrees wholesale.  The
+marker carries the layer's class AND its workload layer name, so a
+layer-wise ``PrecisionPlan`` resolves per-layer formats anywhere the
+subtree travels: every spec/apply/pack entry point below accepts a
+``PrecisionPolicy`` OR a ``PrecisionPlan`` plus the layer ``name`` and
+funnels both through ``core.plan.resolve_policy`` — the single
+resolution point of the layer namespace (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -24,7 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packing, quant
+from repro.core import plan as plan_lib
 from repro.core.packing import PlaneFormat
+from repro.core.plan import PolicyOrPlan
 from repro.core.precision import PrecisionPolicy
 from repro.kernels.mpmm import epilogue as mpmm_epilogue
 from repro.kernels.mpmm import ops as mpmm_ops
@@ -50,9 +58,12 @@ __all__ = [
 QMARK = "__q__"
 
 
-def _marker(layer_class: str) -> ParamSpec:
-    # Zero-size marker carrying the layer class in its axes metadata slot.
-    return ParamSpec(shape=(0,), dtype=jnp.float32, axes=(layer_class,), init="zeros")
+def _marker(layer_class: str, name: str = "") -> ParamSpec:
+    # Zero-size marker carrying the layer class and the workload layer
+    # name in its axes metadata slots (markers are stripped before any
+    # materialization/sharding, so the slots are free-form).
+    return ParamSpec(shape=(0, 0), dtype=jnp.float32,
+                     axes=(layer_class, name or None), init="zeros")
 
 
 def qlinear_spec(
@@ -66,16 +77,19 @@ def qlinear_spec(
     lead: Tuple[int, ...] = (),
     lead_axes: Tuple[Optional[str], ...] = (),
     dtype=jnp.float32,
+    name: str = "",
 ) -> Dict[str, ParamSpec]:
     """Spec of one QAT linear: master weight + LSQ step sizes.
 
     lead/lead_axes: optional leading dims (e.g. ('layers',) for
     scan-over-layers stacking, ('experts',) for MoE banks).
+    ``name``: the gemm_workload layer name this linear answers to — it
+    rides in the marker so pack/serve resolve the same per-layer format.
     """
     gshape = lead + ((out_dim,) if channel_wise else ())
     gaxes = lead_axes + ((axes[1],) if channel_wise else ())
     return {
-        QMARK: _marker(layer_class),
+        QMARK: _marker(layer_class, name),
         "w": ParamSpec(
             shape=lead + (in_dim, out_dim),
             dtype=dtype,
@@ -106,16 +120,25 @@ def _layer_class_of(sub: Dict) -> str:
     return axes[0] or "inner"
 
 
+def _layer_name_of(sub: Dict) -> str:
+    """The workload layer name the marker carries ('' on legacy markers)."""
+    mark = sub[QMARK]
+    axes = mark.axes if isinstance(mark, ParamSpec) else ()
+    return (axes[1] or "") if len(axes) > 1 else ""
+
+
 def qlinear_apply(
     p: Dict[str, jax.Array],
     x: jax.Array,
-    policy: PrecisionPolicy,
+    policy: PolicyOrPlan,
     *,
     layer_class: str = "inner",
     quantize_act: bool = True,
     compute_dtype=jnp.bfloat16,
+    name: str = "",
 ) -> jax.Array:
     """QAT forward: fake-quant(act) @ fake-quant(w) (+ b)."""
+    policy = plan_lib.resolve_policy(policy, name)
     w, gw, ga = p["w"], p["gw"], p["ga"]
     if policy.quantize:
         w_bits = policy.bits_for(layer_class)
@@ -148,17 +171,23 @@ def qlinear_serve_spec(
     *,
     axes: Tuple[Optional[str], str] = ("embed", "mlp"),
     layer_class: str = "inner",
-    policy: PrecisionPolicy = PrecisionPolicy(),
+    policy: PolicyOrPlan = PrecisionPolicy(),
     bias: bool = False,
     lead: Tuple[int, ...] = (),
     lead_axes: Tuple[Optional[str], ...] = (),
+    name: str = "",
 ) -> Dict[str, ParamSpec]:
-    """Spec of the deployed (packed) form — shapes for the dry-run."""
+    """Spec of the deployed (packed) form — shapes for the dry-run.
+
+    ``policy`` may be a layer-wise plan: the spec shapes (plane count,
+    packed-K bytes) come from THIS layer's resolved format.
+    """
+    policy = plan_lib.resolve_policy(policy, name)
     w_bits = policy.bits_for(layer_class) if policy.quantize else 16
     if not policy.quantize:
         # FP baseline deployment: bf16 weights, plain matmul.
         return {
-            QMARK: _marker(layer_class),
+            QMARK: _marker(layer_class, name),
             "w": ParamSpec(shape=lead + (in_dim, out_dim), dtype=jnp.bfloat16,
                            axes=lead_axes + axes, init="normal", fan_in_axes=(-2,)),
             **({"b": ParamSpec(shape=lead + (out_dim,), dtype=jnp.float32,
@@ -172,7 +201,7 @@ def qlinear_serve_spec(
     # residual stream (down/o: axes[1] == 'act_embed' maps to None).
     k_axis = f"{axes[0]}_packed" if axes[0] else None
     return {
-        QMARK: _marker(layer_class),
+        QMARK: _marker(layer_class, name),
         "planes": ParamSpec(
             shape=lead + (fmt.planes, fmt.packed_k, out_dim),
             dtype=jnp.uint8,
@@ -216,7 +245,7 @@ def _fold_bias(p, epilogue, scale, shift):
 def qlinear_serve_apply(
     p: Dict[str, jax.Array],
     x: jax.Array,
-    policy: PrecisionPolicy,
+    policy: PolicyOrPlan,
     *,
     layer_class: str = "inner",
     tile: Optional[mpmm_ops.TileShape] = None,
@@ -227,6 +256,7 @@ def qlinear_serve_apply(
     shift: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
     act_signed: bool = False,
+    name: str = "",
 ) -> jax.Array:
     """Deployed forward: quantize acts -> mpmm over packed planes.
 
@@ -236,7 +266,10 @@ def qlinear_serve_apply(
     (act_zero = 0) for inputs that straddle zero — a CNN stem fed
     mean-normalized images, where the paper's unsigned codes (Eq. 5,
     meant for post-ReLU activations) would clamp negatives away.
+    ``policy`` may be a ``PrecisionPlan``; ``name`` picks this layer's
+    entry, matching the format the layer was packed at.
     """
+    policy = plan_lib.resolve_policy(policy, name)
     # Validate up front: the bias fold below dereferences scale/shift,
     # and must fail with the designed error, not an AttributeError.
     mpmm_epilogue.validate_operands(epilogue, scale, shift, residual)
@@ -289,18 +322,20 @@ def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: str
 
 def qconv_spec(cin: int, cout: int, k: int, *, layer_class: str = "inner",
                name_axes: Tuple[Optional[str], str] = ("embed", "mlp"),
-               channel_wise: bool = False) -> Dict[str, ParamSpec]:
+               channel_wise: bool = False, name: str = "") -> Dict[str, ParamSpec]:
     return qlinear_spec(k * k * cin, cout, axes=name_axes,
-                        layer_class=layer_class, channel_wise=channel_wise)
+                        layer_class=layer_class, channel_wise=channel_wise,
+                        name=name)
 
 
 def qconv_apply(p, x, policy, *, k: int, stride: int = 1, padding="SAME",
-                layer_class: str = "inner", quantize_act: bool = True):
+                layer_class: str = "inner", quantize_act: bool = True,
+                name: str = ""):
     """QAT conv forward: im2col + fake-quant linear."""
     cols = im2col(x, k, k, stride, padding)
     return qlinear_apply({kk: v for kk, v in p.items() if kk != QMARK},
                          cols, policy, layer_class=layer_class,
-                         quantize_act=quantize_act)
+                         quantize_act=quantize_act, name=name)
 
 
 def _resolve_impl(impl: str) -> str:
@@ -350,7 +385,7 @@ def qconv_serve_apply(p, x, policy, *, k: int, stride: int = 1,
                       shift: Optional[jax.Array] = None,
                       residual: Optional[jax.Array] = None,
                       act_signed: bool = False,
-                      dataflow: str = "auto"):
+                      dataflow: str = "auto", name: str = ""):
     """Deployed conv forward: packed planes + fused epilogue, per-layer
     dataflow.
 
@@ -363,7 +398,14 @@ def qconv_serve_apply(p, x, policy, *, k: int, stride: int = 1,
     bit-exact to each other.  BN (folded to scale/shift), the shortcut
     add, and ReLU all execute in the kernel epilogue either way — the
     FPGA post-processing pipeline.
+
+    ``policy`` may be a ``PrecisionPlan``: ``name`` resolves both the
+    (w_bits, k, channel_wise) format and the conv dataflow, with an
+    explicit non-'auto' ``dataflow`` argument still winning (DESIGN.md
+    §7 resolution order: explicit arg > plan entry > policy default).
     """
+    dataflow = plan_lib.resolve_dataflow(policy, name, dataflow)
+    policy = plan_lib.resolve_policy(policy, name)
     if "w" in p or not policy.quantize:
         dataflow = "im2col"  # FP baseline serves through the bf16 matmul
     elif dataflow == "auto":
@@ -409,10 +451,17 @@ def qconv_serve_apply(p, x, policy, *, k: int, stride: int = 1,
 
 def pack_qlinear(
     p: Dict[str, jax.Array],
-    policy: PrecisionPolicy,
+    policy: PolicyOrPlan,
     layer_class: str = "inner",
+    name: str = "",
 ) -> Dict[str, jax.Array]:
-    """Trained QAT params -> deployed packed params (handles lead dims)."""
+    """Trained QAT params -> deployed packed params (handles lead dims).
+
+    Under a ``PrecisionPlan`` the layer packs at ITS OWN resolved
+    format — plane count, packed-K bytes and gamma layout all follow
+    the plan entry named by ``name``.
+    """
+    policy = plan_lib.resolve_policy(policy, name)
     w, gw, ga = p["w"], p["gw"], p["ga"]
     if not policy.quantize:
         out = {"w": w.astype(jnp.bfloat16)}
@@ -443,17 +492,19 @@ def pack_qlinear(
     return out
 
 
-def pack_tree(params, specs, policy: PrecisionPolicy):
+def pack_tree(params, specs, policy: PolicyOrPlan):
     """Recursively pack every qlinear subtree of a trained param tree.
 
-    `specs` is the matching ParamSpec tree (it carries the layer-class
-    markers); non-qlinear leaves are cast to bf16 when float (norms,
-    embeddings handled by their own layers).
+    `specs` is the matching ParamSpec tree; its markers carry each
+    subtree's layer class and workload layer name, so a layer-wise
+    ``PrecisionPlan`` packs every layer at its own resolved format —
+    the single funnel shared by every model family (no per-family
+    pack threading).
     """
     if is_qlinear(specs):
         cls = _layer_class_of(specs)
         sub = {k: v for k, v in params.items() if k != QMARK}
-        return pack_qlinear(sub, policy, cls)
+        return pack_qlinear(sub, policy, cls, name=_layer_name_of(specs))
     if isinstance(specs, dict):
         return {
             k: pack_tree(params[k], specs[k], policy)

@@ -44,12 +44,14 @@ def rglru_block_spec(cfg: RGLRUConfig, *, lead=(), lead_axes=(), serve=False,
     )
     kw = {"policy": policy} if serve else {}
     d, dr = cfg.d_model, cfg.d_rnn
+    # Plan-layer names = recurrentgemma's gemm_workload names: rnn_in
+    # covers both input projections, rnn_gates the recurrence gates.
     return {
-        "in_x": mk(d, dr, axes=("embed", "mlp"), **kw),
-        "in_gate": mk(d, dr, axes=("embed", "mlp"), **kw),
-        "w_a": mk(dr, dr, axes=("mlp", "mlp"), **kw),
-        "w_x": mk(dr, dr, axes=("mlp", "mlp"), **kw),
-        "out": mk(dr, d, axes=("mlp", "act_embed"), **kw),
+        "in_x": mk(d, dr, axes=("embed", "mlp"), name="rnn_in", **kw),
+        "in_gate": mk(d, dr, axes=("embed", "mlp"), name="rnn_in", **kw),
+        "w_a": mk(dr, dr, axes=("mlp", "mlp"), name="rnn_gates", **kw),
+        "w_x": mk(dr, dr, axes=("mlp", "mlp"), name="rnn_gates", **kw),
+        "out": mk(dr, d, axes=("mlp", "act_embed"), name="rnn_out", **kw),
         "conv": {k: ParamSpec(shape=lead + v.shape, dtype=v.dtype,
                               axes=lead_axes + v.axes, init=v.init)
                  for k, v in layers.conv1d_spec(dr, cfg.conv_width).items()},
@@ -58,16 +60,18 @@ def rglru_block_spec(cfg: RGLRUConfig, *, lead=(), lead_axes=(), serve=False,
     }
 
 
-def _proj(p, x, policy, serve, impl):
+def _proj(p, x, policy, serve, impl, name=""):
     fn = (functools.partial(quantized.qlinear_serve_apply, impl=impl)
           if serve else quantized.qlinear_apply)
-    return fn(p, x, policy)
+    return fn(p, x, policy, name=name)
 
 
 def _gates(p, xb, policy, serve, impl):
     """xb: (..., d_rnn) -> (a, gated_input) in fp32."""
-    r = jax.nn.sigmoid(_proj(p["w_a"], xb, policy, serve, impl).astype(jnp.float32))
-    i = jax.nn.sigmoid(_proj(p["w_x"], xb, policy, serve, impl).astype(jnp.float32))
+    r = jax.nn.sigmoid(_proj(p["w_a"], xb, policy, serve, impl,
+                             "rnn_gates").astype(jnp.float32))
+    i = jax.nn.sigmoid(_proj(p["w_x"], xb, policy, serve, impl,
+                             "rnn_gates").astype(jnp.float32))
     log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
     a = jnp.exp(log_a)
     beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
@@ -79,8 +83,8 @@ def rglru_block_forward(
     *, serve: bool = False, impl: str = "xla", h0: jax.Array = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """x: (B, S, D) -> (out, {'h': (B, d_rnn), 'conv': (B, W-1, d_rnn)})."""
-    xb = _proj(p["in_x"], x, policy, serve, impl)                 # (B,S,dr)
-    gate = layers.gelu(_proj(p["in_gate"], x, policy, serve, impl))
+    xb = _proj(p["in_x"], x, policy, serve, impl, "rnn_in")       # (B,S,dr)
+    gate = layers.gelu(_proj(p["in_gate"], x, policy, serve, impl, "rnn_in"))
     pre_conv = xb
     xb = layers.causal_conv1d(p["conv"], xb)
     a, b = _gates(p, xb, policy, serve, impl)
@@ -95,7 +99,7 @@ def rglru_block_forward(
 
     _, h_seq = jax.lax.associative_scan(combine, (a, b), axis=1)
     y = h_seq.astype(x.dtype) * gate
-    out = _proj(p["out"], y, policy, serve, impl)
+    out = _proj(p["out"], y, policy, serve, impl, "rnn_out")
     state = {
         "h": h_seq[:, -1, :],
         "conv": pre_conv[:, -(cfg.conv_width - 1):, :].astype(jnp.float32),
@@ -117,12 +121,13 @@ def rglru_block_step(
     *, serve: bool = True, impl: str = "xla",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token step. x_t: (B, 1, D)."""
-    xb = _proj(p["in_x"], x_t, policy, serve, impl)[:, 0]          # (B,dr)
-    gate = layers.gelu(_proj(p["in_gate"], x_t, policy, serve, impl))[:, 0]
+    xb = _proj(p["in_x"], x_t, policy, serve, impl, "rnn_in")[:, 0]  # (B,dr)
+    gate = layers.gelu(_proj(p["in_gate"], x_t, policy, serve, impl,
+                             "rnn_in"))[:, 0]
     conv_cache, xbc = layers.causal_conv1d_step(
         p["conv"], state["conv"].astype(xb.dtype), xb)
     a, b = _gates(p, xbc, policy, serve, impl)
     h = a * state["h"] + b
     y = (h.astype(x_t.dtype) * gate)[:, None, :]
-    out = _proj(p["out"], y, policy, serve, impl)
+    out = _proj(p["out"], y, policy, serve, impl, "rnn_out")
     return out, {"h": h, "conv": conv_cache.astype(jnp.float32)}

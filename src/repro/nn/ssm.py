@@ -61,11 +61,12 @@ def ssm_spec(cfg: SSMConfig, *, lead=(), lead_axes=(), serve=False,
     d, di = cfg.d_model, cfg.d_inner
     gn = cfg.n_groups * cfg.d_state
     return {
-        # fused in-projection: [x, B, C, z, dt]
-        "in_xbc": mk(d, di + 2 * gn, axes=("embed", "mlp"), **kw),
-        "in_z": mk(d, di, axes=("embed", "mlp"), **kw),
-        "in_dt": mk(d, cfg.n_heads, axes=("embed", "heads"), **kw),
-        "out": mk(di, d, axes=("mlp", "act_embed"), **kw),
+        # fused in-projection: [x, B, C, z, dt] — the spec names double
+        # as the plan-layer names (= mamba2's gemm_workload names).
+        "in_xbc": mk(d, di + 2 * gn, axes=("embed", "mlp"), name="in_xbc", **kw),
+        "in_z": mk(d, di, axes=("embed", "mlp"), name="in_z", **kw),
+        "in_dt": mk(d, cfg.n_heads, axes=("embed", "heads"), name="in_dt", **kw),
+        "out": mk(di, d, axes=("mlp", "act_embed"), name="out", **kw),
         "conv": {k: ParamSpec(shape=lead + v.shape, dtype=v.dtype,
                               axes=lead_axes + v.axes, init=v.init)
                  for k, v in layers.conv1d_spec(cfg.conv_channels, cfg.conv_width).items()},
@@ -81,10 +82,10 @@ def ssm_spec(cfg: SSMConfig, *, lead=(), lead_axes=(), serve=False,
     }
 
 
-def _proj(p, x, policy, serve, impl):
+def _proj(p, x, policy, serve, impl, name=""):
     fn = (functools.partial(quantized.qlinear_serve_apply, impl=impl)
           if serve else quantized.qlinear_apply)
-    return fn(p, x, policy)
+    return fn(p, x, policy, name=name)
 
 
 def _split_xbc(xbc, cfg: SSMConfig):
@@ -109,9 +110,9 @@ def ssd_forward(
     assert s % q == 0, (s, q)
     nc = s // q
 
-    xbc = _proj(p["in_xbc"], x_in, policy, serve, impl)
-    z = _proj(p["in_z"], x_in, policy, serve, impl)
-    dt = _proj(p["in_dt"], x_in, policy, serve, impl)
+    xbc = _proj(p["in_xbc"], x_in, policy, serve, impl, "in_xbc")
+    z = _proj(p["in_z"], x_in, policy, serve, impl, "in_z")
+    dt = _proj(p["in_dt"], x_in, policy, serve, impl, "in_dt")
     pre_conv = jax.nn.silu(xbc.astype(jnp.float32)).astype(xbc.dtype)
     xbc = layers.causal_conv1d(p["conv"], pre_conv)
     xr, bmat, cmat = _split_xbc(xbc, cfg)
@@ -167,7 +168,7 @@ def ssd_forward(
     y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
     y = y.reshape(b, s, cfg.d_inner).astype(x_in.dtype)
     y = _gated_norm(p["norm"], y, z)
-    out = _proj(p["out"], y, policy, serve, impl)
+    out = _proj(p["out"], y, policy, serve, impl, "out")
     state = {
         "ssm": final_state,                                          # (B,H,N,P)
         "conv": pre_conv[:, -(cfg.conv_width - 1):, :].astype(jnp.float32),
@@ -192,9 +193,9 @@ def ssd_decode_step(
     """One-token recurrence. x_t: (B, 1, D); state from ssm_state_spec."""
     b = x_t.shape[0]
     h, pdim, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
-    xbc = _proj(p["in_xbc"], x_t, policy, serve, impl)[:, 0]
-    z = _proj(p["in_z"], x_t, policy, serve, impl)[:, 0]
-    dt = _proj(p["in_dt"], x_t, policy, serve, impl)[:, 0]
+    xbc = _proj(p["in_xbc"], x_t, policy, serve, impl, "in_xbc")[:, 0]
+    z = _proj(p["in_z"], x_t, policy, serve, impl, "in_z")[:, 0]
+    dt = _proj(p["in_dt"], x_t, policy, serve, impl, "in_dt")[:, 0]
     conv_cache, xbc = layers.causal_conv1d_step(
         p["conv"], state["conv"].astype(xbc.dtype),
         jax.nn.silu(xbc.astype(jnp.float32)).astype(xbc.dtype))
@@ -211,5 +212,5 @@ def ssd_decode_step(
     y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
     y = y.reshape(b, 1, cfg.d_inner).astype(x_t.dtype)
     y = _gated_norm(p["norm"], y, z[:, None, :])
-    out = _proj(p["out"], y, policy, serve, impl)
+    out = _proj(p["out"], y, policy, serve, impl, "out")
     return out, {"ssm": s_new, "conv": conv_cache.astype(jnp.float32)}

@@ -6,6 +6,12 @@ inner linear into k-bit digit planes (nn/quantized.pack_tree), then run
 prefill + decode entirely against packed weights through the mpmm path.
 Changing w_Q (layer-wise) or gamma_w per channel requires only re-packing
 — no recompilation of the serving step (the "no new FPGA image" claim).
+
+Layer-wise ``PrecisionPlan``s are honored by EVERY model family, not
+just CNNs: the spec markers carry each layer's workload name, so
+``pack_for_serving`` packs every layer at its own (w_bits, k) and both
+``Generator`` (LM prefill/decode, format-grouped scans) and
+``ImageServer`` (CNN batched forward) serve the same per-layer formats.
 """
 from __future__ import annotations
 
@@ -27,7 +33,17 @@ __all__ = ["pack_for_serving", "Generator", "ImageServer"]
 
 
 def pack_for_serving(api, train_params):
-    """Trained QAT tree -> packed serve tree matching specs('serve')."""
+    """Trained QAT tree -> packed serve tree matching specs('serve').
+
+    Works for ANY api.policy — uniform or a layer-wise plan: families
+    with format-grouped scans (transformer) first re-layout a
+    uniform-trained stack into the plan's groups (``regroup_layers``,
+    a pure slicing re-pack), then the marker-named funnel packs every
+    layer at its own resolved format.
+    """
+    regroup = getattr(api.mod, "regroup_layers", None)
+    if regroup is not None:
+        train_params = regroup(api.cfg, train_params, api.policy)
     tspecs = api.specs("train")
     packed = Q.pack_tree(train_params, tspecs, api.policy)
     # embeddings: boundary-class PTQ to int8 codes + step size
@@ -113,14 +129,24 @@ class ImageServer:
 
 @dataclasses.dataclass
 class Generator:
-    """Greedy batched generator over the uniform model API."""
+    """Greedy batched generator over the uniform model API.
+
+    ``plan`` (a ``core.plan.PrecisionPlan``) overrides the api's uniform
+    policy with a layer-wise one, exactly like ``ImageServer.plan`` —
+    ``params`` must then be packed under the same plan.  Serving a
+    different plan point is a re-pack plus a new ``Generator``; the
+    model and kernel code never change.
+    """
 
     api: Any
     params: Any
     max_len: int = 64
     mode: str = "serve"
+    plan: Any = None
 
     def __post_init__(self):
+        if self.plan is not None:
+            self.api = dataclasses.replace(self.api, policy=self.plan)
         self._prefill = jax.jit(steps_lib.make_prefill_fn(
             self.api, mode=self.mode))
         self._decode = jax.jit(steps_lib.make_decode_fn(

@@ -1,0 +1,268 @@
+"""Plan-aware layer namespace on the LM families (PR-4 tentpole).
+
+A ``PrecisionPlan`` is honored by ANY model family through the shared
+marker-named funnel: these tests cover the transformer family end to
+end — mixed w8/w4/w2 plans bit-exact against the per-layer
+uniform-repack oracle on xla AND pallas, prefill + decode through the
+format-grouped scan path, a MoE (olmoe) spot-check, ``Generator``'s
+``plan=``, plan search over an LM workload, and the validate-CLI's
+unknown-arch exit code.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.lm_plan_serve import assert_plan_pack_matches_uniform_repacks
+from repro import configs
+from repro.core import plan as plan_lib
+from repro.core import planner
+from repro.core.plan import LayerPlan, PrecisionPlan
+from repro.core.precision import PrecisionPolicy
+from repro.models import transformer as T
+from repro.runtime.serve import Generator, pack_for_serving
+
+TOKS = jnp.asarray(np.arange(16).reshape(2, 8) % 200, jnp.int32)
+
+
+def _mixed_plan():
+    """>= 3 distinct formats over granite-8b-reduced (3 layers): all QKV
+    at w4, depth-scoped MLP entries at w2/w4, default w8 — 3 scan
+    groups."""
+    return PrecisionPlan.build(
+        {"q": LayerPlan(w_bits=4, k=4), "k": LayerPlan(w_bits=4, k=4),
+         "v": LayerPlan(w_bits=4, k=4),
+         "l1.mlp": LayerPlan(w_bits=2, k=2),
+         "l2.mlp": LayerPlan(w_bits=4, k=4)},
+        default=LayerPlan(w_bits=8, k=4), name="lm-mixed-test")
+
+
+def _packed(key, plan, arch="granite-8b"):
+    api = configs.get(arch, reduced=True, policy=plan)
+    params = api.init_params(key, "train")
+    packed = pack_for_serving(api, params)
+    return api, params, packed
+
+
+class TestNamespace:
+    def test_scoped_resolution_order(self):
+        plan = PrecisionPlan.build(
+            {"mlp": LayerPlan(w_bits=4, k=4),
+             "l1.mlp": LayerPlan(w_bits=2, k=2)},
+            default=LayerPlan(w_bits=8, k=4))
+        # scoped entry > base entry > default
+        assert plan_lib.resolve_policy(plan, "l1.mlp").inner_bits == 2
+        assert plan_lib.resolve_policy(plan, "l0.mlp").inner_bits == 4
+        assert plan_lib.resolve_policy(plan, "l0.q").inner_bits == 8
+
+    def test_plan_layer_names_cover_scoped_forms(self):
+        api = configs.get("granite-8b", reduced=True)
+        names = api.plan_layer_names()
+        assert {"q", "k", "v", "o", "mlp", "head"} <= set(names)
+        assert "l0.q" in names and f"l{api.cfg.n_layers - 1}.mlp" in names
+        _mixed_plan().validate_layers(names)
+
+    def test_unknown_scoped_layer_rejected(self):
+        api = configs.get("granite-8b", reduced=True)
+        bad = PrecisionPlan.build({"l99.mlp": LayerPlan(w_bits=4, k=4)})
+        with pytest.raises(ValueError, match="l99.mlp"):
+            bad.validate_layers(api.plan_layer_names())
+
+    def test_format_groups_partition_is_contiguous_and_complete(self):
+        cfg = configs.get("granite-8b", reduced=True).cfg
+        groups = T.scan_format_groups(cfg, _mixed_plan())
+        assert len(groups) == 3  # l0 | l1 | l2 all differ in mlp format
+        covered = [i for s, n in groups for i in range(s, s + n)]
+        assert covered == list(range(cfg.dense_first_n, cfg.n_layers))
+        # uniform policy: the degenerate single group
+        assert T.scan_format_groups(cfg, PrecisionPolicy()) == \
+            [(cfg.dense_first_n, cfg.n_layers - cfg.dense_first_n)]
+
+
+class TestMixedPlanServe:
+    """The acceptance criterion: a >= 3-format LM plan serves bit-exactly
+    against the per-layer uniform-repack oracle on xla and pallas."""
+
+    def test_pack_matches_uniform_repack_oracle(self, key):
+        plan = _mixed_plan()
+        assert len(plan.distinct_wbits()) >= 3
+        api, params, packed = _packed(key, plan)
+        assert set(packed["layers"]) == {"g0", "g1", "g2"}
+        assert_plan_pack_matches_uniform_repacks(api, params, plan, packed)
+
+    def test_per_group_formats_really_differ(self, key):
+        api, params, packed = _packed(key, _mixed_plan())
+        gate = lambda g: packed["layers"][g]["mlp"]["gate"]["planes"]
+        assert gate("g0").shape[-3] == 2          # w8k4: two planes
+        assert gate("g1").shape[-3] == 1          # w2k2: one plane...
+        assert gate("g1").shape[-2] < gate("g2").shape[-2]  # ...fewer bytes
+        q = lambda g: packed["layers"][g]["attn"]["q"]["planes"]
+        assert q("g0").shape == q("g1").shape      # base 'q' entry: all w4
+
+    def test_forward_xla_pallas_bit_exact(self, key):
+        plan = _mixed_plan()
+        api, params, packed = _packed(key, plan)
+        yx = api.forward(packed, TOKS, mode="serve", impl="xla")
+        yp = api.forward(packed, TOKS, mode="serve", impl="pallas")
+        np.testing.assert_array_equal(np.asarray(yx, np.float32),
+                                      np.asarray(yp, np.float32))
+
+    def test_prefill_decode_consistent_under_plan(self, key):
+        plan = _mixed_plan()
+        api, params, packed = _packed(key, plan)
+        full = api.forward(packed, TOKS, mode="serve")
+        logits_pre, _ = api.prefill(packed, TOKS, mode="serve")
+        np.testing.assert_array_equal(
+            np.asarray(logits_pre, np.float32),
+            np.asarray(full[:, -1, :], np.float32))
+        # one decode step against a fresh cache, xla == pallas bitwise
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             api.cache_specs(2, 16))
+        lx, _ = api.decode_step(packed, cache, TOKS[:, :1],
+                                jnp.asarray(0, jnp.int32), mode="serve")
+        lp, _ = api.decode_step(packed, cache, TOKS[:, :1],
+                                jnp.asarray(0, jnp.int32), mode="serve",
+                                impl="pallas")
+        np.testing.assert_array_equal(np.asarray(lx, np.float32),
+                                      np.asarray(lp, np.float32))
+
+    def test_uniform_plan_bit_exact_vs_policy_path(self, key):
+        """The degenerate plan == the old uniform-policy path, bitwise —
+        including the param-tree layout (single scan group)."""
+        pol = PrecisionPolicy(inner_bits=4, k=4)
+        api_pol, params, packed_pol = _packed(key, pol)
+        plan = PrecisionPlan.uniform(pol)
+        api_plan = configs.get("granite-8b", reduced=True, policy=plan)
+        packed_plan = pack_for_serving(api_plan, params)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), packed_pol, packed_plan)
+        y_pol = api_pol.forward(packed_pol, TOKS, mode="serve")
+        y_plan = api_plan.forward(packed_plan, TOKS, mode="serve")
+        np.testing.assert_array_equal(np.asarray(y_pol, np.float32),
+                                      np.asarray(y_plan, np.float32))
+
+    def test_qat_forward_runs_grouped(self, key):
+        """Plan-aware QAT forward (PTQ evaluation) through the grouped
+        scan — params initialized under the plan's grouped specs."""
+        plan = _mixed_plan()
+        api = configs.get("granite-8b", reduced=True, policy=plan)
+        params = api.init_params(key, "train")
+        assert set(params["layers"]) == {"g0", "g1", "g2"}
+        out = api.forward(params, TOKS, mode="train")
+        assert bool(jnp.isfinite(out.astype(jnp.float32)).all())
+
+    def test_generator_plan_kwarg(self, key):
+        """Generator gains plan= like ImageServer: greedy decode over a
+        plan-packed tree, deterministic."""
+        plan = _mixed_plan()
+        api_base = configs.get("granite-8b", reduced=True)  # uniform api
+        params = api_base.init_params(key, "train")
+        packed = pack_for_serving(
+            dataclasses.replace(api_base, policy=plan), params)
+        gen = Generator(api=api_base, params=packed, plan=plan)
+        toks = np.ones((2, 8), np.int32)
+        o1 = gen.generate(toks, 4)
+        o2 = gen.generate(toks, 4)
+        assert o1.shape == (2, 4)
+        np.testing.assert_array_equal(o1, o2)
+
+
+class TestMoEPlan:
+    def test_olmoe_depth_scoped_expert_plan(self, key):
+        """MoE spot-check: per-depth expert formats split the scan and
+        pack per-group expert banks at their own plane layouts."""
+        plan = PrecisionPlan.build(
+            {"l0.expert": LayerPlan(w_bits=4, k=4),
+             "l1.expert": LayerPlan(w_bits=2, k=2)},
+            default=LayerPlan(w_bits=8, k=4), name="olmoe-mixed")
+        api, params, packed = _packed(key, plan, arch="olmoe-1b-7b")
+        assert set(packed["layers"]) == {"g0", "g1"}
+        g0 = packed["layers"]["g0"]["moe"]["gate"]["planes"]
+        g1 = packed["layers"]["g1"]["moe"]["gate"]["planes"]
+        assert g0.shape[-3] == 1 and g1.shape[-3] == 1
+        assert g1.shape[-2] == g0.shape[-2] // 2   # w2k2 packs half the bytes
+        yx = api.forward(packed, TOKS, mode="serve", impl="xla")
+        yp = api.forward(packed, TOKS, mode="serve", impl="pallas")
+        np.testing.assert_array_equal(np.asarray(yx, np.float32),
+                                      np.asarray(yp, np.float32))
+
+    def test_olmoe_expert_pack_matches_uniform_repack(self, key):
+        plan = PrecisionPlan.build(
+            {"l0.expert": LayerPlan(w_bits=2, k=2)},
+            default=LayerPlan(w_bits=8, k=4))
+        api, params, packed = _packed(key, plan, arch="olmoe-1b-7b")
+        pol = plan_lib.resolve_policy(plan, "l0.expert")
+        uni = pack_for_serving(dataclasses.replace(api, policy=pol), params)
+        got = packed["layers"]["g0"]["moe"]["gate"]
+        want = uni["layers"]["moe"]["gate"]
+        for kk in got:
+            np.testing.assert_array_equal(
+                np.asarray(got[kk]), np.asarray(want[kk])[0:1], kk)
+
+
+class TestLMPlanSearch:
+    def test_non_degenerate_frontier_on_lm_workload(self):
+        """plan_search runs against any api.gemm_workload: the LM decode
+        workload yields a real error-latency trade-off curve."""
+        api = configs.get("granite-8b", reduced=True)
+        gemms = api.gemm_workload(64)
+        sens = {g.name: {8: 0.0, 4: 1e-9 * g.macs, 2: 3e-9 * g.macs,
+                         1: 1e-8 * g.macs}
+                for g in gemms if g.layer_class != "boundary"}
+        res = planner.plan_search(
+            gemms, sens,
+            layer_params={g.name: g.k * g.n * g.count for g in gemms})
+        assert len(res.frontier) >= 3
+        assert len({p.latency_s for p in res.frontier}) >= 3
+        assert len({p.error for p in res.frontier}) >= 3
+        # frontier plans validate against the arch's layer namespace
+        for p in res.frontier:
+            p.plan.validate_layers(api.plan_layer_names())
+        # at least one frontier point genuinely mixes word-lengths
+        assert any(len(set(dict(p.bits).values())) >= 2
+                   for p in res.frontier)
+
+    def test_layer_latency_table_covers_lm_names(self):
+        api = configs.get("granite-8b", reduced=True)
+        gemms = api.gemm_workload(64)
+        lat = planner.layer_latency_table(gemms)
+        assert set(lat) == {g.name for g in gemms}
+        for g in gemms:
+            if g.layer_class != "boundary":
+                assert lat[g.name][2] <= lat[g.name][8]
+
+
+class TestValidateCLI:
+    def test_unknown_arch_exits_2_and_lists_archs(self, capsys):
+        rc = plan_lib.main(["validate", "examples/plans/resnet18_mixed.json",
+                            "--arch", "not-an-arch"])
+        assert rc == 2
+        err = capsys.readouterr().err
+        assert "granite-8b" in err and "resnet18" in err
+
+    def test_embedded_arch_validates_all_example_plans(self, capsys):
+        rc = plan_lib.main(["validate",
+                            "examples/plans/resnet18_mixed.json",
+                            "examples/plans/granite_8b_mixed.json"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "arch resnet18" in out and "arch granite-8b" in out
+
+    def test_archless_plan_rejected_unless_schema_only(self, tmp_path,
+                                                       capsys):
+        """The CI gate always layer-checks: a plan with no embedded arch
+        and no --arch is an error (opt out via --schema-only)."""
+        p = tmp_path / "noarch.json"
+        p.write_text(PrecisionPlan.build(
+            {"q": LayerPlan(w_bits=4, k=4)}).dumps())
+        assert plan_lib.main(["validate", str(p)]) == 1
+        assert "no arch" in capsys.readouterr().err
+        assert plan_lib.main(["validate", str(p), "--schema-only"]) == 0
+
+    def test_committed_lm_plan_has_three_formats(self):
+        plan = plan_lib.validate_plan_json(
+            "examples/plans/granite_8b_mixed.json")
+        assert len(plan.distinct_wbits()) >= 3
+        assert plan.arch == "granite-8b"
