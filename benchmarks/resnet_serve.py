@@ -50,6 +50,7 @@ BENCH_SMOKE_JSON = _ROOT / "BENCH_resnet_smoke.json"
 
 
 def build_packed(cfg: ResNetConfig, policy: PrecisionPolicy, seed: int = 0):
+    """Init + pack one serve tree (shared with benchmarks/sharded_serve)."""
     specs = R.specs(cfg)
     params = nnp.init_params(specs, jax.random.PRNGKey(seed))
     state = R.init_bn_state(specs)
@@ -85,6 +86,7 @@ def bench_dataflows(cfg, policy, packed, batch, iters):
 
 
 def _smoke_cfg(depth: int = 18) -> ResNetConfig:
+    """Tiny 2-block net — the CI smoke shape here and in sharded_serve."""
     return ResNetConfig(name=f"resnet{depth}-smoke", depth=depth,
                         n_classes=10, img_size=32, width=16,
                         stages_override=(1, 1))

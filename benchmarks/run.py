@@ -24,6 +24,7 @@ MODULES = [
     ("tab5", "benchmarks.tab5_sota"),
     ("micro", "benchmarks.kernel_micro"),
     ("serve", "benchmarks.resnet_serve"),
+    ("sharded", "benchmarks.sharded_serve"),
     ("pareto", "benchmarks.pareto_serve"),
     ("lm_plan", "benchmarks.lm_plan_serve"),
 ]

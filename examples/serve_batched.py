@@ -11,6 +11,16 @@ as w_Q falls (fewer digit planes, fewer HBM bytes).  Two families:
     at one graph per bucket, and every conv runs the implicit-GEMM
     dataflow (no im2col patch buffer).
 
+It ends with the CONTINUOUS-BATCHING front end (runtime/scheduler.py):
+individual requests arrive one at a time, the ``ImageScheduler``
+coalesces them into the server's buckets inside a bounded batching
+window, and the ``GenerateScheduler`` interleaves new prompts' prefills
+with in-flight decode slots — per-request latency is accounted on every
+ticket, and a full admission queue pushes back (``QueueFull``) instead
+of buffering unboundedly.  Results are bit-identical to serving each
+request alone.  (Multi-device serving of the same packed trees:
+``--mesh`` in launch/serve.py, DESIGN.md §8.)
+
 The CNN section ends with a LAYER-WISE plan: a ``PrecisionPlan``
 (core/plan.py) gives each layer its own (w_bits, k) — re-pack under the
 plan, hand it to ``ImageServer(plan=...)``, done.  The same deployment
@@ -93,3 +103,37 @@ logits = plan_server.predict(imgs)
 dt = time.perf_counter() - t0
 print(f"cnn plan [{plan.name}] w_bits={plan.distinct_wbits()}: "
       f"{4 / dt:7.1f} img/s | logits {logits.shape}")
+
+# --- continuous batching: the scheduler front end ---------------------------
+# Requests arrive ONE AT A TIME; the scheduler owns when they become a
+# batch.  CNN: coalesce into buckets inside a 5 ms window.  LM: admit
+# new prompts into free decode slots while earlier requests are still
+# mid-generation (prefill/decode interleaving).
+
+from repro.runtime.scheduler import GenerateScheduler, ImageScheduler
+
+sched = ImageScheduler(server, max_queue=64, max_wait_s=0.005)
+tickets = [sched.submit(rng.normal(0.4, 0.5, (api.cfg.img_size,
+                                              api.cfg.img_size, 3))
+                        .astype(np.float32)) for _ in range(11)]
+sched.drain()
+st = sched.stats()
+print(f"cnn scheduler: {int(st['served'])} requests in batches "
+      f"{list(sched.dispatched_batches)} | mean latency "
+      f"{st['mean_latency_s'] * 1e3:.1f} ms | "
+      f"mean queue wait {st['mean_queue_wait_s'] * 1e3:.1f} ms")
+
+lm_api = configs.get("granite-8b", reduced=True)
+lm_packed = pack_for_serving(lm_api, params)
+gen = Generator(api=lm_api, params=lm_packed)
+lsched = GenerateScheduler(gen, slots=2, max_len=48)
+rng_t = np.random.default_rng(1)
+jobs = [lsched.submit(rng_t.integers(0, lm_api.cfg.vocab, (PROMPT,)), NEW)
+        for _ in range(4)]
+lsched.step()                                  # first two fill the slots
+late = lsched.submit(rng_t.integers(0, lm_api.cfg.vocab, (PROMPT,)), NEW)
+lsched.run_until_idle()                        # late prefill interleaves
+st = lsched.stats()
+print(f"lm scheduler: {int(st['served'])} requests over 2 slots | "
+      f"sample {late.result[:6].tolist()} | mean latency "
+      f"{st['mean_latency_s'] * 1e3:.1f} ms")

@@ -138,6 +138,9 @@ class PrecisionPlan:
         object.__setattr__(
             self, "layers",
             tuple(sorted(self.layers, key=lambda e: e[0])))
+        # layer() is the hot resolution funnel (every projection at
+        # spec/pack/serve-trace time): build the lookup dict once.
+        object.__setattr__(self, "_entries", dict(self.layers))
 
     # --- construction ------------------------------------------------------
 
@@ -166,7 +169,7 @@ class PrecisionPlan:
         scope prefixes stripped one segment at a time (``l3.mlp`` falls
         back to ``mlp``), then the plan default.  A scoped entry always
         beats a base entry for the layers it names."""
-        entries = dict(self.layers)
+        entries = self._entries
         probe = name
         while True:
             if probe in entries:
@@ -263,7 +266,11 @@ class PrecisionPlan:
 
     @classmethod
     def loads(cls, text: str) -> "PrecisionPlan":
-        return cls.from_json(json.loads(text))
+        # json silently keeps only the LAST of duplicate object keys, so
+        # a plan naming one layer twice would otherwise pass with half
+        # its entries dropped — reject at parse time instead.
+        return cls.from_json(json.loads(
+            text, object_pairs_hook=_reject_duplicate_keys))
 
     def save(self, path) -> None:
         Path(path).write_text(self.dumps())
@@ -271,6 +278,15 @@ class PrecisionPlan:
     @classmethod
     def load(cls, path) -> "PrecisionPlan":
         return cls.loads(Path(path).read_text())
+
+
+def _reject_duplicate_keys(pairs):
+    """json object_pairs_hook: duplicate keys are a schema error."""
+    keys = [k for k, _ in pairs]
+    if len(set(keys)) != len(keys):
+        dupes = sorted({k for k in keys if keys.count(k) > 1})
+        raise ValueError(f"duplicate keys in plan JSON: {dupes}")
+    return dict(pairs)
 
 
 # --- policy-or-plan resolution (the serve stack's entry point) -------------
@@ -395,14 +411,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     rc = 1
                     continue
         except KeyError:
-            # a plan file embedding an arch outside the registry
+            # a plan file embedding an arch outside the registry: keep
+            # validating the remaining files (one typo'd arch must not
+            # mask unrelated schema errors from the CI gate)
             plan_arch = PrecisionPlan.load(path).arch
             print(f"[plan] unknown arch {plan_arch!r} in {path}; "
                   f"available: {', '.join(known_archs)}", file=sys.stderr)
-            return 2
+            rc = 2
+            continue
         except (ValueError, OSError, json.JSONDecodeError) as e:
             print(f"[plan] INVALID {path}: {e}", file=sys.stderr)
-            rc = 1
+            rc = max(rc, 1)
             continue
         print(f"[plan] ok {path}: {len(plan.layers)} named layers, "
               f"w_bits {plan.distinct_wbits()}, default "

@@ -1,4 +1,4 @@
-"""Production meshes.
+"""Production + serving meshes.
 
 Defined as FUNCTIONS (not module constants) so importing this module
 never touches jax device state — required because the dry-run must set
@@ -6,25 +6,74 @@ XLA_FLAGS before the first jax initialization.
 """
 from __future__ import annotations
 
-import jax
+from typing import Optional, Tuple
 
-__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axes", "chips"]
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_local_mesh", "make_serve_mesh",
+           "parse_mesh_spec", "mesh_axes", "chips"]
+
+
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` (and the
+    ``AxisType`` enum itself) only exist on newer jax; older versions
+    get the same Auto-typed mesh by default."""
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds the 2-pod axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """Single-process mesh over whatever devices exist (tests, examples)."""
-    n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((len(jax.devices()), 1), ("data", "model"))
+
+
+def parse_mesh_spec(spec: str) -> Tuple[int, int]:
+    """'8x1' -> (data=8, model=1) (the serve-CLI ``--mesh`` format)."""
+    try:
+        d, m = (int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"mesh spec must be DATAxMODEL (e.g. '8x1'), "
+                         f"got {spec!r}") from None
+    if d < 1 or m < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {spec!r}")
+    return d, m
+
+
+def make_serve_mesh(data: Optional[int] = None, model: int = 1):
+    """(data, model) serving mesh over the first ``data * model`` local
+    devices (default: all of them data-parallel).
+
+    This is the multi-device serving topology: batch shards over
+    'data', packed inner weights optionally tensor-shard over 'model'
+    (SERVE_RULES), and with ``--xla_force_host_platform_device_count=N``
+    the same mesh drives N placeholder CPU devices for tests/benches.
+    """
+    n_avail = len(jax.devices())
+    if data is None:
+        data = n_avail // model
+    if data < 1:
+        raise ValueError(
+            f"model axis {model} exceeds the {n_avail} available devices "
+            f"(a {0}x{model} mesh has no data shards)")
+    need = data * model
+    if need > n_avail:
+        raise ValueError(
+            f"serve mesh {data}x{model} needs {need} devices, "
+            f"have {n_avail} (force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    devices = np.asarray(jax.devices()[:need]).reshape(data, model)
+    return jax.sharding.Mesh(devices, ("data", "model"))
 
 
 def mesh_axes(mesh) -> tuple:

@@ -26,10 +26,19 @@ DSE in core/planner.py) assigns each layer its own
 per-layer formats through the shared funnel (depth-heterogeneous LM
 plans serve via format-grouped scans), so switching plan points is a
 re-pack, never a new serve graph implementation.
+
+Multi-device serving (DESIGN.md §8): ``--mesh DxM`` shards the packed
+tree and the batch over a (data, model) serve mesh; ``--devices N``
+forces N host CPU devices first (XLA placeholder topology — the
+laptop-scale stand-in for a real slice), e.g.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch resnet18 \
+        --reduced --devices 8 --mesh 8x1 --batch 32
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -40,10 +49,11 @@ from repro import configs
 from repro.checkpoint import CheckpointStore
 from repro.core.plan import PrecisionPlan
 from repro.core.precision import PrecisionPolicy
+from repro.launch.mesh import make_serve_mesh, mesh_axes, parse_mesh_spec
 from repro.runtime.serve import Generator, ImageServer, pack_for_serving
 
 
-def _serve_cnn(api, policy_or_plan, args) -> int:
+def _serve_cnn(api, policy_or_plan, args, mesh) -> int:
     """Batched image serving of a packed CNN (optionally plan-wise)."""
     mod, cfg = api.mod, api.cfg
     rng = jax.random.PRNGKey(args.seed)
@@ -63,7 +73,7 @@ def _serve_cnn(api, policy_or_plan, args) -> int:
     plan = (policy_or_plan if isinstance(policy_or_plan, PrecisionPlan)
             else None)
     server = ImageServer(api=api, params=packed, plan=plan,
-                         batch_buckets=(args.batch,))
+                         batch_buckets=(args.batch,), mesh=mesh)
     imgs = np.asarray(
         np.random.default_rng(args.seed).normal(
             0.4, 0.5, (args.batch, cfg.img_size, cfg.img_size, 3)),
@@ -97,7 +107,27 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host CPU devices (placeholder topology; "
+                         "must run before the first jax computation)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve mesh 'DATAxMODEL' (e.g. 8x1): shard the "
+                         "packed tree + batch across local devices")
     args = ap.parse_args(argv)
+
+    if args.devices:
+        # Device count locks at the first backend initialization; jax is
+        # imported but nothing has touched devices yet at this point.
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+    mesh = None
+    if args.mesh is not None:
+        d, m = parse_mesh_spec(args.mesh)
+        mesh = make_serve_mesh(d, m)
+        print(f"[serve] mesh {dict(mesh_axes(mesh))} over "
+              f"{mesh.devices.size} of {len(jax.devices())} devices")
 
     if args.fp_baseline:
         policy = PrecisionPolicy(quantize=False)
@@ -122,7 +152,7 @@ def main(argv=None) -> int:
     if plan is not None:
         plan.validate_layers(api.plan_layer_names())
     if api.family == "cnn":
-        return _serve_cnn(api, api.policy, args)
+        return _serve_cnn(api, api.policy, args, mesh)
 
     rng = jax.random.PRNGKey(args.seed)
     # Init/restore always use the uniform single-stack layout: trainer
@@ -140,7 +170,7 @@ def main(argv=None) -> int:
         print(f"[serve] restored params from {args.ckpt_dir}")
 
     t0 = time.perf_counter()
-    packed = pack_for_serving(api, params)
+    packed = pack_for_serving(api, params, mesh=mesh)
     t_pack = time.perf_counter() - t0
     n_bytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(packed))
     if isinstance(api.policy, PrecisionPlan):
@@ -153,7 +183,7 @@ def main(argv=None) -> int:
     print(f"[serve] packed {args.arch} at {tag}: "
           f"{n_bytes/2**20:.1f} MiB in {t_pack:.2f}s")
 
-    gen = Generator(api=api, params=packed)
+    gen = Generator(api=api, params=packed, mesh=mesh)
     prompts = np.asarray(
         np.random.default_rng(args.seed).integers(
             0, api.cfg.vocab, (args.batch, args.prompt_len)), np.int32)

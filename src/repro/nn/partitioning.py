@@ -32,6 +32,7 @@ __all__ = [
     "current_rules",
     "logical_to_spec",
     "sharding_for",
+    "replicated",
     "tree_shardings",
     "constrain",
 ]
@@ -158,6 +159,12 @@ def sharding_for(
     rules: Optional[Rules] = None,
 ) -> NamedSharding:
     return NamedSharding(mesh, logical_to_spec(axes, rules, mesh))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement — boundary/embedding layers and packed
+    CNN trees at serve time (jit accepts it as a whole-subtree prefix)."""
+    return NamedSharding(mesh, P())
 
 
 def tree_shardings(axes_tree, mesh: Mesh, rules: Optional[Rules] = None):

@@ -1,0 +1,481 @@
+"""Continuous-batching serving front end: admission queue -> batched compute.
+
+``runtime/serve.py`` owns the *compute* side of deployment (packed
+weights, one jitted graph per batch bucket, optional device-mesh
+sharding).  This module owns the *traffic* side: individual requests
+arrive one at a time, and a scheduler decides when to coalesce them into
+the fixed batch shapes the compiled graphs accept.
+
+Two schedulers, one per family shape:
+
+  * ``ImageScheduler`` (CNN): requests are independent single images.
+    The admission queue coalesces them into ``ImageServer``'s batch
+    buckets — a batch dispatches as soon as the largest bucket fills, or
+    when the oldest request has waited ``max_wait_s`` (classic
+    batching-window policy), so latency is bounded while throughput
+    comes from full buckets.
+
+  * ``GenerateScheduler`` (LM): requests are (prompt, n_new) generation
+    jobs of different lengths and lifetimes.  The scheduler keeps a
+    fixed number of decode SLOTS; each ``step()`` first admits waiting
+    requests into free slots (prefilling same-length prompts as one
+    batched prefill), then advances every in-flight slot by one decode
+    token — prefill interleaves with in-flight decode instead of
+    waiting for the current batch to finish (continuous batching).
+    Slots at the same sequence position share one decode call (the
+    decode step's cache write/attention mask take a single scalar
+    ``length``), padded up to a decode bucket so the jit cache stays
+    bounded.
+
+Both schedulers are DETERMINISTIC and clock-injectable: ``clock`` is any
+zero-arg callable returning seconds (tests pass a fake), every request
+gets per-phase timestamps (submit / admit / done) on its ``Ticket``, and
+``max_queue`` gives backpressure — ``submit`` raises ``QueueFull``
+instead of buffering unboundedly.
+
+Per-request results are independent of arrival order and batch
+composition: batch entries never mix (every model op is per-example on
+the batch axis), and padding duplicates an existing row whose outputs
+are discarded — so a request's tokens/logits are bit-identical whether
+it was served alone, coalesced, or interleaved mid-decode.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.serve import _pad_batch
+
+__all__ = ["QueueFull", "Ticket", "ImageScheduler", "GenerateScheduler"]
+
+
+class QueueFull(RuntimeError):
+    """Backpressure: the admission queue is at ``max_queue``; the caller
+    should shed load or retry later (HTTP 429 territory)."""
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One request's handle: result + per-phase latency accounting."""
+
+    id: int
+    payload: Any = None
+    n_new: int = 0                      # LM only: tokens requested
+    t_submit: float = 0.0
+    t_admit: Optional[float] = None     # first compute dispatch
+    t_done: Optional[float] = None
+    result: Optional[np.ndarray] = None
+    done: bool = False
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        return None if self.t_admit is None else self.t_admit - self.t_submit
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+
+class _SchedulerBase:
+    """Queue + accounting shared by both front ends.
+
+    A scheduler is a LONG-RUNNING component: latency statistics are
+    kept as running aggregates (O(1) memory), the retained
+    ticket/event history is bounded by ``history`` (the newest entries,
+    for debugging/tests), and a completed ticket drops its input
+    payload — callers hold their own ``Ticket`` reference for the
+    result.
+    """
+
+    def __init__(self, *, max_queue: int, max_wait_s: float,
+                 clock: Callable[[], float], history: int = 1024):
+        self.max_queue = int(max_queue)
+        self.max_wait_s = float(max_wait_s)
+        self.clock = clock
+        self._queue: Deque[Ticket] = collections.deque()
+        self._ids = itertools.count()
+        self.rejected = 0
+        self.served: Deque[Ticket] = collections.deque(maxlen=history)
+        self.events: Deque[Tuple[int, str, Tuple[int, ...]]] = \
+            collections.deque(maxlen=max(4 * history, 4096))
+        self._tick = 0
+        self._n_served = 0
+        self._lat_sum = self._lat_max = self._qw_sum = 0.0
+
+    def _enqueue(self, ticket: Ticket) -> Ticket:
+        if len(self._queue) >= self.max_queue:
+            self.rejected += 1
+            raise QueueFull(
+                f"admission queue full ({self.max_queue} waiting); "
+                f"retry later")
+        self._queue.append(ticket)
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def _log(self, kind: str, tickets: Sequence[Ticket]) -> None:
+        self.events.append((self._tick, kind, tuple(t.id for t in tickets)))
+
+    def _complete(self, ticket: Ticket) -> None:
+        ticket.t_done = self.clock()
+        ticket.done = True
+        ticket.payload = None  # the result is what callers keep
+        self._n_served += 1
+        self._lat_sum += ticket.latency_s
+        self._lat_max = max(self._lat_max, ticket.latency_s)
+        self._qw_sum += ticket.queue_wait_s
+        self.served.append(ticket)
+
+    def stats(self) -> Dict[str, float]:
+        """Aggregate latency accounting over completed requests."""
+        n = self._n_served
+        return {
+            "served": float(n),
+            "rejected": float(self.rejected),
+            "pending": float(self.pending),
+            "mean_latency_s": self._lat_sum / n if n else 0.0,
+            "max_latency_s": self._lat_max,
+            "mean_queue_wait_s": self._qw_sum / n if n else 0.0,
+        }
+
+
+# ---------------------------------------------------------------------------
+# CNN: bucket coalescing
+# ---------------------------------------------------------------------------
+
+
+class ImageScheduler(_SchedulerBase):
+    """Admission queue in front of an ``ImageServer``-shaped backend.
+
+    ``server`` needs ``.predict(images) -> logits`` and
+    ``.batch_buckets`` (ascending tuple); unit tests inject fakes.
+
+    Admission rule: a batch dispatches when the queue can fill the
+    largest bucket, or when the oldest waiting request is older than
+    ``max_wait_s`` (then the smallest bucket that fits the stragglers
+    is used — the server pads the remainder).  ``step(flush=True)``
+    dispatches whatever is queued regardless of the window (drain).
+    """
+
+    def __init__(self, server, *, max_queue: int = 256,
+                 max_wait_s: float = 0.005,
+                 clock: Callable[[], float] = time.monotonic,
+                 history: int = 1024):
+        super().__init__(max_queue=max_queue, max_wait_s=max_wait_s,
+                         clock=clock, history=history)
+        self.server = server
+        self.buckets = tuple(sorted(server.batch_buckets))
+        self.dispatched_batches: Deque[int] = collections.deque(
+            maxlen=history)
+        # Expected request shape: from the server's model config when it
+        # carries one (ImageServer), else locked to the first request.
+        cfg = getattr(getattr(server, "api", None), "cfg", None)
+        self._img_shape = ((cfg.img_size, cfg.img_size, 3)
+                           if hasattr(cfg, "img_size") else None)
+
+    def submit(self, image: np.ndarray) -> Ticket:
+        """One (H, W, C) image -> a ticket (raises ``QueueFull``).
+
+        Shape-checked here: a malformed request must be rejected at the
+        door, not explode a dispatch and strand its whole batch."""
+        image = np.asarray(image)
+        if self._img_shape is None:
+            if image.ndim != 3:
+                raise ValueError(
+                    f"expected an (H, W, C) image, got shape {image.shape}")
+            self._img_shape = image.shape
+        elif image.shape != self._img_shape:
+            raise ValueError(
+                f"image shape {image.shape} does not match this "
+                f"scheduler's {self._img_shape}")
+        t = Ticket(id=next(self._ids), payload=image,
+                   t_submit=self.clock())
+        return self._enqueue(t)
+
+    def step(self, flush: bool = False) -> int:
+        """Dispatch at most one batch; returns requests completed."""
+        self._tick += 1
+        if not self._queue:
+            return 0
+        oldest = self.clock() - self._queue[0].t_submit
+        if (len(self._queue) < self.buckets[-1] and oldest < self.max_wait_s
+                and not flush):
+            return 0  # keep coalescing inside the batching window
+        take = min(len(self._queue), self.buckets[-1])
+        batch = [self._queue.popleft() for _ in range(take)]
+        now = self.clock()
+        for t in batch:
+            t.t_admit = now
+        self._log("dispatch", batch)
+        self.dispatched_batches.append(take)
+        logits = np.asarray(self.server.predict(
+            np.stack([t.payload for t in batch])))
+        for i, t in enumerate(batch):
+            t.result = logits[i]
+            self._complete(t)
+        return take
+
+    def drain(self, max_steps: int = 10_000) -> int:
+        """Serve until the queue is empty (flushing partial batches)."""
+        n = 0
+        for _ in range(max_steps):
+            if not self._queue:
+                return n
+            n += self.step(flush=True)
+        raise RuntimeError("drain did not converge")
+
+
+# ---------------------------------------------------------------------------
+# LM: prefill/decode slot interleaving (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Slot:
+    ticket: Ticket
+    cache: Any             # per-request cache tree (batch dim kept at 1)
+    last_tok: np.ndarray   # (1, 1) int32
+    pos: int               # tokens currently in the cache
+    remaining: int         # decode steps still owed
+    out: List[int]
+
+
+def _cache_batch_axes(api, max_len: int):
+    """Which axis of every decode-cache leaf is the request (batch) axis.
+
+    Probed structurally — ``cache_specs(1, L)`` vs ``cache_specs(2, L)``
+    differ in exactly the batch dimension — so slot insert/extract works
+    for any family whose cache is a pytree of batched arrays, without
+    per-family layout knowledge.
+    """
+    is_leaf = lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    a = api.cache_specs(1, max_len)
+    b = api.cache_specs(2, max_len)
+
+    def axis(s1, s2):
+        diffs = [i for i, (d1, d2) in enumerate(zip(s1.shape, s2.shape))
+                 if d1 != d2]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"cannot locate the batch axis of cache leaf {s1.shape}; "
+                f"continuous batching needs a per-request-sliceable cache")
+        return diffs[0]
+
+    return jax.tree.map(axis, a, b, is_leaf=is_leaf)
+
+
+class GenerateScheduler(_SchedulerBase):
+    """Continuous-batching front end over a packed LM ``Generator``.
+
+    ``gen`` supplies the jitted prefill/decode and the cache-growing
+    logic; this class owns slots, admission and per-request accounting.
+
+    * ``slots``: max requests decoding concurrently.
+    * ``max_len``: every slot's cache is allocated at this length, so
+      slots are shape-compatible and can share decode calls; a request
+      with ``prompt_len + n_new > max_len`` is rejected at submit.
+    * ``prefill_buckets`` / ``decode_buckets``: the allowed batch shapes
+      (groups are padded up by duplicating a row, so the jit cache holds
+      at most ``len(buckets)`` graphs per sequence shape).
+
+    Admission coalesces the FIFO head-run of same-prompt-length requests
+    into one batched prefill (held up to ``max_wait_s`` while below the
+    admittable group size, like the CNN batching window; the default 0.0
+    admits immediately); decode groups in-flight slots by their current
+    position (the decode step takes one scalar ``length``) and advances
+    each group one token per ``step()``.
+
+    A mesh-sharded ``Generator`` works too: buckets round up to the data
+    axis and ``max_len`` to the model axis (the cache's kv_seq split),
+    and merged groups re-pin to the generator's cache sharding.
+    """
+
+    def __init__(self, gen, *, slots: int = 4, max_len: int = 64,
+                 prefill_buckets: Tuple[int, ...] = (1, 2, 4),
+                 decode_buckets: Tuple[int, ...] = (1, 2, 4, 8),
+                 max_queue: int = 256, max_wait_s: float = 0.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 history: int = 1024):
+        super().__init__(max_queue=max_queue, max_wait_s=max_wait_s,
+                         clock=clock, history=history)
+        if gen.api.needs_frames:
+            raise NotImplementedError(
+                "GenerateScheduler does not carry per-request audio frames")
+        self.gen = gen
+        self.api = gen.api
+        self.n_slots = int(slots)
+        # A meshed Generator jits with explicit shardings: batch shapes
+        # must split evenly over 'data', the cache length over 'model'.
+        n_data = n_model = 1
+        if gen.mesh is not None:
+            n_data = gen.mesh.shape.get("data", 1)
+            n_model = gen.mesh.shape.get("model", 1)
+        self.max_len = -(-int(max_len) // n_model) * n_model
+        rnd = lambda bs: tuple(sorted({-(-b // n_data) * n_data for b in bs}))
+        self.prefill_buckets = rnd(prefill_buckets)
+        self.decode_buckets = rnd(decode_buckets)
+        self._slots: List[Optional[_Slot]] = [None] * self.n_slots
+        self._batch_axes = _cache_batch_axes(self.api, self.max_len)
+
+    # --- slot cache plumbing (family-agnostic via the axis probe) ----------
+
+    def _merge(self, caches: List[Any], pad_to: int):
+        """Per-slot cache trees -> one batched tree, padded by repeating
+        the last real row (its outputs are discarded)."""
+        g = len(caches)
+        idx = jnp.asarray(list(range(g)) + [g - 1] * (pad_to - g))
+
+        def leaf(ax, *xs):
+            m = xs[0] if g == 1 else jnp.concatenate(xs, axis=ax)
+            return jnp.take(m, idx, axis=ax) if pad_to != g else m
+
+        merged = jax.tree.map(leaf, self._batch_axes, *caches)
+        cache_sh = getattr(self.gen, "_cache_sh", None)
+        if cache_sh is not None:
+            # the meshed decode jit pins its cache in_shardings; slicing/
+            # concat left the merged tree on whatever layout jax chose
+            merged = jax.device_put(merged, cache_sh)
+        return merged
+
+    def _extract(self, cache, i: int):
+        """Row ``i`` of a batched cache tree, batch dim kept at size 1."""
+        return jax.tree.map(
+            lambda ax, x: jax.lax.slice_in_dim(x, i, i + 1, axis=ax),
+            self._batch_axes, cache)
+
+    # --- admission ---------------------------------------------------------
+
+    def submit(self, tokens: np.ndarray, n_new: int) -> Ticket:
+        """One (L,) or (1, L) prompt -> a ticket (raises ``QueueFull``)."""
+        toks = np.asarray(tokens, np.int32).reshape(1, -1)
+        if n_new < 1:
+            raise ValueError(f"n_new must be >= 1, got {n_new}")
+        if toks.shape[1] + n_new > self.max_len:
+            raise ValueError(
+                f"prompt {toks.shape[1]} + n_new {n_new} exceeds the "
+                f"scheduler's max_len {self.max_len}")
+        t = Ticket(id=next(self._ids), payload=toks, n_new=int(n_new),
+                   t_submit=self.clock())
+        return self._enqueue(t)
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def _admit(self, flush: bool = False) -> int:
+        """Prefill the FIFO head-run of same-length prompts into free
+        slots (one batched prefill per head-run), holding below-capacity
+        groups inside the ``max_wait_s`` batching window."""
+        free = self._free_slots()
+        if not free or not self._queue:
+            return 0
+        plen = self._queue[0].payload.shape[1]
+        limit = min(len(free), self.prefill_buckets[-1])
+        run = 0
+        while (run < len(self._queue) and run < limit
+               and self._queue[run].payload.shape[1] == plen):
+            run += 1
+        oldest = self.clock() - self._queue[0].t_submit
+        if run < limit and oldest < self.max_wait_s and not flush:
+            return 0  # keep coalescing prompts inside the window
+        group: List[Ticket] = []
+        while (self._queue and len(group) < limit
+               and self._queue[0].payload.shape[1] == plen):
+            group.append(self._queue.popleft())
+        g = len(group)
+        bucket = next(b for b in self.prefill_buckets if b >= g)
+        toks = _pad_batch(np.concatenate([t.payload for t in group]), bucket)
+        now = self.clock()
+        for t in group:
+            t.t_admit = now
+        self._log("prefill", group)
+        logits, pre_cache = self.gen._prefill(self.gen.params,
+                                              {"tokens": jnp.asarray(toks)})
+        cache = self.gen._grow_cache(pre_cache, bucket, plen, self.max_len)
+        first = np.asarray(jnp.argmax(logits, -1), np.int32)
+        finished = 0
+        for i, t in enumerate(group):
+            slot = _Slot(ticket=t, cache=self._extract(cache, i),
+                         last_tok=first[i].reshape(1, 1), pos=plen,
+                         remaining=t.n_new - 1, out=[int(first[i])])
+            if slot.remaining == 0:  # n_new == 1: done at prefill
+                self._finish(slot)
+                finished += 1
+            else:
+                self._slots[free.pop(0)] = slot
+        return finished
+
+    # --- decode ------------------------------------------------------------
+
+    def _finish(self, slot: _Slot) -> None:
+        t = slot.ticket
+        t.result = np.asarray(slot.out, np.int32)
+        self._complete(t)
+
+    def _decode_tick(self) -> int:
+        """Advance every in-flight slot one token; same-position slots
+        share one decode call (scalar ``length``)."""
+        groups: Dict[int, List[int]] = collections.defaultdict(list)
+        for i, s in enumerate(self._slots):
+            if s is not None:
+                groups[s.pos].append(i)
+        finished = 0
+        for pos in sorted(groups):
+            idxs = groups[pos]
+            slots = [self._slots[i] for i in idxs]
+            g = len(slots)
+            bucket = next((b for b in self.decode_buckets if b >= g),
+                          self.decode_buckets[-1])
+            if g > bucket:  # more same-position slots than the largest
+                idxs, slots = idxs[:bucket], slots[:bucket]  # bucket: rest
+                g = bucket                                   # go next step
+            cache = self._merge([s.cache for s in slots], bucket)
+            toks = _pad_batch(np.concatenate([s.last_tok for s in slots]),
+                              bucket)
+            self._log("decode", [s.ticket for s in slots])
+            logits, cache = self.gen._decode(
+                self.gen.params, cache, jnp.asarray(toks),
+                jnp.asarray(pos, jnp.int32))
+            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for i, (slot_i, s) in enumerate(zip(idxs, slots)):
+                s.cache = self._extract(cache, i)
+                s.last_tok = nxt[i].reshape(1, 1)
+                s.pos += 1
+                s.remaining -= 1
+                s.out.append(int(nxt[i]))
+                if s.remaining == 0:
+                    self._finish(s)
+                    self._slots[slot_i] = None
+                    finished += 1
+        return finished
+
+    # --- the drive loop ----------------------------------------------------
+
+    def step(self, flush: bool = False) -> int:
+        """One scheduler tick: admit (prefill) then decode one token for
+        every in-flight slot.  Returns requests completed this tick
+        (including ``n_new == 1`` jobs that finish at prefill)."""
+        self._tick += 1
+        return self._admit(flush=flush) + self._decode_tick()
+
+    def run_until_idle(self, max_steps: int = 100_000) -> int:
+        """Serve until queue and slots are empty (flushing the admission
+        window — a drive loop with no new traffic must terminate)."""
+        n = 0
+        for _ in range(max_steps):
+            if not self._queue and self.active == 0:
+                return n
+            n += self.step(flush=True)
+        raise RuntimeError("run_until_idle did not converge")

@@ -12,6 +12,18 @@ just CNNs: the spec markers carry each layer's workload name, so
 ``pack_for_serving`` packs every layer at its own (w_bits, k) and both
 ``Generator`` (LM prefill/decode, format-grouped scans) and
 ``ImageServer`` (CNN batched forward) serve the same per-layer formats.
+
+Multi-device serving: pass ``mesh=`` (``launch.mesh.make_serve_mesh``)
+to ``pack_for_serving`` / ``ImageServer`` / ``Generator`` and the packed
+tree is PLACED across the mesh — inner packed digit planes by
+``SERVE_RULES`` (tensor-shard over 'model' where a rule names it,
+replicated on a pure data-parallel mesh), boundary/embedding layers and
+the tiny folded-BN pairs replicated — while the batch axis shards over
+'data'.  The step functions are jitted with explicit in/out shardings,
+so batched CNN forward and LM prefill/decode run data-parallel.  Batch
+entries never mix, so sharded serving is bit-identical to the
+single-device path (tests/test_sharded_serve.py proves it for mixed
+w8/w4/w2 plans); with ``mesh=None`` nothing changes at all.
 """
 from __future__ import annotations
 
@@ -22,6 +34,7 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.launch import steps as steps_lib
 from repro.nn import param as nnp
@@ -29,10 +42,26 @@ from repro.nn import partitioning as part
 from repro.nn import quantized as Q
 from repro.nn.layers import pack_embed
 
-__all__ = ["pack_for_serving", "Generator", "ImageServer"]
+__all__ = ["pack_for_serving", "serve_shardings", "Generator", "ImageServer"]
 
 
-def pack_for_serving(api, train_params):
+def serve_shardings(api, mesh: Mesh):
+    """NamedSharding tree for this api's packed serve tree (SERVE_RULES).
+
+    LM families carry logical axes on every serve-spec leaf, so the
+    rules place each packed plane (replicated on a (N, 1) data-parallel
+    mesh; 'mlp_packed'/'heads_packed' tensor-shard over 'model' when the
+    mesh has one).  CNN packed trees (folded-BN tuples, per-layer plane
+    formats) replicate wholesale — packed planes are w_Q/8 the int8
+    bytes, the paper's whole point, so every device holds the full net.
+    """
+    if api.family == "cnn":
+        return part.replicated(mesh)
+    return part.tree_shardings(api.param_axes("serve"), mesh,
+                               part.SERVE_RULES)
+
+
+def pack_for_serving(api, train_params, mesh: Optional[Mesh] = None):
     """Trained QAT tree -> packed serve tree matching specs('serve').
 
     Works for ANY api.policy — uniform or a layer-wise plan: families
@@ -40,6 +69,11 @@ def pack_for_serving(api, train_params):
     uniform-trained stack into the plan's groups (``regroup_layers``,
     a pure slicing re-pack), then the marker-named funnel packs every
     layer at its own resolved format.
+
+    With ``mesh=`` the packed tree is placed across the mesh through
+    ``serve_shardings`` (digit planes by SERVE_RULES, boundary/embedding
+    replicated) so the serve step functions find their weights already
+    distributed.
     """
     regroup = getattr(api.mod, "regroup_layers", None)
     if regroup is not None:
@@ -49,7 +83,22 @@ def pack_for_serving(api, train_params):
     # embeddings: boundary-class PTQ to int8 codes + step size
     if "embed" in packed and api.policy.quantize and "table" in packed["embed"]:
         packed["embed"] = pack_embed(packed["embed"], api.policy)
+    if mesh is not None:
+        packed = jax.device_put(packed, serve_shardings(api, mesh))
     return packed
+
+
+def _is_sds(x) -> bool:
+    return isinstance(x, jax.ShapeDtypeStruct)
+
+
+def _pad_batch(arr: np.ndarray, to: int) -> np.ndarray:
+    """Pad the leading axis up to ``to`` by repeating the last row (the
+    padded rows' outputs are discarded; batch entries never mix)."""
+    if arr.shape[0] == to:
+        return arr
+    reps = np.repeat(arr[-1:], to - arr.shape[0], axis=0)
+    return np.concatenate([arr, reps])
 
 
 @dataclasses.dataclass
@@ -70,6 +119,13 @@ class ImageServer:
     policy with a layer-wise one — ``params`` must then be packed under
     the same plan.  Serving a different plan point is a re-pack plus a
     new ``ImageServer``; the model and kernel code never change.
+
+    ``mesh`` (``launch.mesh.make_serve_mesh``) turns every bucket graph
+    data-parallel: weights replicate across the mesh, the image batch
+    shards over 'data' with explicit jit in/out shardings, and each
+    bucket is rounded up to a multiple of the data-axis size so every
+    device gets an equal shard.  Logits are bit-identical to the
+    ``mesh=None`` path — batch entries never mix.
     """
 
     api: Any
@@ -78,12 +134,19 @@ class ImageServer:
     impl: str = "auto"
     dataflow: str = "auto"
     plan: Any = None
+    mesh: Optional[Mesh] = None
 
     def __post_init__(self):
         if self.api.family != "cnn":
             raise ValueError(f"ImageServer serves CNNs, got family "
                              f"{self.api.family!r}")
-        self.batch_buckets = tuple(sorted(self.batch_buckets))
+        if self.mesh is not None:
+            n_data = self.mesh.shape.get("data", 1)
+            self.batch_buckets = tuple(
+                -(-b // n_data) * n_data for b in self.batch_buckets)
+            self.params = jax.device_put(self.params,
+                                         part.replicated(self.mesh))
+        self.batch_buckets = tuple(sorted(set(self.batch_buckets)))
         self._fns: Dict[int, Any] = {}
 
     def _fn(self, bucket: int):
@@ -91,9 +154,15 @@ class ImageServer:
         if bucket not in self._fns:
             mod, cfg = self.api.mod, self.api.cfg
             pol = self.plan if self.plan is not None else self.api.policy
-            self._fns[bucket] = jax.jit(
-                lambda p, im: mod.serve_forward(
-                    cfg, p, im, pol, impl=self.impl, dataflow=self.dataflow))
+            fn = lambda p, im: mod.serve_forward(
+                cfg, p, im, pol, impl=self.impl, dataflow=self.dataflow)
+            if self.mesh is None:
+                self._fns[bucket] = jax.jit(fn)
+            else:
+                rep = part.replicated(self.mesh)
+                dsh = NamedSharding(self.mesh, P("data"))
+                self._fns[bucket] = jax.jit(
+                    fn, in_shardings=(rep, dsh), out_shardings=dsh)
         return self._fns[bucket]
 
     def _bucket_for(self, n: int) -> int:
@@ -136,6 +205,13 @@ class Generator:
     ``params`` must then be packed under the same plan.  Serving a
     different plan point is a re-pack plus a new ``Generator``; the
     model and kernel code never change.
+
+    ``mesh`` makes prefill and decode data-parallel: ``params`` place by
+    SERVE_RULES (``pack_for_serving(mesh=...)`` already did this; the
+    jit in_shardings pin it), tokens and the decode cache shard their
+    batch axis over 'data' (cache kv_seq additionally over 'model' when
+    the mesh has one), and the token batch pads up to a multiple of the
+    data-axis size.  Outputs are bit-identical to ``mesh=None``.
     """
 
     api: Any
@@ -143,33 +219,86 @@ class Generator:
     max_len: int = 64
     mode: str = "serve"
     plan: Any = None
+    mesh: Optional[Mesh] = None
 
     def __post_init__(self):
         if self.plan is not None:
             self.api = dataclasses.replace(self.api, policy=self.plan)
-        self._prefill = jax.jit(steps_lib.make_prefill_fn(
-            self.api, mode=self.mode))
-        self._decode = jax.jit(steps_lib.make_decode_fn(
-            self.api, mode=self.mode))
+        prefill_fn = steps_lib.make_prefill_fn(self.api, mode=self.mode)
+        decode_fn = steps_lib.make_decode_fn(self.api, mode=self.mode)
+        if self.mesh is None:
+            self._cache_sh = None
+            self._tok_sh = None
+            self._prefill = jax.jit(prefill_fn)
+            self._decode = jax.jit(decode_fn)
+            return
+        # Explicit-sharding jits, mirroring launch/dryrun._lower_step:
+        # params by SERVE_RULES, batch over 'data', decode cache by
+        # cache_axes (batch over 'data', kv_seq over 'model').
+        mesh, rules = self.mesh, part.SERVE_RULES
+        p_sh = serve_shardings(self.api, mesh)
+        tok_sh = part.sharding_for(("batch", "seq"), mesh, rules)
+        self._tok_sh = tok_sh
+        batch_sh = {"tokens": tok_sh}
+        if self.api.needs_frames:
+            batch_sh["frames"] = part.sharding_for(
+                ("batch", "frames", "act_embed"), mesh, rules)
+        try:
+            cache_sh = part.tree_shardings(self.api.cache_axes(), mesh, rules)
+            # jit in_shardings errors lazily at the first call — check the
+            # tree structure against cache_specs NOW so mismatched
+            # families fall back instead of exploding mid-generate.
+            specs = self.api.cache_specs(2, 8)
+            if jax.tree.structure(specs, is_leaf=_is_sds) != \
+                    jax.tree.structure(cache_sh):
+                raise ValueError("cache_axes does not match cache layout")
+            self._cache_sh = cache_sh
+            self._decode = jax.jit(
+                decode_fn,
+                in_shardings=(p_sh, self._cache_sh, tok_sh, None),
+                out_shardings=(None, self._cache_sh))
+        except Exception:
+            # families whose decode cache tree differs from cache_axes
+            # (or has none): fall back to sharding propagation.
+            self._cache_sh = None
+            self._decode = jax.jit(decode_fn)
+        self._prefill = jax.jit(prefill_fn, in_shardings=(p_sh, batch_sh))
 
     def generate(self, tokens: np.ndarray, n_new: int,
                  frames: Optional[np.ndarray] = None) -> np.ndarray:
         b, s = tokens.shape
+        n_data = self.mesh.shape.get("data", 1) if self.mesh is not None else 1
+        gb = -(-b // n_data) * n_data  # pad batch to an even device split
+        tokens = _pad_batch(np.asarray(tokens), gb)
         batch = {"tokens": jnp.asarray(tokens)}
         if self.api.needs_frames:
-            batch["frames"] = (jnp.asarray(frames) if frames is not None else
-                               jnp.zeros((b, self.api.cfg.n_audio,
-                                          self.api.cfg.d_model), jnp.float32))
+            frames = (np.asarray(frames) if frames is not None else
+                      np.zeros((b, self.api.cfg.n_audio,
+                                self.api.cfg.d_model), np.float32))
+            batch["frames"] = jnp.asarray(_pad_batch(frames, gb))
         logits, pre_cache = self._prefill(self.params, batch)
-        cache = self._grow_cache(pre_cache, b, s, s + n_new)
+        # kv_seq shards over 'model' (SERVE_RULES): round the cache
+        # length up to an even split; the tail is never attended
+        # (decode masks by `length`), so results are unchanged.
+        n_model = (self.mesh.shape.get("model", 1)
+                   if self.mesh is not None else 1)
+        max_len = -(-(s + n_new) // n_model) * n_model
+        cache = self._grow_cache(pre_cache, gb, s, max_len)
+        if self._cache_sh is not None:
+            cache = jax.device_put(cache, self._cache_sh)
         out = [np.asarray(jnp.argmax(logits, -1))]
         tok = jnp.argmax(logits, -1)[:, None]
         length = jnp.asarray(s, jnp.int32)
         for i in range(n_new - 1):
+            if self._tok_sh is not None:
+                # argmax output sharding follows the (possibly
+                # vocab-sharded) logits; re-pin it to the batch spec the
+                # decode jit was compiled for.
+                tok = jax.device_put(tok, self._tok_sh)
             logits, cache = self._decode(self.params, cache, tok, length + i)
             tok = jnp.argmax(logits, -1)[:, None]
             out.append(np.asarray(tok[:, 0]))
-        return np.stack(out, axis=1)
+        return np.stack(out, axis=1)[:b]
 
     def _grow_cache(self, pre_cache, b, s, max_len):
         """Copy prefill caches into decode-sized buffers (family-aware)."""

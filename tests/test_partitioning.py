@@ -82,6 +82,25 @@ class TestMesh:
         ax = mesh_lib.mesh_axes(mesh)
         assert [a for a, _ in ax] == ["data", "model"]
 
+    def test_serve_mesh_defaults_to_all_devices(self):
+        mesh = mesh_lib.make_serve_mesh()
+        assert set(mesh.axis_names) == {"data", "model"}
+        assert mesh.devices.size == len(jax.devices())
+
+    def test_serve_mesh_rejects_infeasible_shapes(self):
+        n = len(jax.devices())
+        with pytest.raises(ValueError):  # more devices than exist
+            mesh_lib.make_serve_mesh(n + 1, 1)
+        with pytest.raises(ValueError):  # model axis > devices: data=0
+            mesh_lib.make_serve_mesh(model=2 * n)
+
+    def test_parse_mesh_spec(self):
+        assert mesh_lib.parse_mesh_spec("8x1") == (8, 1)
+        assert mesh_lib.parse_mesh_spec("4X2") == (4, 2)
+        for bad in ("8", "0x4", "ax2"):
+            with pytest.raises(ValueError):
+                mesh_lib.parse_mesh_spec(bad)
+
 
 class TestTreeShardings:
     def test_tree_map_over_axes_tree(self):

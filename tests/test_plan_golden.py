@@ -1,0 +1,118 @@
+"""Golden regression tests for the plan-JSON schema + validate CLI.
+
+``tests/fixtures/plans/golden_resnet18_v1.json`` is a FROZEN v1 plan:
+if a schema change stops parsing it byte-for-byte round-trip, that
+change broke every plan users have on disk and must bump the version
+instead.  The known-bad fixtures pin the exact CLI exit codes and
+messages of ``python -m repro.core.plan validate`` — the CI schema gate
+— so error behavior is an interface, not an accident.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core.plan import LayerPlan, PrecisionPlan
+
+FIXTURES = Path(__file__).parent / "fixtures" / "plans"
+GOLDEN = FIXTURES / "golden_resnet18_v1.json"
+_SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def validate_cli(*paths, extra=()):
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (_SRC, env.get("PYTHONPATH")) if p)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.core.plan", "validate",
+         *map(str, paths), *extra],
+        env=env, capture_output=True, text=True, timeout=300)
+
+
+class TestGoldenPlan:
+    def test_cli_accepts_golden_exit_0(self):
+        r = validate_cli(GOLDEN)
+        assert r.returncode == 0, r.stderr
+        assert "[plan] ok" in r.stdout
+        assert "arch resnet18" in r.stdout
+
+    def test_golden_roundtrips_byte_identical(self):
+        """load -> dumps reproduces the frozen file exactly: the v1
+        serialization is stable (sorted keys, 2-space indent)."""
+        plan = PrecisionPlan.load(GOLDEN)
+        assert plan.dumps() == GOLDEN.read_text()
+
+    def test_golden_field_values_frozen(self):
+        plan = PrecisionPlan.load(GOLDEN)
+        assert plan.name == "golden_resnet18_v1"
+        assert plan.arch == "resnet18"
+        assert plan.distinct_wbits() == (2, 4, 8)
+        assert plan.layer("s1b1c2") == LayerPlan(
+            w_bits=2, k=2, channel_wise=True, dataflow="implicit")
+        assert plan.layer("s2b0c1") == plan.default  # unnamed -> default
+
+
+class TestKnownBadFixtures:
+    def test_unknown_key_exit_1(self):
+        r = validate_cli(FIXTURES / "bad_unknown_key.json")
+        assert r.returncode == 1
+        assert "INVALID" in r.stderr
+        assert "unknown plan keys: ['frobnicate']" in r.stderr
+
+    def test_duplicate_layer_exit_1(self):
+        r = validate_cli(FIXTURES / "bad_dup_layer.json")
+        assert r.returncode == 1
+        assert "INVALID" in r.stderr
+        assert "duplicate keys in plan JSON: ['s0b0c1']" in r.stderr
+
+    def test_wrong_arch_layers_exit_1(self):
+        r = validate_cli(FIXTURES / "bad_wrong_arch.json")
+        assert r.returncode == 1
+        assert "INVALID" in r.stderr
+        assert "absent from the model workload" in r.stderr
+        assert "l3.q" in r.stderr
+
+    def test_unknown_arch_exit_2(self):
+        r = validate_cli(FIXTURES / "bad_unknown_arch.json")
+        assert r.returncode == 2
+        assert "unknown arch 'resnet999'" in r.stderr
+
+    def test_arch_less_plan_needs_schema_only(self, tmp_path):
+        p = tmp_path / "no_arch.json"
+        PrecisionPlan.build({}, name="no_arch").save(p)
+        r = validate_cli(p)
+        assert r.returncode == 1
+        assert "no arch to validate" in r.stderr
+        r = validate_cli(p, extra=("--schema-only",))
+        assert r.returncode == 0
+
+    def test_one_bad_file_fails_the_batch(self):
+        r = validate_cli(GOLDEN, FIXTURES / "bad_unknown_key.json")
+        assert r.returncode == 1
+        assert "[plan] ok" in r.stdout  # golden still reported ok
+
+    def test_unknown_arch_does_not_mask_later_files(self):
+        """An unknown-arch plan must not abort the batch: later files
+        are still validated (exit stays 2 — the worst category seen)."""
+        r = validate_cli(FIXTURES / "bad_unknown_arch.json",
+                         FIXTURES / "bad_unknown_key.json", GOLDEN)
+        assert r.returncode == 2
+        assert "unknown arch 'resnet999'" in r.stderr
+        assert "unknown plan keys: ['frobnicate']" in r.stderr
+        assert "[plan] ok" in r.stdout
+
+
+class TestDuplicateLayerAPI:
+    def test_loads_rejects_duplicate_json_keys(self):
+        text = (FIXTURES / "bad_dup_layer.json").read_text()
+        # plain json silently drops the first entry; the schema must not
+        assert len(json.loads(text)["layers"]) == 1
+        with pytest.raises(ValueError, match="duplicate keys"):
+            PrecisionPlan.loads(text)
+
+    def test_constructor_rejects_duplicate_layers(self):
+        with pytest.raises(ValueError, match="duplicate plan layers"):
+            PrecisionPlan(layers=(("q", LayerPlan()), ("q", LayerPlan())))

@@ -1,0 +1,123 @@
+"""Property tests: PrecisionPlan JSON round-trips (hypothesis).
+
+Companion to the packing round-trip properties in ``test_packing.py``:
+any well-formed plan must survive ``dumps -> loads`` exactly (dataclass
+equality), serialization must be idempotent, and schema violations
+(unknown keys, bad field values) must be rejected for EVERY plan, not
+just the hand-written examples.  Runs under real hypothesis when
+installed (requirements-dev.txt; CI always has it); otherwise the
+``_hypothesis_stub`` skip-guard keeps the module collectable.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; the rest still run
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.plan import (LayerPlan, PrecisionPlan, as_plan,
+                             resolve_policy)
+from repro.core.precision import PrecisionPolicy
+
+_NAME_CHARS = "abcdefghij0123456789"
+_WBITS = (1, 2, 4, 8)
+_SLICES = (1, 2, 4, 8)
+_DATAFLOWS = ("auto", "im2col", "implicit")
+
+
+def _random_plan(seed: int) -> PrecisionPlan:
+    """Deterministic random plan (primitive-strategy friendly: the only
+    drawn value is the seed, so the same body runs under the stub-less
+    and the full-hypothesis path alike)."""
+    rng = np.random.default_rng(seed)
+    names = set()
+    n_layers = int(rng.integers(0, 7))
+    while len(names) < n_layers:
+        depth = rng.integers(1, 3)
+        names.add(".".join(
+            "".join(rng.choice(list(_NAME_CHARS), rng.integers(1, 7)))
+            for _ in range(depth)))
+    mk = lambda: LayerPlan(
+        w_bits=int(rng.choice(_WBITS)), k=int(rng.choice(_SLICES)),
+        channel_wise=bool(rng.integers(0, 2)),
+        dataflow=str(rng.choice(_DATAFLOWS)))
+    return PrecisionPlan.build(
+        {n: mk() for n in sorted(names)},
+        default=mk(),
+        a_bits=int(rng.choice((4, 8))),
+        boundary_bits=int(rng.choice(_WBITS)),
+        variant=str(rng.choice(("st", "sa"))),
+        quantize=bool(rng.integers(0, 2)),
+        name=f"prop_{seed}",
+        arch=str(rng.choice(("", "resnet18", "granite-8b"))))
+
+
+@settings(max_examples=80, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_json_roundtrip_exact(seed):
+    """loads(dumps(plan)) == plan for any well-formed plan."""
+    plan = _random_plan(seed)
+    back = PrecisionPlan.loads(plan.dumps())
+    assert back == plan
+    assert back.distinct_wbits() == plan.distinct_wbits()
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dumps_idempotent(seed):
+    """Serialization is a fixed point: dumps(loads(dumps(p))) == dumps(p)
+    — the property the frozen golden fixture pins for v1."""
+    plan = _random_plan(seed)
+    once = plan.dumps()
+    assert PrecisionPlan.loads(once).dumps() == once
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       key=st.sampled_from(["frobnicate", "w_bits", "Layers", "plan"]))
+def test_unknown_top_level_key_rejected(seed, key):
+    import json
+    obj = json.loads(_random_plan(seed).dumps())
+    obj[key] = 1
+    with pytest.raises(ValueError, match="unknown plan keys"):
+        PrecisionPlan.from_json(obj)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       w_bits=st.sampled_from([0, 3, 5, 16, -1]))
+def test_invalid_wbits_rejected(seed, w_bits):
+    import json
+    obj = json.loads(_random_plan(seed).dumps())
+    obj["default"]["w_bits"] = w_bits
+    with pytest.raises(ValueError):
+        PrecisionPlan.from_json(obj)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hierarchical_resolution_consistent(seed):
+    """layer(name) == the first matching scope-stripped entry, and
+    resolve_policy agrees with policy_for for every named layer."""
+    plan = _random_plan(seed)
+    for name, lp in plan.layers:
+        assert plan.layer(name) == lp
+        pol = resolve_policy(plan, name)
+        assert pol.inner_bits == lp.w_bits
+        assert pol.k == lp.k
+        # scoping: an un-named deeper scope falls back to this entry
+        assert plan.layer(f"zz.{name}") in (lp, dict(plan.layers).get(name))
+    assert plan.layer("never_named_xyz") == plan.default
+
+
+@settings(max_examples=40, deadline=None)
+@given(inner=st.sampled_from(_WBITS), k=st.sampled_from(_SLICES),
+       cw=st.booleans())
+def test_uniform_policy_degenerate_plan_roundtrip(inner, k, cw):
+    """A uniform policy -> degenerate plan -> JSON -> back resolves to
+    the same per-layer policy everywhere."""
+    pol = PrecisionPolicy(inner_bits=inner, k=k, channel_wise=cw)
+    plan = PrecisionPlan.loads(as_plan(pol).dumps())
+    got = resolve_policy(plan, "any_layer")
+    assert (got.inner_bits, got.k, got.channel_wise) == (inner, k, cw)
