@@ -25,6 +25,7 @@ MODULES = [
     ("micro", "benchmarks.kernel_micro"),
     ("serve", "benchmarks.resnet_serve"),
     ("sharded", "benchmarks.sharded_serve"),
+    ("slo", "benchmarks.slo_serve"),
     ("pareto", "benchmarks.pareto_serve"),
     ("lm_plan", "benchmarks.lm_plan_serve"),
 ]

@@ -50,14 +50,18 @@ from repro.core.precision import (PrecisionPolicy, VALID_SLICES, VALID_WBITS,
 __all__ = [
     "LayerPlan",
     "PrecisionPlan",
+    "FrontierEntry",
+    "FrontierManifest",
     "as_plan",
     "resolve_policy",
     "resolve_dataflow",
     "plan_footprint_report",
     "validate_plan_json",
+    "validate_frontier_json",
 ]
 
 PLAN_VERSION = 1
+FRONTIER_VERSION = 1
 VALID_DATAFLOWS = ("auto", "im2col", "implicit")
 
 PolicyOrPlan = Union[PrecisionPolicy, "PrecisionPlan"]
@@ -289,6 +293,186 @@ def _reject_duplicate_keys(pairs):
     return dict(pairs)
 
 
+# --- frontier manifests (the serving degradation axis) ----------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierEntry:
+    """One operating point on a serving frontier.
+
+    ``rel_latency`` is this point's serve cost relative to the accurate
+    point (index 0 = 1.0); ``error`` is the planner's accuracy-loss
+    proxy for the point.  Both are DESCRIPTIVE metadata from the plan
+    search — the runtime orders points by manifest position, and the
+    schema only enforces that the ordering is frontier-shaped.
+    """
+
+    plan: PrecisionPlan
+    rel_latency: float = 1.0
+    error: float = 0.0
+    source: str = "inline"   # plan file path, or 'inline'
+
+    @property
+    def name(self) -> str:
+        return self.plan.name
+
+    def to_json(self) -> Dict[str, object]:
+        out: Dict[str, object] = {"rel_latency": self.rel_latency,
+                                  "error": self.error}
+        if self.source != "inline":
+            out["plan"] = self.source
+        else:
+            out["plan"] = self.plan.to_json()
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierManifest:
+    """N plan points of ONE model, ordered accurate -> fast.
+
+    The JSON form (``examples/frontiers/*.json``):
+
+        {
+          "version": 1,
+          "name": "resnet18-frontier",
+          "arch": "resnet18",
+          "points": [
+            {"plan": {... inline plan JSON ...},
+             "rel_latency": 1.0, "error": 0.0},
+            {"plan": "../plans/resnet18_mixed.json",
+             "rel_latency": 0.45, "error": 0.012},
+            ...
+          ]
+        }
+
+    ``plan`` is either an inline plan object or a path RELATIVE TO THE
+    MANIFEST FILE.  Position 0 is the accurate point the SLO runtime
+    serves by default; later positions are the degradation ladder, so
+    ``error`` must be non-decreasing and ``rel_latency`` non-increasing
+    along the list (a manifest that "degrades" to a slower point is a
+    schema error).  Every plan must target the manifest's ``arch``
+    (an empty plan ``arch`` inherits it) and point names must be
+    unique — the runtime records them on each served ticket.
+    """
+
+    name: str
+    arch: str
+    points: Tuple[FrontierEntry, ...]
+
+    def __post_init__(self):
+        if not self.points:
+            raise ValueError("a frontier needs at least one plan point")
+        if not self.arch:
+            raise ValueError("frontier manifests must name their arch")
+        names = [e.name for e in self.points]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate frontier point names: {dupes}")
+        if any(not n for n in names):
+            raise ValueError("every frontier plan must carry a name")
+        for prev, cur in zip(self.points, self.points[1:]):
+            if cur.error < prev.error - 1e-12:
+                raise ValueError(
+                    f"frontier points must be ordered accurate -> fast: "
+                    f"error drops from {prev.error} ({prev.name}) to "
+                    f"{cur.error} ({cur.name})")
+            if cur.rel_latency > prev.rel_latency + 1e-12:
+                raise ValueError(
+                    f"frontier points must be ordered accurate -> fast: "
+                    f"rel_latency rises from {prev.rel_latency} "
+                    f"({prev.name}) to {cur.rel_latency} ({cur.name})")
+        for e in self.points:
+            if e.plan.arch and e.plan.arch != self.arch:
+                raise ValueError(
+                    f"frontier point {e.name!r} targets arch "
+                    f"{e.plan.arch!r}, manifest says {self.arch!r}")
+
+    @property
+    def point_names(self) -> Tuple[str, ...]:
+        return tuple(e.name for e in self.points)
+
+    def plans(self) -> Tuple[Tuple[str, PrecisionPlan], ...]:
+        """(name, plan) pairs in degradation order (accurate first)."""
+        return tuple((e.name, e.plan) for e in self.points)
+
+    def validate_layers(self, known: Iterable[str]) -> None:
+        known = list(known)
+        for e in self.points:
+            e.plan.validate_layers(known)
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "version": FRONTIER_VERSION,
+            "name": self.name,
+            "arch": self.arch,
+            "points": [e.to_json() for e in self.points],
+        }
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), indent=2, sort_keys=True) + "\n"
+
+    def save(self, path) -> None:
+        Path(path).write_text(self.dumps())
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, object],
+                  base_dir: Optional[Path] = None) -> "FrontierManifest":
+        if not isinstance(obj, Mapping):
+            raise ValueError(
+                f"frontier JSON must be an object, got {type(obj)}")
+        version = obj.get("version", FRONTIER_VERSION)
+        if version != FRONTIER_VERSION:
+            raise ValueError(f"unsupported frontier version {version}")
+        extra = set(obj) - {"version", "name", "arch", "points"}
+        if extra:
+            raise ValueError(f"unknown frontier keys: {sorted(extra)}")
+        pts_obj = obj.get("points", [])
+        if not isinstance(pts_obj, Sequence) or isinstance(pts_obj, str):
+            raise ValueError("'points' must be a list of frontier entries")
+        entries = []
+        for i, p in enumerate(pts_obj):
+            if not isinstance(p, Mapping):
+                raise ValueError(f"frontier point {i} must be an object")
+            p_extra = set(p) - {"plan", "rel_latency", "error"}
+            if p_extra:
+                raise ValueError(
+                    f"unknown keys in frontier point {i}: {sorted(p_extra)}")
+            plan_ref = p.get("plan")
+            if isinstance(plan_ref, str):
+                path = Path(plan_ref)
+                if not path.is_absolute():
+                    path = (base_dir or Path(".")) / path
+                plan = PrecisionPlan.load(path)
+                source = str(plan_ref)
+            elif isinstance(plan_ref, Mapping):
+                plan = PrecisionPlan.from_json(plan_ref)
+                source = "inline"
+            else:
+                raise ValueError(
+                    f"frontier point {i}: 'plan' must be a plan object or "
+                    f"a path string, got {type(plan_ref)}")
+            entries.append(FrontierEntry(
+                plan=plan,
+                rel_latency=float(p.get("rel_latency", 1.0)),
+                error=float(p.get("error", 0.0)),
+                source=source))
+        return cls(name=str(obj.get("name", "")),
+                   arch=str(obj.get("arch", "")),
+                   points=tuple(entries))
+
+    @classmethod
+    def loads(cls, text: str,
+              base_dir: Optional[Path] = None) -> "FrontierManifest":
+        return cls.from_json(
+            json.loads(text, object_pairs_hook=_reject_duplicate_keys),
+            base_dir=base_dir)
+
+    @classmethod
+    def load(cls, path) -> "FrontierManifest":
+        path = Path(path)
+        return cls.loads(path.read_text(), base_dir=path.parent)
+
+
 # --- policy-or-plan resolution (the serve stack's entry point) -------------
 
 
@@ -376,13 +560,52 @@ def validate_plan_json(path, arch: Optional[str] = None) -> PrecisionPlan:
     return plan
 
 
+def validate_frontier_json(path) -> FrontierManifest:
+    """Load + schema-check a frontier manifest; every plan point is
+    additionally layer-checked against the manifest's arch (the CI gate
+    for ``examples/frontiers/*.json``)."""
+    manifest = FrontierManifest.load(path)
+    from repro import configs  # late import: configs pulls model deps
+    api = configs.get(manifest.arch)
+    manifest.validate_layers(api.plan_layer_names())
+    return manifest
+
+
+def _main_validate_frontier(paths: Sequence[str]) -> int:
+    from repro import configs
+    known_archs = configs.ARCH_NAMES + configs.RESNET_NAMES
+    rc = 0
+    for path in paths:
+        try:
+            manifest = validate_frontier_json(path)
+        except KeyError:
+            arch = FrontierManifest.load(path).arch
+            print(f"[frontier] unknown arch {arch!r} in {path}; available: "
+                  f"{', '.join(known_archs)}", file=sys.stderr)
+            rc = 2
+            continue
+        except (ValueError, OSError, json.JSONDecodeError) as e:
+            print(f"[frontier] INVALID {path}: {e}", file=sys.stderr)
+            rc = max(rc, 1)
+            continue
+        pts = ", ".join(
+            f"{e.name}(w{'/'.join(map(str, e.plan.distinct_wbits()))}"
+            f"@{e.rel_latency:g})" for e in manifest.points)
+        print(f"[frontier] ok {path}: arch {manifest.arch}, "
+              f"{len(manifest.points)} points accurate->fast: {pts}")
+    return rc
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         description="Validate precision-plan JSON files "
                     "(schema + per-arch layer-name check; the arch comes "
-                    "from --arch or each plan's own 'arch' key).")
-    ap.add_argument("command", choices=["validate"])
-    ap.add_argument("paths", nargs="+", help="plan JSON files")
+                    "from --arch or each plan's own 'arch' key) or "
+                    "frontier manifests (validate-frontier: ordering, "
+                    "arch agreement, every point's layer names).")
+    ap.add_argument("command", choices=["validate", "validate-frontier"])
+    ap.add_argument("paths", nargs="+",
+                    help="plan (or frontier-manifest) JSON files")
     ap.add_argument("--arch", default=None,
                     help="check layer names against this arch's workload "
                          "(overrides the plans' embedded arch)")
@@ -391,6 +614,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "without this flag an arch-less plan is an error "
                          "so the CI gate always layer-checks)")
     args = ap.parse_args(argv)
+    if args.command == "validate-frontier":
+        return _main_validate_frontier(args.paths)
     from repro import configs  # late import: configs pulls model deps
     known_archs = configs.ARCH_NAMES + configs.RESNET_NAMES
     if args.arch is not None and args.arch not in known_archs:

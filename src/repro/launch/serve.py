@@ -34,6 +34,16 @@ laptop-scale stand-in for a real slice), e.g.
 
     PYTHONPATH=src python -m repro.launch.serve --arch resnet18 \
         --reduced --devices 8 --mesh 8x1 --batch 32
+
+SLO-aware frontier serving (DESIGN.md §9): ``--frontier manifest.json``
+packs EVERY plan point in the manifest from one weight store and
+serves an overload demo burst through the SLO scheduler — under
+deadline pressure (``--slo-ms``) requests degrade to the faster/lower-
+bit plan points and drain back when the queue clears:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch resnet18 \
+        --reduced --frontier examples/frontiers/resnet18_frontier.json \
+        --slo-ms 4000
 """
 from __future__ import annotations
 
@@ -47,10 +57,80 @@ import numpy as np
 
 from repro import configs
 from repro.checkpoint import CheckpointStore
-from repro.core.plan import PrecisionPlan
+from repro.core.plan import FrontierManifest, PrecisionPlan
 from repro.core.precision import PrecisionPolicy
 from repro.launch.mesh import make_serve_mesh, mesh_axes, parse_mesh_spec
 from repro.runtime.serve import Generator, ImageServer, pack_for_serving
+
+
+def _serve_frontier(api, args, mesh) -> int:
+    """Pack every manifest plan point from one weight store and push an
+    overload burst through the SLO scheduler (DESIGN.md §9)."""
+    from repro.runtime.frontier import frontier_from_manifest
+    from repro.runtime.slo import SLOScheduler
+
+    manifest = FrontierManifest.load(args.frontier)
+    rng = jax.random.PRNGKey(args.seed)
+    init_api = configs.get(args.arch, reduced=args.reduced)
+    params = init_api.init_params(rng, "train")
+    if args.ckpt_dir:
+        store = CheckpointStore(args.ckpt_dir)
+        _, state = store.restore({"params": params})
+        params = state["params"]
+        print(f"[serve] restored params from {args.ckpt_dir}")
+
+    t0 = time.perf_counter()
+    max_len = args.prompt_len + args.new_tokens
+    frontier = frontier_from_manifest(
+        api, params, manifest, batch_buckets=(args.batch,),
+        max_len=max_len, mesh=mesh)
+    print(f"[serve] packed {frontier.n_levels} plan points of {args.arch} "
+          f"in {time.perf_counter() - t0:.2f}s: "
+          f"{' -> '.join(frontier.names)} (accurate -> fast)")
+
+    data_rng = np.random.default_rng(args.seed)
+    if api.family == "cnn":
+        mk = lambda: np.asarray(data_rng.normal(
+            0.4, 0.5, (api.cfg.img_size, api.cfg.img_size, 3)), np.float32)
+    else:
+        mk = lambda: (data_rng.integers(
+            0, api.cfg.vocab, (args.prompt_len,)).astype(np.int32),
+            args.new_tokens)
+    for lvl in range(frontier.n_levels):   # warm every level's jit cache
+        frontier.serve([frontier.validate(mk())] * args.batch, level=lvl)
+
+    sched = SLOScheduler(frontier, slo_s=args.slo_ms / 1e3,
+                         max_queue=max(4 * args.batch * 8, 256))
+    n_req = args.batch * 16                # a burst well past one batch
+    t0 = time.perf_counter()
+    tickets = [sched.submit(mk()) for _ in range(n_req)]
+    sched.drain()
+    # Post-burst trickle: one request at a time, so the controller sees
+    # low pressure and climbs back toward the accurate point.
+    for _ in range(16):
+        tickets.append(sched.submit(mk()))
+        sched.drain()
+        if sched.level == 0:
+            break
+    n_req = len(tickets)
+    dt = time.perf_counter() - t0
+    st = sched.stats()
+    by_point = {}
+    for t in tickets:
+        key = t.plan_point or t.outcome
+        by_point[key] = by_point.get(key, 0) + 1
+    met = sum(bool(t.deadline_met) for t in tickets)
+    print(f"[serve] {n_req} requests in {dt:.2f}s -> {n_req/dt:.1f} req/s "
+          f"at slo {args.slo_ms:.0f}ms: {met}/{n_req} deadlines met, "
+          f"served by {by_point}")
+    print(f"[serve] degraded={st['degraded']:.0f} expired={st['expired']:.0f}"
+          f" transitions={st['transitions']:.0f} "
+          f"p50={st['p50_latency_s']*1e3:.1f}ms "
+          f"p95={st['p95_latency_s']*1e3:.1f}ms "
+          f"p99={st['p99_latency_s']*1e3:.1f}ms "
+          f"(drained back to level {sched.level}: "
+          f"{sched.plan_point})")
+    return 0
 
 
 def _serve_cnn(api, policy_or_plan, args, mesh) -> int:
@@ -103,6 +183,14 @@ def main(argv=None) -> int:
                     help="layer-wise precision plan JSON (any arch): "
                          "per-layer w_bits/k/channel_wise/dataflow, "
                          "validated against the arch's layer namespace")
+    ap.add_argument("--frontier", default=None,
+                    help="frontier manifest JSON (core/plan.py schema): "
+                         "pack every plan point from one weight store and "
+                         "serve a demo burst through the SLO scheduler")
+    ap.add_argument("--slo-ms", type=float, default=4000.0,
+                    help="per-request deadline budget for --frontier mode "
+                         "(default sized for the CPU-emulation demo; real "
+                         "accelerator deployments run ms-scale budgets)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
@@ -137,6 +225,15 @@ def main(argv=None) -> int:
                                  channel_wise=args.channel_wise)
     else:
         policy = None
+
+    if args.frontier is not None:
+        if (args.plan or args.fp_baseline or args.w_bits or args.k
+                or args.channel_wise):
+            raise SystemExit(
+                "--frontier carries its own plan points; it conflicts with "
+                "--plan/--w-bits/--k/--channel-wise/--fp-baseline")
+        api = configs.get(args.arch, reduced=args.reduced)
+        return _serve_frontier(api, args, mesh)
 
     plan = None
     if args.plan is not None:

@@ -1,0 +1,321 @@
+"""Serving frontier: N packed plan points of ONE model behind one API.
+
+PR 3's planner emits an accuracy×latency Pareto frontier and PR 4
+proved any point on it is a RE-PACK of the same trained weights
+(``regroup_layers`` + ``pack_for_serving`` — never a retrain, never a
+new serve graph).  This module turns that offline artifact into the
+runtime degradation axis the SLO scheduler (``runtime/slo.py``) shifts
+along under load:
+
+  * ``Server`` is the unified request→result abstraction over the two
+    family-shaped backends — ``ImageBackend`` wraps an ``ImageServer``
+    (payload: one (H, W, C) image → logits row), ``GenerateBackend``
+    wraps a ``Generator`` (payload: ``(tokens, n_new)`` → generated
+    token ids).  Both expose ``validate`` (submit-side payload
+    rejection, so a malformed request can never strand a coalesced
+    batch), ``serve`` (a list of payloads → aligned list of results)
+    and ``batch_limit``.
+
+  * ``FrontierServer`` holds the plan points in degradation order
+    (index 0 = accurate, last = fastest/lowest-bit) and serves any
+    batch at any level.  Every level is packed from the SAME weight
+    store, so a request served at level L is bit-identical to a
+    dedicated single-point deployment of plan L — the graded property
+    ``tests/test_slo.py`` asserts.
+
+  * ``build_frontier`` packs each plan point from one trained tree
+    (CNN: ``pack_for_serve`` per plan; LM: ``pack_for_serving`` with
+    the api re-pinned to each plan, which regroups the uniform stack
+    into the plan's scan layout), and ``frontier_from_manifest`` does
+    the same from a ``core.plan.FrontierManifest`` JSON file.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.plan import (FrontierManifest, PrecisionPlan, as_plan)
+from repro.runtime.serve import Generator, ImageServer, pack_for_serving
+
+__all__ = [
+    "Server",
+    "ImageBackend",
+    "GenerateBackend",
+    "as_server",
+    "FrontierServer",
+    "build_frontier",
+    "frontier_from_manifest",
+]
+
+
+class Server:
+    """Uniform single-shot serving interface (both model families).
+
+    ``kind`` is ``'image'`` or ``'generate'``; payload/result shapes
+    are family-specific but the scheduler never looks inside them —
+    it validates at submit, batches opaque payloads, and hands back
+    per-request results.
+    """
+
+    kind: str = "opaque"
+
+    def validate(self, payload: Any) -> Any:
+        """Normalize + reject a payload at the door (raises ValueError
+        on malformed input).  Returns the normalized payload."""
+        return payload
+
+    def serve(self, payloads: Sequence[Any]) -> List[np.ndarray]:
+        """A list of payloads -> the aligned list of per-request
+        results.  Entries never mix, so results are independent of
+        batch composition."""
+        raise NotImplementedError
+
+    @property
+    def batch_limit(self) -> int:
+        """Largest batch one ``serve`` call should carry."""
+        return 1
+
+
+class ImageBackend(Server):
+    """``Server`` over an ``ImageServer``-shaped backend: payload is one
+    (H, W, C) image, result its logits row."""
+
+    kind = "image"
+
+    def __init__(self, server):
+        self.server = server
+        # Expected shape: from the server's model config when it carries
+        # one (ImageServer), else locked to the first request — the same
+        # submit-side gate ImageScheduler uses.
+        cfg = getattr(getattr(server, "api", None), "cfg", None)
+        self._img_shape = ((cfg.img_size, cfg.img_size, 3)
+                           if hasattr(cfg, "img_size") else None)
+
+    def validate(self, payload: Any) -> np.ndarray:
+        image = np.asarray(payload)
+        if image.dtype == object:
+            raise ValueError("image payload is not a numeric array")
+        if self._img_shape is None:
+            if image.ndim != 3:
+                raise ValueError(
+                    f"expected an (H, W, C) image, got shape {image.shape}")
+            self._img_shape = image.shape
+        elif image.shape != self._img_shape:
+            raise ValueError(
+                f"image shape {image.shape} does not match this "
+                f"server's {self._img_shape}")
+        return image
+
+    def serve(self, payloads: Sequence[Any]) -> List[np.ndarray]:
+        logits = np.asarray(self.server.predict(np.stack(list(payloads))))
+        return [logits[i] for i in range(len(payloads))]
+
+    @property
+    def batch_limit(self) -> int:
+        return max(self.server.batch_buckets)
+
+
+class GenerateBackend(Server):
+    """``Server`` over a ``Generator``: payload is ``(tokens, n_new)``,
+    result the generated token ids.
+
+    ``serve`` groups payloads by (prompt length, n_new) — a
+    ``Generator`` call takes one rectangular prompt batch — and
+    reassembles results in submission order; batch entries never mix,
+    so grouping is invisible to callers.
+    """
+
+    kind = "generate"
+
+    def __init__(self, gen, max_len: Optional[int] = None):
+        self.gen = gen
+        self.max_len = int(max_len if max_len is not None
+                           else getattr(gen, "max_len", 64))
+
+    def validate(self, payload: Any) -> Tuple[np.ndarray, int]:
+        try:
+            tokens, n_new = payload
+        except (TypeError, ValueError):
+            raise ValueError(
+                "generate payload must be a (tokens, n_new) pair")
+        toks = np.asarray(tokens)
+        if toks.dtype == object or not np.issubdtype(toks.dtype, np.integer):
+            raise ValueError("prompt tokens must be an integer array")
+        toks = toks.astype(np.int32).reshape(-1)
+        n_new = int(n_new)
+        if toks.size == 0:
+            raise ValueError("empty prompt")
+        if n_new < 1:
+            raise ValueError(f"n_new must be >= 1, got {n_new}")
+        if toks.size + n_new > self.max_len:
+            raise ValueError(
+                f"prompt {toks.size} + n_new {n_new} exceeds max_len "
+                f"{self.max_len}")
+        return toks, n_new
+
+    def serve(self, payloads: Sequence[Any]) -> List[Optional[np.ndarray]]:
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for i, (toks, n_new) in enumerate(payloads):
+            groups.setdefault((toks.size, n_new), []).append(i)
+        out: List[Optional[np.ndarray]] = [None] * len(payloads)
+        for (_, n_new), idxs in groups.items():
+            batch = np.stack([payloads[i][0] for i in idxs])
+            res = self.gen.generate(batch, n_new)
+            for row, i in enumerate(idxs):
+                out[i] = np.asarray(res[row], np.int32)
+        return out
+
+    @property
+    def batch_limit(self) -> int:
+        return 8
+
+
+def as_server(backend) -> Server:
+    """Wrap either family backend (or pass a ``Server`` through):
+    ``.predict`` duck-types an ``ImageServer``, ``.generate`` a
+    ``Generator``."""
+    if isinstance(backend, Server) or (
+            hasattr(backend, "serve") and hasattr(backend, "validate")
+            and hasattr(backend, "kind")):
+        return backend  # Server, or a Server-shaped duck (FaultyServer)
+    if hasattr(backend, "predict"):
+        return ImageBackend(backend)
+    if hasattr(backend, "generate"):
+        return GenerateBackend(backend)
+    raise TypeError(
+        f"cannot wrap {type(backend).__name__}: needs .predict "
+        f"(image family) or .generate (LM family)")
+
+
+class FrontierServer:
+    """Ordered plan points of one model: level 0 serves the accurate
+    point, higher levels the faster/lower-bit re-packs — the
+    degradation ladder ``runtime/slo.py`` climbs under pressure.
+
+    ``points`` is ``[(name, server), ...]`` in degradation order; all
+    servers must share one payload kind (they are re-packs of one
+    model).  ``serve(payloads, level)`` dispatches at that level, and
+    every level is independently reachable so tests can compare a
+    scheduler-served result against a dedicated run at the same point.
+    """
+
+    def __init__(self, points: Sequence[Tuple[str, Any]],
+                 manifest: Optional[FrontierManifest] = None):
+        if not points:
+            raise ValueError("a frontier needs at least one plan point")
+        self._points: List[Tuple[str, Server]] = [
+            (name, as_server(srv)) for name, srv in points]
+        names = [n for n, _ in self._points]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate frontier point names: {names}")
+        kinds = {s.kind for _, s in self._points}
+        if len(kinds) != 1:
+            raise ValueError(
+                f"frontier points must share one payload kind, got {kinds}")
+        self.kind = kinds.pop()
+        self.manifest = manifest
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self._points)
+
+    @property
+    def n_levels(self) -> int:
+        return len(self._points)
+
+    def name(self, level: int) -> str:
+        return self._points[level][0]
+
+    def server(self, level: int) -> Server:
+        return self._points[level][1]
+
+    def level_of(self, name: str) -> int:
+        return self.names.index(name)
+
+    def validate(self, payload: Any) -> Any:
+        """Submit-side payload check (level-independent: every point is
+        the same model, so level 0's gate speaks for all)."""
+        return self._points[0][1].validate(payload)
+
+    def batch_limit(self, level: int = 0) -> int:
+        return self._points[level][1].batch_limit
+
+    def serve(self, payloads: Sequence[Any], level: int = 0) \
+            -> List[np.ndarray]:
+        if not 0 <= level < len(self._points):
+            raise IndexError(
+                f"level {level} outside frontier [0, {len(self._points)})")
+        return self._points[level][1].serve(payloads)
+
+    def restricted(self, level: int = 0) -> "FrontierServer":
+        """A single-point frontier pinned at ``level`` — the fixed-plan
+        baseline the SLO benchmark compares against."""
+        return FrontierServer([self._points[level]], manifest=self.manifest)
+
+
+# --- building a frontier from one weight store ------------------------------
+
+
+def build_frontier(api, train_params,
+                   plans: Sequence[Tuple[str, Any]], *,
+                   state=None,
+                   batch_buckets: Tuple[int, ...] = (1, 2, 4, 8),
+                   max_len: int = 64,
+                   mesh=None,
+                   manifest: Optional[FrontierManifest] = None) \
+        -> FrontierServer:
+    """Pack every plan point from ONE trained tree and stand the packed
+    servers up behind a ``FrontierServer``.
+
+    ``plans`` is ``[(name, PrecisionPlan-or-PrecisionPolicy), ...]`` in
+    degradation order.  CNN families pack via the family module's
+    ``pack_for_serve`` (BN folded per point); LM families re-pin the
+    api to each plan and go through ``pack_for_serving``, which
+    re-groups the uniform-trained stack into the plan's scan layout
+    (``regroup_layers``) before packing — the train-once /
+    re-pack-any-point flow.
+    """
+    points: List[Tuple[str, Server]] = []
+    if api.family == "cnn":
+        mod, cfg = api.mod, api.cfg
+        if state is None:
+            state = mod.init_bn_state(mod.specs(cfg))
+        for name, plan in plans:
+            packed = mod.pack_for_serve(cfg, train_params, state, plan)
+            srv = ImageServer(
+                api=dataclasses.replace(api, policy=as_plan(plan)),
+                params=packed,
+                plan=plan if isinstance(plan, PrecisionPlan) else None,
+                batch_buckets=batch_buckets, mesh=mesh)
+            points.append((name, ImageBackend(srv)))
+    else:
+        for name, plan in plans:
+            api_pt = dataclasses.replace(api, policy=plan)
+            packed = pack_for_serving(api_pt, train_params, mesh=mesh)
+            gen = Generator(api=api_pt, params=packed, max_len=max_len,
+                            mesh=mesh)
+            points.append((name, GenerateBackend(gen, max_len=max_len)))
+    return FrontierServer(points, manifest=manifest)
+
+
+def frontier_from_manifest(api, train_params, manifest, *,
+                           state=None,
+                           batch_buckets: Tuple[int, ...] = (1, 2, 4, 8),
+                           max_len: int = 64,
+                           mesh=None) -> FrontierServer:
+    """``FrontierManifest`` (or path to one) -> packed ``FrontierServer``.
+
+    Validates every point's layer names against the api before packing
+    anything — a typo'd plan must fail fast, not at first dispatch.
+    """
+    if not isinstance(manifest, FrontierManifest):
+        manifest = FrontierManifest.load(manifest)
+    if manifest.arch and api.name != manifest.arch:
+        raise ValueError(
+            f"manifest targets arch {manifest.arch!r}, api is {api.name!r}")
+    manifest.validate_layers(api.plan_layer_names())
+    return build_frontier(api, train_params, manifest.plans(), state=state,
+                          batch_buckets=batch_buckets, max_len=max_len,
+                          mesh=mesh, manifest=manifest)

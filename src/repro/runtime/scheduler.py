@@ -44,6 +44,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import random
 import time
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -57,13 +58,52 @@ __all__ = ["QueueFull", "Ticket", "ImageScheduler", "GenerateScheduler"]
 
 
 class QueueFull(RuntimeError):
-    """Backpressure: the admission queue is at ``max_queue``; the caller
-    should shed load or retry later (HTTP 429 territory)."""
+    """Backpressure: the admission queue is at ``max_queue`` (or a
+    tenant's token bucket is empty); the caller should shed load or
+    retry later (HTTP 429 territory).
+
+    Carries enough context for a well-behaved client (or the SLO
+    retry/backoff path) to act on the rejection without string parsing:
+
+      * ``depth``:         requests waiting when the submit was refused.
+      * ``oldest_wait_s``: how long the head of the queue has waited.
+      * ``retry_after_s``: suggested backoff before resubmitting (the
+                           serve-time estimate the SLO path uses).
+      * ``reason``:        'queue' (admission queue at max_queue) or
+                           'tenant' (per-tenant token bucket empty).
+    """
+
+    def __init__(self, message: str = "admission queue full", *,
+                 depth: int = 0, oldest_wait_s: float = 0.0,
+                 retry_after_s: float = 0.0, reason: str = "queue"):
+        super().__init__(message)
+        self.depth = int(depth)
+        self.oldest_wait_s = float(oldest_wait_s)
+        self.retry_after_s = float(retry_after_s)
+        self.reason = reason
 
 
 @dataclasses.dataclass
 class Ticket:
-    """One request's handle: result + per-phase latency accounting."""
+    """One request's handle: result + per-phase latency accounting.
+
+    SLO fields (``runtime/slo.py``): ``deadline`` is the ABSOLUTE time
+    (same clock as the scheduler's) by which the caller needs the
+    result, ``tenant`` tags the request for per-tenant admission
+    control, and the terminal ``outcome`` is one of
+
+      * ``'ok'``:       served within the deadline (or no deadline).
+      * ``'degraded'``: served by a faster/lower-bit plan point.
+      * ``'late'``:     served, but past the deadline.
+      * ``'expired'``:  cancelled in the queue at deadline (no result).
+      * ``'failed'``:   retries exhausted / drive loop aborted (no
+                        result; ``note`` says why).
+
+    ``plan_point`` records which frontier plan point actually served
+    the request (bit-equality against a dedicated run at that point is
+    the graded property), ``retries`` how many transient-failure
+    redispatches it survived.
+    """
 
     id: int
     payload: Any = None
@@ -73,6 +113,12 @@ class Ticket:
     t_done: Optional[float] = None
     result: Optional[np.ndarray] = None
     done: bool = False
+    deadline: Optional[float] = None    # absolute, scheduler-clock time
+    tenant: str = "default"
+    outcome: str = ""                   # terminal outcome (see above)
+    plan_point: str = ""                # frontier point that served it
+    retries: int = 0
+    note: str = ""                      # diagnostic detail for failures
 
     @property
     def queue_wait_s(self) -> Optional[float]:
@@ -81,6 +127,14 @@ class Ticket:
     @property
     def latency_s(self) -> Optional[float]:
         return None if self.t_done is None else self.t_done - self.t_submit
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """True/False once terminal (None while pending or no deadline).
+        Expired/failed tickets never met their deadline."""
+        if self.deadline is None or not self.done:
+            return None
+        return self.result is not None and self.t_done <= self.deadline
 
 
 class _SchedulerBase:
@@ -94,6 +148,8 @@ class _SchedulerBase:
     result.
     """
 
+    RESERVOIR_SIZE = 512  # latency quantile sample (O(1) memory forever)
+
     def __init__(self, *, max_queue: int, max_wait_s: float,
                  clock: Callable[[], float], history: int = 1024):
         self.max_queue = int(max_queue)
@@ -102,19 +158,40 @@ class _SchedulerBase:
         self._queue: Deque[Ticket] = collections.deque()
         self._ids = itertools.count()
         self.rejected = 0
+        self.expired = 0     # deadline cancellations (runtime/slo.py)
+        self.degraded = 0    # served at a lower-bit frontier point
+        self.retried = 0     # transient-failure redispatches
+        self.failed = 0      # retries exhausted / drive loop aborted
         self.served: Deque[Ticket] = collections.deque(maxlen=history)
         self.events: Deque[Tuple[int, str, Tuple[int, ...]]] = \
             collections.deque(maxlen=max(4 * history, 4096))
         self._tick = 0
         self._n_served = 0
         self._lat_sum = self._lat_max = self._qw_sum = 0.0
+        # Fixed-size latency reservoir (Vitter's algorithm R, seeded so
+        # runs are reproducible): a uniform sample of ALL completions at
+        # O(1) memory — safe for a front end that serves forever.
+        self._res: List[float] = []
+        self._res_seen = 0
+        self._res_rng = random.Random(0x510)
+
+    def _retry_after_hint(self) -> float:
+        """Suggested client backoff on rejection: the batching window is
+        the base scheduler's best guess at when a slot frees (the SLO
+        scheduler overrides this with its serve-time estimate)."""
+        return max(self.max_wait_s, 1e-3)
 
     def _enqueue(self, ticket: Ticket) -> Ticket:
         if len(self._queue) >= self.max_queue:
             self.rejected += 1
+            now = self.clock()
+            oldest = now - self._queue[0].t_submit if self._queue else 0.0
+            hint = self._retry_after_hint()
             raise QueueFull(
-                f"admission queue full ({self.max_queue} waiting); "
-                f"retry later")
+                f"admission queue full ({len(self._queue)} waiting, "
+                f"oldest {oldest:.3f}s); retry in {hint:.3f}s",
+                depth=len(self._queue), oldest_wait_s=oldest,
+                retry_after_s=hint)
         self._queue.append(ticket)
         return ticket
 
@@ -125,26 +202,120 @@ class _SchedulerBase:
     def _log(self, kind: str, tickets: Sequence[Ticket]) -> None:
         self.events.append((self._tick, kind, tuple(t.id for t in tickets)))
 
+    def _check_not_terminal(self, ticket: Ticket) -> None:
+        """A ticket terminates exactly once — double completion is a
+        scheduler bug the chaos suite must be able to catch loudly."""
+        if ticket.done:
+            raise RuntimeError(
+                f"ticket {ticket.id} is already terminal "
+                f"({ticket.outcome!r}): double completion")
+
     def _complete(self, ticket: Ticket) -> None:
+        self._check_not_terminal(ticket)
         ticket.t_done = self.clock()
         ticket.done = True
         ticket.payload = None  # the result is what callers keep
+        if not ticket.outcome:
+            ticket.outcome = "ok"
+        if (ticket.deadline is not None and ticket.t_done > ticket.deadline
+                and ticket.outcome == "ok"):
+            ticket.outcome = "late"  # served, but past the deadline
         self._n_served += 1
         self._lat_sum += ticket.latency_s
         self._lat_max = max(self._lat_max, ticket.latency_s)
         self._qw_sum += ticket.queue_wait_s
+        self._sample_latency(ticket.latency_s)
         self.served.append(ticket)
 
+    def _expire(self, ticket: Ticket, note: str = "") -> None:
+        """Deadline cancellation: terminal without a result, so an
+        expired request can never strand a coalesced batch."""
+        self._check_not_terminal(ticket)
+        ticket.t_done = self.clock()
+        ticket.done = True
+        ticket.outcome = "expired"
+        ticket.note = note
+        ticket.payload = None
+        self.expired += 1
+        self.served.append(ticket)
+
+    def _fail(self, ticket: Ticket, note: str = "") -> None:
+        """Terminal failure (retries exhausted, aborted drive loop)."""
+        self._check_not_terminal(ticket)
+        ticket.t_done = self.clock()
+        ticket.done = True
+        ticket.outcome = "failed"
+        ticket.note = note
+        ticket.payload = None
+        self.failed += 1
+        self.served.append(ticket)
+
+    # --- non-convergent drive loops ----------------------------------------
+
+    def _pending_tickets(self) -> List[Ticket]:
+        """Every ticket the drive loop still owes (queue; subclasses add
+        in-flight slots)."""
+        return list(self._queue)
+
+    def _fail_pending(self, op: str, max_steps: int) -> RuntimeError:
+        """A drive loop that did not converge must not STRAND its
+        pending tickets (callers block on ``ticket.done`` forever):
+        fail each one with a diagnostic outcome, then report their ids
+        and ages so the operator can see what was stuck."""
+        now = self.clock()
+        pending = self._pending_tickets()
+        ages = ", ".join(f"{t.id}:{now - t.t_submit:.3f}s"
+                         for t in pending[:16])
+        more = "" if len(pending) <= 16 else f" +{len(pending) - 16} more"
+        for t in pending:
+            self._fail(t, note=f"{op} did not converge")
+        self._queue.clear()
+        self._log(f"{op}_abort", pending)
+        return RuntimeError(
+            f"{op} did not converge after {max_steps} steps; failed "
+            f"{len(pending)} pending tickets with outcome 'failed' "
+            f"(id:age {ages}{more})")
+
+    # --- statistics --------------------------------------------------------
+
+    def _sample_latency(self, lat: float) -> None:
+        self._res_seen += 1
+        if len(self._res) < self.RESERVOIR_SIZE:
+            self._res.append(lat)
+        else:
+            j = self._res_rng.randrange(self._res_seen)
+            if j < self.RESERVOIR_SIZE:
+                self._res[j] = lat
+
+    def _quantile(self, sorted_res: List[float], q: float) -> float:
+        if not sorted_res:
+            return 0.0
+        idx = min(int(round(q * (len(sorted_res) - 1))), len(sorted_res) - 1)
+        return sorted_res[idx]
+
     def stats(self) -> Dict[str, float]:
-        """Aggregate latency accounting over completed requests."""
+        """Aggregate latency accounting over completed requests.
+
+        Quantiles come from the fixed-size reservoir — a uniform sample
+        of every completion so far, not a sliding window — and the
+        outcome counters surface the SLO machinery (zero on the plain
+        schedulers)."""
         n = self._n_served
+        res = sorted(self._res)
         return {
             "served": float(n),
             "rejected": float(self.rejected),
             "pending": float(self.pending),
+            "expired": float(self.expired),
+            "degraded": float(self.degraded),
+            "retried": float(self.retried),
+            "failed": float(self.failed),
             "mean_latency_s": self._lat_sum / n if n else 0.0,
             "max_latency_s": self._lat_max,
             "mean_queue_wait_s": self._qw_sum / n if n else 0.0,
+            "p50_latency_s": self._quantile(res, 0.50),
+            "p95_latency_s": self._quantile(res, 0.95),
+            "p99_latency_s": self._quantile(res, 0.99),
         }
 
 
@@ -225,13 +396,17 @@ class ImageScheduler(_SchedulerBase):
         return take
 
     def drain(self, max_steps: int = 10_000) -> int:
-        """Serve until the queue is empty (flushing partial batches)."""
+        """Serve until the queue is empty (flushing partial batches).
+
+        If the loop does not converge within ``max_steps``, the pending
+        tickets are FAILED (outcome ``'failed'``) rather than stranded,
+        and the raised error lists their ids and ages."""
         n = 0
         for _ in range(max_steps):
             if not self._queue:
                 return n
             n += self.step(flush=True)
-        raise RuntimeError("drain did not converge")
+        raise self._fail_pending("drain", max_steps)
 
 
 # ---------------------------------------------------------------------------
@@ -470,12 +645,25 @@ class GenerateScheduler(_SchedulerBase):
         self._tick += 1
         return self._admit(flush=flush) + self._decode_tick()
 
+    def _pending_tickets(self) -> List[Ticket]:
+        return (list(self._queue)
+                + [s.ticket for s in self._slots if s is not None])
+
+    def _fail_pending(self, op: str, max_steps: int) -> RuntimeError:
+        err = super()._fail_pending(op, max_steps)
+        self._slots = [None] * self.n_slots  # in-flight caches released
+        return err
+
     def run_until_idle(self, max_steps: int = 100_000) -> int:
         """Serve until queue and slots are empty (flushing the admission
-        window — a drive loop with no new traffic must terminate)."""
+        window — a drive loop with no new traffic must terminate).
+
+        Non-convergence FAILS the pending tickets (queued AND in-flight
+        slots, whose caches are released) instead of stranding them; the
+        raised error lists their ids and ages."""
         n = 0
         for _ in range(max_steps):
             if not self._queue and self.active == 0:
                 return n
             n += self.step(flush=True)
-        raise RuntimeError("run_until_idle did not converge")
+        raise self._fail_pending("run_until_idle", max_steps)

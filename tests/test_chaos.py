@@ -1,0 +1,227 @@
+"""Chaos property tests: thousands of fault-injected steps per seed.
+
+Each seed drives one deterministic storm — step errors, latency
+spikes, clock skew, malformed payloads, tenant bursts, mixed SLOs —
+through the full SLO scheduler on a fake clock, then checks the
+invariants that make the stack safe to operate:
+
+  * every admitted ticket reaches EXACTLY ONE terminal outcome
+    (no lost tickets, no double completions),
+  * a result exists iff the outcome says so, and an 'ok' with a
+    deadline really met it,
+  * every returned result is bit-identical to a clean serve of the
+    SAME plan point (faults may delay or fail work, never corrupt it),
+  * counters reconcile with per-ticket outcomes,
+  * memory stays bounded no matter how long the storm runs,
+  * the whole run REPLAYS bit-identically from its seed.
+"""
+import collections
+import random
+
+import numpy as np
+import pytest
+
+from repro.runtime.faults import FaultInjector, FaultSpec
+from repro.runtime.frontier import FrontierServer, ImageBackend
+from repro.runtime.scheduler import QueueFull
+from repro.runtime.slo import HysteresisConfig, SLOScheduler, TenantConfig
+
+SEEDS = (101, 202, 303)
+
+SPEC = FaultSpec(step_error_rate=0.04, latency_spike_rate=0.04,
+                 latency_spike_s=0.08, clock_skew_rate=0.02,
+                 clock_skew_s=0.03, malformed_rate=0.06)
+
+COSTS = (0.05, 0.02, 0.005)          # per-batch serve cost per level
+SLO_CHOICES = (None, 0.3, 1.0, float("inf"))
+TENANTS = ("default", "vip", "batch")
+TERMINAL_WITH_RESULT = {"ok", "late", "degraded"}
+TERMINAL = TERMINAL_WITH_RESULT | {"expired", "failed"}
+N_STEPS = 1200
+HISTORY = 256
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class CostServer:
+    def __init__(self, clk, cost_s, scale):
+        self.clk = clk
+        self.cost_s = cost_s
+        self.scale = scale
+        self.batch_buckets = (8,)
+
+    def predict(self, images):
+        self.clk.advance(self.cost_s)
+        return images.sum(axis=(1, 2, 3), keepdims=True) * self.scale
+
+
+def _img(v, hw=4):
+    return np.full((hw, hw, 3), float(v), np.float32)
+
+
+def _storm(seed, n_steps=N_STEPS):
+    """One full deterministic chaos run; returns everything a test
+    could want to assert on."""
+    clk = FakeClock()
+    inj = FaultInjector(SPEC, seed)
+    clean = FrontierServer(
+        [(f"p{i}", ImageBackend(CostServer(clk, c, float(i + 1))))
+         for i, c in enumerate(COSTS)])
+    faulty = inj.wrap_frontier(clean, advance=clk.advance)
+    clean.validate(_img(0.0))   # warm-up pins the image shape, so a
+    # malformed FIRST arrival can't define what "well-formed" means
+    sched = SLOScheduler(
+        faulty, slo_s=0.6, clock=inj.wrap_clock(clk),
+        est_serve_s=list(COSTS),
+        hysteresis=HysteresisConfig(up_after=2, down_after=4),
+        tenants={"vip": TenantConfig(rate=200.0, burst=50.0),
+                 "batch": TenantConfig(rate=20.0, burst=8.0)},
+        default_tenant=TenantConfig(rate=100.0, burst=40.0),
+        max_retries=2, backoff_s=0.005, max_backoff_s=0.05,
+        max_queue=64, history=HISTORY)
+
+    rng = random.Random(seed)
+    tickets, payloads = [], {}
+    bounced = rejected = 0
+    for _ in range(n_steps):
+        # mostly a trickle, with occasional overload bursts that must
+        # push the controller down the frontier (and back up after)
+        n_arrivals = 48 if rng.random() < 0.04 else rng.randrange(3)
+        for _ in range(n_arrivals):
+            p = _img(rng.random(), hw=4)
+            p2, bad = inj.maybe_malform(p)
+            try:
+                t = sched.submit(p2, tenant=rng.choice(TENANTS),
+                                 slo_s=rng.choice(SLO_CHOICES))
+            except QueueFull:
+                rejected += 1
+                continue
+            except (ValueError, TypeError):
+                assert bad, "well-formed payload bounced at submit"
+                bounced += 1
+                continue
+            assert not bad, "malformed payload was admitted"
+            tickets.append(t)
+            payloads[t.id] = p2
+        sched.step()
+        clk.advance(rng.random() * 0.004)
+    sched.drain()
+    return {
+        "clean": clean, "sched": sched, "inj": inj,
+        "tickets": tickets, "payloads": payloads,
+        "bounced": bounced, "rejected": rejected,
+    }
+
+
+@pytest.fixture(scope="module", params=SEEDS)
+def storm(request):
+    return _storm(request.param)
+
+
+class TestChaosInvariants:
+    def test_every_ticket_terminal_exactly_once(self, storm):
+        tickets = storm["tickets"]
+        assert tickets, "storm admitted no traffic"
+        ids = [t.id for t in tickets]
+        assert len(ids) == len(set(ids))
+        for t in tickets:
+            assert t.done, f"ticket {t.id} lost (never terminal)"
+            assert t.outcome in TERMINAL
+        # double completion is structurally impossible: the terminal
+        # guard raises if anything tries to complete a done ticket
+        victim = tickets[0]
+        with pytest.raises(RuntimeError, match="already terminal"):
+            storm["sched"]._complete(victim)
+
+    def test_result_iff_outcome_says_so(self, storm):
+        for t in storm["tickets"]:
+            has = t.result is not None
+            assert has == (t.outcome in TERMINAL_WITH_RESULT), \
+                f"ticket {t.id}: outcome={t.outcome!r} result={has}"
+            assert t.payload is None        # terminal tickets drop payloads
+
+    def test_ok_with_deadline_actually_met_it(self, storm):
+        for t in storm["tickets"]:
+            if t.outcome == "ok" and t.deadline is not None:
+                assert t.deadline_met is True
+            if t.outcome in ("late", "expired"):
+                assert t.deadline_met is False
+
+    def test_results_bit_equal_to_clean_serve_of_same_point(self, storm):
+        """Faults delay or fail work — they never corrupt a result."""
+        clean, payloads = storm["clean"], storm["payloads"]
+        checked = 0
+        for t in storm["tickets"]:
+            if t.result is None:
+                continue
+            lvl = clean.level_of(t.plan_point)
+            want = clean.serve([clean.validate(payloads[t.id])],
+                               level=lvl)[0]
+            np.testing.assert_array_equal(t.result, want)
+            checked += 1
+        assert checked > 0
+
+    def test_counters_reconcile_with_outcomes(self, storm):
+        sched, tickets = storm["sched"], storm["tickets"]
+        by = collections.Counter(t.outcome for t in tickets)
+        assert sched.expired == by["expired"]
+        assert sched.failed == by["failed"]
+        assert sched.degraded == by["degraded"]
+        assert sched.rejected == storm["rejected"]  # throttled included
+        assert 0 < sched.throttled <= sched.rejected
+        assert sched.retried == sum(t.retries for t in tickets)
+        st = sched.stats()
+        assert st["served"] == float(sum(by[o] for o in
+                                         TERMINAL_WITH_RESULT))
+        assert st["pending"] == 0.0
+
+    def test_memory_stays_bounded(self, storm):
+        sched = storm["sched"]
+        assert len(sched._res) <= sched.RESERVOIR_SIZE
+        assert len(sched.served) <= HISTORY
+        assert len(sched.events) <= max(4 * HISTORY, 4096)
+        # adversarial tenant names collapse onto one shared bucket
+        assert len(sched._buckets) <= len(sched._tenant_cfgs) + 1
+
+    def test_storm_actually_stormed(self, storm):
+        """Guard against a vacuous pass: the seed must have injected
+        every fault kind and produced degraded traffic."""
+        counts = storm["inj"].counts
+        for kind in ("step_error", "latency_spike", "clock_skew",
+                     "malformed"):
+            assert counts[kind] > 0, f"no {kind} injected"
+        assert storm["bounced"] > 0
+        sched = storm["sched"]
+        assert sched.retried > 0
+        assert sched.degraded > 0
+        assert sched.controller.n_transitions >= 2  # shed AND recovered
+
+
+class TestChaosReplay:
+    def test_same_seed_replays_bit_identically(self):
+        a = _storm(SEEDS[0], n_steps=400)
+        b = _storm(SEEDS[0], n_steps=400)
+        sig_a = [(t.id, t.outcome, t.plan_point, t.retries, t.note)
+                 for t in a["tickets"]]
+        sig_b = [(t.id, t.outcome, t.plan_point, t.retries, t.note)
+                 for t in b["tickets"]]
+        assert sig_a == sig_b
+        assert dict(a["inj"].counts) == dict(b["inj"].counts)
+        assert a["sched"].stats() == b["sched"].stats()
+        for ta, tb in zip(a["tickets"], b["tickets"]):
+            if ta.result is not None:
+                np.testing.assert_array_equal(ta.result, tb.result)
+
+    def test_different_seeds_diverge(self):
+        a = _storm(SEEDS[0], n_steps=300)
+        b = _storm(SEEDS[1], n_steps=300)
+        assert dict(a["inj"].counts) != dict(b["inj"].counts)

@@ -1,0 +1,180 @@
+"""Deterministic fault injection: seed-replay, kinds, and wrap seams.
+
+One (spec, seed) pair defines ONE fault schedule — every test here
+leans on that: the same seed replays bit-identically, different seeds
+diverge, and each injected fault kind lands at exactly the seam the
+serving stack claims to survive (``tests/test_chaos.py`` drives them
+all at once through the SLO scheduler).
+"""
+import numpy as np
+import pytest
+
+from repro.runtime.faults import (FaultInjector, FaultSpec, FaultyServer,
+                                  SkewedClock, TransientStepError)
+from repro.runtime.frontier import (FrontierServer, GenerateBackend,
+                                    ImageBackend)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class FakePredict:
+    """ImageServer-shaped fake: logits = per-image sum."""
+
+    batch_buckets = (8,)
+
+    def predict(self, images):
+        return images.sum(axis=(1, 2, 3), keepdims=True)
+
+
+def _img(v=1.0, hw=4):
+    return np.full((hw, hw, 3), float(v), np.float32)
+
+
+class TestFaultSpec:
+    def test_rejects_bad_probabilities(self):
+        with pytest.raises(ValueError, match="probability"):
+            FaultSpec(step_error_rate=1.5)
+        with pytest.raises(ValueError, match="probability"):
+            FaultSpec(malformed_rate=-0.1)
+        with pytest.raises(ValueError, match=">= 0"):
+            FaultSpec(latency_spike_s=-1.0)
+
+    def test_defaults_are_all_off(self):
+        inj = FaultInjector(FaultSpec(), seed=0)
+        for _ in range(100):
+            inj.before_serve()
+        assert not inj.counts
+
+
+class TestDeterminism:
+    SPEC = FaultSpec(step_error_rate=0.3, latency_spike_rate=0.2,
+                     latency_spike_s=1.0, clock_skew_rate=0.1,
+                     clock_skew_s=5.0, malformed_rate=0.2)
+
+    def _schedule(self, seed, n=400):
+        inj = FaultInjector(self.SPEC, seed)
+        clk = FakeClock()
+        for _ in range(n):
+            try:
+                inj.before_serve(advance=clk.advance)
+            except TransientStepError:
+                pass
+            inj.maybe_malform(_img())
+        return list(inj.log), dict(inj.counts), clk.t
+
+    def test_same_seed_replays_bit_identically(self):
+        assert self._schedule(7) == self._schedule(7)
+
+    def test_different_seeds_diverge(self):
+        assert self._schedule(7)[0] != self._schedule(8)[0]
+
+    def test_log_is_bounded(self):
+        inj = FaultInjector(FaultSpec(step_error_rate=1.0), 0, history=16)
+        for _ in range(100):
+            with pytest.raises(TransientStepError):
+                inj.before_serve()
+        assert len(inj.log) == 16
+        assert inj.counts["step_error"] == 100
+
+
+class TestComputeFaults:
+    def test_step_error_raises_transient(self):
+        inj = FaultInjector(FaultSpec(step_error_rate=1.0), 3)
+        with pytest.raises(TransientStepError, match="seed 3"):
+            inj.before_serve()
+
+    def test_latency_spike_advances_injectable_clock(self):
+        clk = FakeClock()
+        inj = FaultInjector(
+            FaultSpec(latency_spike_rate=1.0, latency_spike_s=2.5), 0)
+        inj.before_serve(advance=clk.advance)
+        assert clk.t == pytest.approx(2.5)
+
+    def test_spike_without_advance_hook_is_harmless(self):
+        inj = FaultInjector(
+            FaultSpec(latency_spike_rate=1.0, latency_spike_s=2.5), 0)
+        inj.before_serve()  # no clock to advance: no-op, no raise
+        assert inj.counts["latency_spike"] == 1
+
+    def test_faulty_server_delegates_and_rolls(self):
+        srv = ImageBackend(FakePredict())
+        inj = FaultInjector(FaultSpec(step_error_rate=1.0), 0)
+        faulty = inj.wrap_server(srv)
+        assert faulty.kind == "image"
+        assert faulty.batch_limit == 8
+        img = faulty.validate(_img(2.0))
+        with pytest.raises(TransientStepError):
+            faulty.serve([img])
+
+    def test_wrap_frontier_keeps_names_and_results(self):
+        frontier = FrontierServer([("a", ImageBackend(FakePredict())),
+                                   ("b", ImageBackend(FakePredict()))])
+        inj = FaultInjector(FaultSpec(), 0)  # all rates off
+        wrapped = inj.wrap_frontier(frontier)
+        assert wrapped.names == frontier.names
+        assert isinstance(wrapped.server(0), FaultyServer)
+        np.testing.assert_array_equal(
+            wrapped.serve([_img(3.0)], level=1)[0],
+            frontier.serve([_img(3.0)], level=1)[0])
+
+
+class TestClockSkew:
+    def test_skew_only_jumps_forward_and_accumulates(self):
+        clk = FakeClock()
+        inj = FaultInjector(
+            FaultSpec(clock_skew_rate=1.0, clock_skew_s=10.0), 0)
+        skewed = inj.wrap_clock(clk)
+        assert isinstance(skewed, SkewedClock)
+        reads = []
+        for _ in range(5):
+            reads.append(skewed())
+            clk.advance(1.0)
+        assert all(b > a for a, b in zip(reads, reads[1:]))  # monotonic
+        assert skewed.offset == pytest.approx(50.0)
+        assert reads[0] == pytest.approx(10.0)  # first read already skewed
+
+    def test_no_skew_is_transparent(self):
+        clk = FakeClock()
+        skewed = FaultInjector(FaultSpec(), 0).wrap_clock(clk)
+        clk.advance(3.0)
+        assert skewed() == pytest.approx(3.0)
+
+
+class TestMalformedPayloads:
+    def test_every_image_corruption_fails_validation(self):
+        backend = ImageBackend(FakePredict())
+        backend.validate(_img())  # pin the shape
+        inj = FaultInjector(FaultSpec(malformed_rate=1.0), 0)
+        for _ in range(30):  # covers all three corruption styles
+            bad, was = inj.maybe_malform(_img())
+            assert was
+            with pytest.raises(ValueError):
+                backend.validate(bad)
+
+    def test_every_tuple_corruption_fails_validation(self):
+        class FakeGen:
+            max_len = 32
+        backend = GenerateBackend(FakeGen())
+        good = (np.arange(8, dtype=np.int32), 4)
+        backend.validate(good)
+        inj = FaultInjector(FaultSpec(malformed_rate=1.0), 0)
+        for _ in range(30):
+            bad, was = inj.maybe_malform(good)
+            assert was
+            with pytest.raises(ValueError):
+                backend.validate(bad)
+
+    def test_rate_zero_passes_payload_through(self):
+        inj = FaultInjector(FaultSpec(), 0)
+        p = _img(5.0)
+        out, was = inj.maybe_malform(p)
+        assert out is p and not was

@@ -307,3 +307,100 @@ class TestGenerateScheduler:
         assert t0.queue_wait_s == pytest.approx(1.0)
         assert t1.queue_wait_s == pytest.approx(2.0)  # waited for the slot
         assert t0.done and t1.done
+
+
+class TestBackpressureDiagnostics:
+    """QueueFull is an operator signal, not just an exception: it
+    carries queue depth, the oldest waiter's age, and a retry hint."""
+
+    def test_queue_full_attributes(self):
+        clk, srv = FakeClock(), FakeServer()
+        s = ImageScheduler(srv, max_queue=2, max_wait_s=0.25, clock=clk)
+        s.submit(_img(0))
+        clk.advance(1.5)
+        s.submit(_img(1))
+        with pytest.raises(QueueFull) as ei:
+            s.submit(_img(2))
+        e = ei.value
+        assert e.reason == "queue"
+        assert e.depth == 2
+        assert e.oldest_wait_s == pytest.approx(1.5)
+        assert e.retry_after_s == pytest.approx(0.25)  # the batching window
+        assert "2 waiting" in str(e) and "retry" in str(e)
+
+    def test_generate_queue_full_attributes(self, lm, prompts):
+        s = GenerateScheduler(lm, slots=1, max_len=32, max_queue=1,
+                              clock=FakeClock())
+        s.submit(prompts[0], 2)
+        with pytest.raises(QueueFull) as ei:
+            s.submit(prompts[1], 2)
+        assert ei.value.depth == 1 and ei.value.reason == "queue"
+        assert ei.value.retry_after_s > 0
+
+
+class TestNonConvergence:
+    """A drive loop that stops making progress must FAIL its pending
+    tickets loudly (ids + ages) — never hang, never strand work."""
+
+    def test_drain_failure_reports_ids_and_ages(self):
+        clk, srv = FakeClock(), FakeServer()
+        s = ImageScheduler(srv, max_wait_s=10.0, clock=clk)
+        tickets = [s.submit(_img(i)) for i in range(3)]
+        clk.advance(1.25)
+        with pytest.raises(RuntimeError,
+                           match="drain did not converge") as ei:
+            s.drain(max_steps=0)
+        assert "0:1.250s" in str(ei.value)        # id:age diagnostics
+        for t in tickets:
+            assert t.done and t.outcome == "failed" and t.result is None
+            assert "did not converge" in t.note
+        assert s.pending == 0                     # queue was cleared
+        assert s.failed == 3
+        assert any(kind == "drain_abort" for _, kind, _ in s.events)
+
+    def test_run_until_idle_failure_clears_slots(self, lm, prompts):
+        s = GenerateScheduler(lm, slots=2, max_len=32, clock=FakeClock())
+        t0 = s.submit(prompts[0], 4)
+        s.step()                                  # t0 now holds a slot
+        t1 = s.submit(prompts[1], 4)
+        with pytest.raises(RuntimeError,
+                           match="run_until_idle did not converge"):
+            s.run_until_idle(max_steps=0)
+        assert t0.outcome == "failed" and t1.outcome == "failed"
+        assert s.active == 0 and s.pending == 0   # slots + queue cleared
+        s.submit(prompts[2], 2)                   # scheduler still usable
+        assert s.run_until_idle() == 1
+
+
+class TestLatencyQuantiles:
+    def test_quantiles_from_controlled_latencies(self):
+        """Reservoir quantiles with < RESERVOIR_SIZE completions see
+        every sample: nearest-rank on the exact latency set."""
+        clk, srv = FakeClock(), FakeServer()
+        s = ImageScheduler(srv, max_wait_s=0.0, clock=clk)
+        for i in range(100):                      # latencies 0.01..1.00
+            s.submit(_img(i))
+            clk.advance((i + 1) / 100.0)
+            s.drain()
+            clk.t = float(i + 1) * 10             # reset between requests
+        st = s.stats()
+        assert st["p50_latency_s"] == pytest.approx(0.51)  # nearest rank
+        assert st["p95_latency_s"] == pytest.approx(0.95)
+        assert st["p99_latency_s"] == pytest.approx(0.99)
+        assert st["max_latency_s"] == pytest.approx(1.00)
+
+    def test_quantiles_zero_when_nothing_served(self):
+        s = ImageScheduler(FakeServer(), max_wait_s=0.0, clock=FakeClock())
+        st = s.stats()
+        assert st["p50_latency_s"] == 0.0 == st["p99_latency_s"]
+
+    def test_slo_counters_present_and_zero_on_plain_schedulers(self):
+        """The plain schedulers share the stats contract so dashboards
+        need one schema: SLO counters exist and stay zero."""
+        clk = FakeClock()
+        s = ImageScheduler(FakeServer(), max_wait_s=0.0, clock=clk)
+        s.submit(_img(1))
+        s.drain()
+        st = s.stats()
+        for key in ("expired", "degraded", "retried", "failed"):
+            assert st[key] == 0.0

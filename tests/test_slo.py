@@ -1,0 +1,545 @@
+"""SLO scheduler: deadlines, hysteresis, tenants, retries — fake clock.
+
+Every control decision is deterministic against an injectable clock:
+fake per-level servers ADVANCE the clock by their serve cost, so
+deadline expiry, pressure, backoff and hysteresis are all exercised
+with zero wall-time dependence.  A real packed smoke-ResNet frontier
+then proves the graded property — a scheduler-served (possibly
+degraded) result is bit-identical to a dedicated run of the plan point
+that served it, independent of arrival order.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.plan import (FrontierManifest, LayerPlan, PrecisionPlan,
+                             validate_frontier_json)
+from repro.runtime.faults import FaultInjector, FaultSpec, TransientStepError
+from repro.runtime.frontier import FrontierServer, ImageBackend, as_server
+from repro.runtime.scheduler import QueueFull
+from repro.runtime.slo import (DegradationController, HysteresisConfig,
+                               SLOScheduler, TenantConfig, TokenBucket)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class CostServer:
+    """ImageServer-shaped fake whose predict costs ``cost_s`` of fake
+    time and scales its output, so levels are distinguishable."""
+
+    def __init__(self, clk, cost_s, scale, buckets=(4,)):
+        self.clk = clk
+        self.cost_s = cost_s
+        self.scale = scale
+        self.batch_buckets = tuple(buckets)
+        self.calls = 0
+
+    def predict(self, images):
+        self.calls += 1
+        self.clk.advance(self.cost_s)
+        return images.sum(axis=(1, 2, 3), keepdims=True) * self.scale
+
+
+def _img(v, hw=2):
+    return np.full((hw, hw, 3), float(v), np.float32)
+
+
+def _frontier(clk, costs=(1.0, 0.25, 0.05), buckets=(4,)):
+    """3 fake plan points, accurate (slow) -> fast."""
+    return FrontierServer(
+        [(f"p{i}", ImageBackend(CostServer(clk, c, float(i + 1),
+                                           buckets=buckets)))
+         for i, c in enumerate(costs)])
+
+
+class TestTokenBucket:
+    def test_burst_then_refill(self):
+        clk = FakeClock()
+        b = TokenBucket(rate=2.0, burst=2.0, clock=clk)
+        assert b.try_take() and b.try_take()
+        assert not b.try_take()                 # burst spent
+        assert b.retry_after_s() == pytest.approx(0.5)
+        clk.advance(0.5)                        # refills 1 token
+        assert b.try_take()
+        assert not b.try_take()
+
+    def test_zero_rate_never_refills(self):
+        clk = FakeClock()
+        b = TokenBucket(rate=0.0, burst=1.0, clock=clk)
+        assert b.try_take()
+        clk.advance(1e6)
+        assert not b.try_take()
+        assert math.isinf(b.retry_after_s())
+
+    def test_backwards_clock_jump_is_harmless(self):
+        clk = FakeClock()
+        b = TokenBucket(rate=1.0, burst=5.0, clock=clk)
+        for _ in range(5):
+            assert b.try_take()
+        clk.t -= 100.0                          # misbehaving clock
+        assert not b.try_take()                 # no refill from dt < 0
+        clk.t += 101.0
+        assert b.try_take()
+
+
+class TestDegradationController:
+    def test_sheds_after_up_after_consecutive_hot(self):
+        c = DegradationController(3, HysteresisConfig(up_after=2))
+        assert c.observe(0.9) == 0              # streak 1: hold
+        assert c.observe(0.9) == 1              # streak 2: shed
+        assert c.n_transitions == 1
+
+    def test_recovers_after_down_after_consecutive_cool(self):
+        c = DegradationController(
+            3, HysteresisConfig(up_after=1, down_after=3))
+        c.observe(0.9)                          # -> level 1
+        assert c.level == 1
+        for _ in range(2):
+            assert c.observe(0.1) == 1          # cool streak building
+        assert c.observe(0.1) == 0              # third cool: recover
+
+    def test_dead_zone_holds_and_resets_streaks_no_flapping(self):
+        """Pressure hovering across a threshold must NOT flap the
+        level: the mid-band resets both streaks."""
+        c = DegradationController(
+            3, HysteresisConfig(up_after=2, down_after=2))
+        for _ in range(50):
+            c.observe(0.9)                      # hot...
+            c.observe(0.5)                      # ...then mid-band
+        assert c.level == 0
+        assert c.n_transitions == 0             # never moved
+        c.observe(0.9)
+        c.observe(0.9)
+        assert c.level == 1                     # genuine sustained heat
+        for _ in range(50):
+            c.observe(0.1)
+            c.observe(0.5)
+        assert c.level == 1                     # mid-band blocks recovery too
+        assert c.n_transitions == 1
+
+    def test_single_level_never_moves(self):
+        c = DegradationController(1, HysteresisConfig(up_after=1))
+        for _ in range(10):
+            assert c.observe(5.0) == 0
+        assert c.n_transitions == 0
+
+    def test_transitions_recorded(self):
+        c = DegradationController(2, HysteresisConfig(up_after=1))
+        c.observe(0.9)
+        (n_obs, frm, to, p), = c.transitions
+        assert (frm, to) == (0, 1) and p == pytest.approx(0.9)
+
+
+class TestSLOScheduler:
+    def test_deadline_expiry_cancels_queued_not_dispatched(self):
+        """Tickets past their deadline are cancelled in the queue —
+        terminal 'expired', no result — and never strand a batch."""
+        clk = FakeClock()
+        f = _frontier(clk, costs=(1.0, 1.0, 1.0))
+        s = SLOScheduler(f, slo_s=0.5, clock=clk)
+        tickets = [s.submit(_img(i)) for i in range(8)]
+        s.step()                                # batch 1 costs 1.0 > 0.5
+        s.step()                                # rest are past deadline
+        assert [t.outcome for t in tickets[:4]] == ["late"] * 4
+        assert [t.outcome for t in tickets[4:]] == ["expired"] * 4
+        for t in tickets[4:]:
+            assert t.done and t.result is None and t.deadline_met is False
+            assert "deadline" in t.note
+        assert s.stats()["expired"] == 4.0
+
+    def test_late_vs_ok_outcomes(self):
+        clk = FakeClock()
+        f = _frontier(clk, costs=(1.0, 0.1, 0.1))
+        s = SLOScheduler(f, slo_s=2.0, clock=clk)
+        t_ok = s.submit(_img(1))
+        s.step()
+        assert t_ok.outcome == "ok" and t_ok.deadline_met is True
+        t_late = s.submit(_img(2), slo_s=0.5)   # cost 1.0 > budget 0.5
+        s.step()
+        assert t_late.outcome == "late"
+        assert t_late.result is not None and t_late.deadline_met is False
+
+    def test_no_deadline_requests_are_exempt(self):
+        clk = FakeClock()
+        s = SLOScheduler(_frontier(clk), slo_s=0.1, clock=clk)
+        t = s.submit(_img(1), slo_s=float("inf"))
+        clk.advance(100.0)
+        s.step()
+        assert t.outcome == "ok" and t.deadline is None
+        assert t.deadline_met is None           # nothing to meet
+
+    def test_sheds_under_pressure_then_drains_back(self):
+        """The tentpole property: sustained overload degrades to faster
+        plan points (tickets marked 'degraded' + the serving point
+        recorded); low pressure afterwards recovers to the accurate
+        point."""
+        clk = FakeClock()
+        f = _frontier(clk, costs=(1.0, 0.25, 0.05))
+        s = SLOScheduler(
+            f, slo_s=4.0, est_serve_s=[1.0, 0.25, 0.05], clock=clk,
+            hysteresis=HysteresisConfig(up_after=1, down_after=2))
+        burst = [s.submit(_img(i)) for i in range(32)]  # 8 batches deep
+        s.drain()
+        assert s.stats()["degraded"] > 0
+        assert any(t.outcome == "degraded" and t.plan_point != "p0"
+                   for t in burst)
+        assert all(t.done for t in burst)
+        # low-pressure trickle: the controller must climb back to 0
+        for i in range(20):
+            if s.level == 0:
+                break
+            s.submit(_img(i))
+            s.drain()
+            clk.advance(1.0)
+        assert s.level == 0 and s.plan_point == "p0"
+        assert s.controller.n_transitions >= 2  # at least one round trip
+
+    def test_degraded_results_bit_equal_to_dedicated_point(self):
+        """A degraded ticket's result must equal the SAME level's
+        dedicated serve — degradation changes latency, never the
+        output of the point that serves it."""
+        clk = FakeClock()
+        f = _frontier(clk, costs=(1.0, 0.25, 0.05))
+        s = SLOScheduler(
+            f, slo_s=4.0, est_serve_s=[1.0, 0.25, 0.05], clock=clk,
+            hysteresis=HysteresisConfig(up_after=1, down_after=2))
+        tickets = [s.submit(_img(i)) for i in range(16)]
+        s.drain()
+        for i, t in enumerate(tickets):
+            lvl = f.level_of(t.plan_point)
+            want = f.serve([f.validate(_img(i))], level=lvl)[0]
+            np.testing.assert_array_equal(t.result, want)
+
+    def test_arrival_order_independent_per_request_results(self):
+        imgs = [_img(i) for i in range(10)]
+        outs = {}
+        for order in (list(range(10)), [7, 2, 9, 0, 4, 1, 8, 3, 6, 5]):
+            clk = FakeClock()
+            s = SLOScheduler(
+                _frontier(clk), slo_s=100.0, clock=clk,
+                est_serve_s=[1.0, 0.25, 0.05],
+                hysteresis=HysteresisConfig(up_after=1, down_after=2))
+            tickets = {i: s.submit(imgs[i]) for i in order}
+            s.drain()
+            outs[tuple(order)] = tickets
+        a, b = outs.values()
+        for i in range(10):
+            np.testing.assert_array_equal(a[i].result, b[i].result)
+
+    def test_tenant_throttle_rejects_with_reason(self):
+        clk = FakeClock()
+        s = SLOScheduler(
+            _frontier(clk), clock=clk,
+            tenants={"meter": TenantConfig(rate=1.0, burst=2.0)})
+        s.submit(_img(1), tenant="meter")
+        s.submit(_img(2), tenant="meter")
+        with pytest.raises(QueueFull) as ei:
+            s.submit(_img(3), tenant="meter")
+        assert ei.value.reason == "tenant"
+        assert ei.value.retry_after_s == pytest.approx(1.0)
+        assert s.throttled == 1 and s.rejected == 1
+        s.submit(_img(4))                       # other tenants unaffected
+        clk.advance(1.0)                        # bucket refills
+        s.submit(_img(5), tenant="meter")
+
+    def test_unlisted_tenants_share_one_default_bucket(self):
+        """Bounded memory: adversarial tenant names must not grow the
+        bucket map — every unlisted tenant shares ONE bucket."""
+        clk = FakeClock()
+        s = SLOScheduler(
+            _frontier(clk), clock=clk,
+            tenants={"vip": TenantConfig(rate=100.0, burst=10.0)},
+            default_tenant=TenantConfig(rate=1.0, burst=1.0))
+        s.submit(_img(1), tenant="rando-0")
+        with pytest.raises(QueueFull):          # shared bucket is empty
+            s.submit(_img(2), tenant="rando-1")
+        assert len(s._buckets) <= 1             # only configured tenants
+        s.submit(_img(3), tenant="vip")         # vip has its own bucket
+
+    def test_queue_full_carries_depth_and_hint(self):
+        clk = FakeClock()
+        s = SLOScheduler(_frontier(clk), clock=clk, max_queue=4,
+                         est_serve_s=[1.0, 0.25, 0.05])
+        for i in range(4):
+            s.submit(_img(i))
+        clk.advance(0.75)
+        with pytest.raises(QueueFull) as ei:
+            s.submit(_img(9))
+        e = ei.value
+        assert e.reason == "queue" and e.depth == 4
+        assert e.oldest_wait_s == pytest.approx(0.75)
+        assert e.retry_after_s == pytest.approx(1.0)  # 1 batch @ est 1.0
+
+    def test_transient_failure_retries_with_backoff_then_succeeds(self):
+        clk = FakeClock()
+
+        class Flaky(CostServer):
+            def __init__(self, clk, fail_times):
+                super().__init__(clk, 0.1, 1.0)
+                self.fail_times = fail_times
+
+            def predict(self, images):
+                if self.fail_times > 0:
+                    self.fail_times -= 1
+                    raise TransientStepError("injected")
+                return super().predict(images)
+
+        f = FrontierServer([("only", ImageBackend(Flaky(clk, 2)))])
+        s = SLOScheduler(f, slo_s=100.0, clock=clk, max_retries=3,
+                         backoff_s=0.5, max_backoff_s=4.0)
+        t = s.submit(_img(1))
+        assert s.step() == 0                    # failure 1: requeued
+        assert t.retries == 1 and s.pending == 1
+        assert s.step() == 0                    # inside backoff: no dispatch
+        clk.advance(0.5)
+        assert s.step() == 0                    # failure 2: backoff doubles
+        assert t.retries == 2
+        clk.advance(0.6)
+        assert s.step() == 0                    # 2^1 * 0.5 = 1.0s not up
+        clk.advance(0.5)
+        assert s.step() == 1                    # cleared: serves
+        assert t.outcome == "ok" and t.retries == 2
+        assert s.stats()["retried"] == 2.0
+
+    def test_retries_exhausted_fails_terminally(self):
+        clk = FakeClock()
+
+        class Broken(CostServer):
+            def predict(self, images):
+                raise TransientStepError("always down")
+
+        f = FrontierServer([("only", ImageBackend(Broken(clk, 0.1, 1.0)))])
+        s = SLOScheduler(f, slo_s=100.0, clock=clk, max_retries=2,
+                         backoff_s=0.01)
+        t = s.submit(_img(1))
+        s.drain()                               # flush ignores the backoff
+        assert t.outcome == "failed" and t.done and t.result is None
+        assert "retries exhausted" in t.note
+        assert s.stats()["failed"] == 1.0
+
+    def test_fifo_preserved_across_retry(self):
+        clk = FakeClock()
+
+        class FlakyOnce(CostServer):
+            def __init__(self, clk):
+                super().__init__(clk, 0.1, 1.0, buckets=(2,))
+                self.failed = False
+
+            def predict(self, images):
+                if not self.failed:
+                    self.failed = True
+                    raise TransientStepError("once")
+                return super().predict(images)
+
+        f = FrontierServer([("only", ImageBackend(FlakyOnce(clk)))])
+        s = SLOScheduler(f, slo_s=100.0, clock=clk, backoff_s=0.01)
+        ts = [s.submit(_img(i)) for i in range(4)]
+        s.drain()
+        order = [e for _, kind, ids in s.events if kind == "dispatch"
+                 for e in ids]
+        assert order == [0, 1, 0, 1, 2, 3]      # requeued at the FRONT
+
+    def test_drain_nonconvergence_fails_pending_with_diagnostics(self):
+        clk = FakeClock()
+        s = SLOScheduler(_frontier(clk), slo_s=100.0, clock=clk)
+        ts = [s.submit(_img(i)) for i in range(3)]
+        clk.advance(2.5)
+        with pytest.raises(RuntimeError, match="did not converge") as ei:
+            s.drain(max_steps=0)
+        assert "0:2.500s" in str(ei.value)      # ids + ages reported
+        assert all(t.outcome == "failed" and t.done for t in ts)
+        assert s.pending == 0
+
+    def test_stats_includes_level_and_transitions(self):
+        clk = FakeClock()
+        s = SLOScheduler(_frontier(clk), clock=clk)
+        st = s.stats()
+        for key in ("level", "throttled", "transitions",
+                    "p50_latency_s", "p95_latency_s", "p99_latency_s"):
+            assert key in st
+
+    def test_est_serve_s_length_checked(self):
+        clk = FakeClock()
+        with pytest.raises(ValueError, match="3 entries"):
+            SLOScheduler(_frontier(clk), clock=clk, est_serve_s=[1.0, 2.0])
+
+
+# --------------------------------------------------------------------------
+# Frontier manifests (core/plan.py)
+# --------------------------------------------------------------------------
+
+
+def _plan(name, w, k, err_arch="tiny"):
+    return PrecisionPlan(default=LayerPlan(w_bits=w, k=k), name=name,
+                         arch=err_arch)
+
+
+class TestFrontierManifest:
+    def _manifest(self, **kw):
+        from repro.core.plan import FrontierEntry
+        points = kw.pop("points", (
+            FrontierEntry(plan=_plan("acc", 8, 4), rel_latency=1.0,
+                          error=0.0),
+            FrontierEntry(plan=_plan("fast", 2, 2), rel_latency=0.2,
+                          error=0.05)))
+        return FrontierManifest(name="m", arch="tiny", points=points,
+                                **kw)
+
+    def test_round_trip(self):
+        m = self._manifest()
+        again = FrontierManifest.loads(m.dumps())
+        assert again.point_names == ("acc", "fast")
+        assert again.points[1].rel_latency == pytest.approx(0.2)
+
+    def test_rejects_unordered_error(self):
+        from repro.core.plan import FrontierEntry
+        with pytest.raises(ValueError, match="error drops"):
+            self._manifest(points=(
+                FrontierEntry(plan=_plan("a", 8, 4), error=0.1),
+                FrontierEntry(plan=_plan("b", 2, 2), error=0.0)))
+
+    def test_rejects_rising_latency(self):
+        from repro.core.plan import FrontierEntry
+        with pytest.raises(ValueError, match="rel_latency rises"):
+            self._manifest(points=(
+                FrontierEntry(plan=_plan("a", 8, 4), rel_latency=0.5),
+                FrontierEntry(plan=_plan("b", 2, 2), rel_latency=1.0)))
+
+    def test_rejects_duplicate_or_empty_names(self):
+        from repro.core.plan import FrontierEntry
+        with pytest.raises(ValueError, match="duplicate"):
+            self._manifest(points=(
+                FrontierEntry(plan=_plan("a", 8, 4)),
+                FrontierEntry(plan=_plan("a", 2, 2), rel_latency=0.5)))
+        with pytest.raises(ValueError, match="carry a name"):
+            self._manifest(points=(
+                FrontierEntry(plan=_plan("", 8, 4)),))
+
+    def test_rejects_arch_mismatch_and_unknown_keys(self):
+        from repro.core.plan import FrontierEntry
+        with pytest.raises(ValueError, match="targets arch"):
+            FrontierManifest(name="m", arch="other", points=(
+                FrontierEntry(plan=_plan("a", 8, 4, err_arch="tiny")),))
+        with pytest.raises(ValueError, match="unknown frontier keys"):
+            FrontierManifest.loads(
+                '{"version": 1, "name": "m", "arch": "a", '
+                '"points": [], "bogus": 1}')
+
+    def test_plan_path_resolved_relative_to_manifest(self, tmp_path):
+        plan_dir = tmp_path / "plans"
+        plan_dir.mkdir()
+        _plan("ref", 4, 4).save(plan_dir / "p.json")
+        m = self._manifest()
+        obj = m.to_json()
+        obj["points"][1]["plan"] = "plans/p.json"
+        (tmp_path / "f.json").write_text(__import__("json").dumps(obj))
+        loaded = FrontierManifest.load(tmp_path / "f.json")
+        assert loaded.point_names == ("acc", "ref")
+        assert loaded.points[1].source == "plans/p.json"
+
+    def test_example_manifest_validates(self):
+        manifest = validate_frontier_json(
+            "examples/frontiers/resnet18_frontier.json")
+        assert manifest.arch == "resnet18"
+        assert len(manifest.points) == 3
+
+
+# --------------------------------------------------------------------------
+# Real packed frontier: the graded bit-equality property
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def real_frontier():
+    from benchmarks.slo_serve import build
+    frontier, cfg = build(True)
+    return frontier, cfg
+
+
+class TestRealFrontier:
+    def test_scheduler_serve_bit_equal_to_dedicated_point(
+            self, real_frontier):
+        """A request degraded to plan point L must return logits
+        BIT-IDENTICAL to a dedicated single-point deployment of L —
+        the property that makes degradation safe to ship."""
+        frontier, cfg = real_frontier
+        rng = np.random.default_rng(0)
+        imgs = [np.asarray(rng.normal(0.4, 0.5, (cfg.img_size,
+                                                 cfg.img_size, 3)),
+                           np.float32) for _ in range(12)]
+        clk = FakeClock()
+        s = SLOScheduler(
+            frontier, slo_s=2.0, clock=clk,
+            est_serve_s=[1.0, 0.25, 0.05],  # projected overload: degrades
+            hysteresis=HysteresisConfig(up_after=1, down_after=4))
+        tickets = [s.submit(im) for im in imgs]
+        s.drain()
+        assert any(t.outcome == "degraded" for t in tickets)
+        for im, t in zip(imgs, tickets):
+            lvl = frontier.level_of(t.plan_point)
+            dedicated = frontier.restricted(lvl)
+            want = dedicated.serve([dedicated.validate(im)], level=0)[0]
+            np.testing.assert_array_equal(t.result, want)
+
+    def test_arrival_order_independence_real_model(self, real_frontier):
+        frontier, cfg = real_frontier
+        rng = np.random.default_rng(1)
+        imgs = [np.asarray(rng.normal(0.4, 0.5, (cfg.img_size,
+                                                 cfg.img_size, 3)),
+                           np.float32) for _ in range(6)]
+        outs = {}
+        for order in ([0, 1, 2, 3, 4, 5], [4, 1, 5, 0, 3, 2]):
+            clk = FakeClock()
+            s = SLOScheduler(frontier, slo_s=1e6, clock=clk)
+            tickets = {i: s.submit(imgs[i]) for i in order}
+            s.drain()
+            outs[tuple(order)] = tickets
+        a, b = outs.values()
+        for i in range(6):
+            np.testing.assert_array_equal(a[i].result, b[i].result)
+
+    def test_chaos_seed_on_real_model(self, real_frontier):
+        """A short fault-injected run on the REAL packed frontier: every
+        ticket terminal exactly once, results bit-equal per point."""
+        frontier, cfg = real_frontier
+        inj = FaultInjector(
+            FaultSpec(step_error_rate=0.3, malformed_rate=0.1), 101)
+        faulty = inj.wrap_frontier(frontier)
+        clk = FakeClock()
+        s = SLOScheduler(faulty, slo_s=1e6, clock=clk, max_retries=3,
+                         backoff_s=0.01)
+        rng = np.random.default_rng(2)
+        tickets, payloads = [], {}
+        for _ in range(24):
+            p = np.asarray(rng.normal(0.4, 0.5, (cfg.img_size,
+                                                 cfg.img_size, 3)),
+                           np.float32)
+            p2, bad = inj.maybe_malform(p)
+            try:
+                t = s.submit(p2)
+            except ValueError:
+                assert bad
+                continue
+            tickets.append(t)
+            payloads[t.id] = p2
+        s.drain()
+        assert all(t.done for t in tickets)
+        for t in tickets:
+            if t.result is None:
+                assert t.outcome == "failed"
+                continue
+            lvl = frontier.level_of(t.plan_point)
+            want = frontier.serve([frontier.validate(payloads[t.id])],
+                                  level=lvl)[0]
+            np.testing.assert_array_equal(t.result, want)
