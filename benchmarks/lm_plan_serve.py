@@ -139,7 +139,10 @@ def _run(args):
         api = dataclasses.replace(api, cfg=_bench_cfg())
     batch, max_len, iters = args.batch, 64, args.iters
 
-    mixed = PrecisionPlan.load(MIXED_PLAN_JSON)
+    # This bench times WEIGHT word-length effects; strip the plan's kv
+    # section so the decode cache stays fp and the >=1.05x gate measures
+    # packing alone.  KV-cache decode is timed by benchmarks.kv_decode.
+    mixed = plan_lib.strip_kv(PrecisionPlan.load(MIXED_PLAN_JSON))
     mixed.validate_layers(T.plan_layer_names(api.cfg))
     w8 = PrecisionPlan.uniform(PrecisionPolicy(inner_bits=8, k=4))
 

@@ -28,6 +28,7 @@ MODULES = [
     ("slo", "benchmarks.slo_serve"),
     ("pareto", "benchmarks.pareto_serve"),
     ("lm_plan", "benchmarks.lm_plan_serve"),
+    ("kv", "benchmarks.kv_decode"),
 ]
 
 

@@ -34,6 +34,20 @@ Every serve entry point that takes a ``PrecisionPolicy`` also accepts a
 into the per-layer ``PrecisionPolicy`` the kernels consume.  Boundary
 layers (first/last) stay pinned to 8 bit through the usual
 ``PrecisionPolicy.bits_for`` rule regardless of the plan entry.
+
+Version 2 extends plans past weights to the decode KV cache — the
+paper's "weights *and* activations" axis.  A plan-level ``kv`` section
+sets the cache-wide default word-length and storage
+
+    "kv": {"bits": 4, "k": 4, "store": "packed"}
+
+and per-layer ``kv_bits`` on a ``k``/``v`` entry (or a scoped
+``l{i}.k``) overrides it, resolved through the same hierarchical
+``layer()`` funnel.  ``store`` picks "packed" (digit-plane uint8 cache,
+the production layout) or "qdq" (bf16 layout whose writes round-trip
+the same quantization grid — the bit-identity oracle).  Version-1 files
+carrying any kv key are rejected with an explicit message rather than
+silently ignored.
 """
 from __future__ import annotations
 
@@ -49,20 +63,27 @@ from repro.core.precision import (PrecisionPolicy, VALID_SLICES, VALID_WBITS,
 
 __all__ = [
     "LayerPlan",
+    "KVCachePlan",
     "PrecisionPlan",
     "FrontierEntry",
     "FrontierManifest",
     "as_plan",
     "resolve_policy",
     "resolve_dataflow",
+    "resolve_kv_bits",
+    "strip_kv",
     "plan_footprint_report",
     "validate_plan_json",
     "validate_frontier_json",
 ]
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2
+# version-1 files (no kv keys) still load; anything older/newer fails.
+SUPPORTED_PLAN_VERSIONS = (1, 2)
 FRONTIER_VERSION = 1
 VALID_DATAFLOWS = ("auto", "im2col", "implicit")
+VALID_KV_BITS = (2, 4, 8)
+VALID_KV_STORES = ("packed", "qdq")
 
 PolicyOrPlan = Union[PrecisionPolicy, "PrecisionPlan"]
 
@@ -77,12 +98,15 @@ class LayerPlan:
       channel_wise: per-output-channel step sizes gamma_w.
       dataflow:     conv dataflow pin ('im2col'/'implicit') or 'auto'
                     (per-layer DSE routing at serve time).
+      kv_bits:      decode KV-cache word-length of this layer's cached
+                    tensor (schema v2; None = plan-level ``kv`` default).
     """
 
     w_bits: int = 8
     k: int = 4
     channel_wise: bool = False
     dataflow: str = "auto"
+    kv_bits: Optional[int] = None
 
     def __post_init__(self):
         if self.w_bits not in VALID_WBITS:
@@ -93,22 +117,76 @@ class LayerPlan:
         if self.dataflow not in VALID_DATAFLOWS:
             raise ValueError(f"dataflow must be in {VALID_DATAFLOWS}, "
                              f"got {self.dataflow!r}")
+        if self.kv_bits is not None and self.kv_bits not in VALID_KV_BITS:
+            raise ValueError(f"kv_bits must be in {VALID_KV_BITS}, "
+                             f"got {self.kv_bits}")
 
     def to_json(self) -> Dict[str, object]:
-        return {"w_bits": self.w_bits, "k": self.k,
-                "channel_wise": self.channel_wise, "dataflow": self.dataflow}
+        out: Dict[str, object] = {
+            "w_bits": self.w_bits, "k": self.k,
+            "channel_wise": self.channel_wise, "dataflow": self.dataflow}
+        if self.kv_bits is not None:
+            out["kv_bits"] = self.kv_bits
+        return out
 
     @classmethod
     def from_json(cls, obj: Mapping[str, object]) -> "LayerPlan":
-        extra = set(obj) - {"w_bits", "k", "channel_wise", "dataflow"}
+        extra = set(obj) - {"w_bits", "k", "channel_wise", "dataflow",
+                            "kv_bits"}
         if extra:
             raise ValueError(f"unknown layer-plan keys: {sorted(extra)}")
+        kv_bits = obj.get("kv_bits")
         return cls(
             w_bits=int(obj.get("w_bits", 8)),
             k=int(obj.get("k", 4)),
             channel_wise=bool(obj.get("channel_wise", False)),
             dataflow=str(obj.get("dataflow", "auto")),
+            kv_bits=None if kv_bits is None else int(kv_bits),
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCachePlan:
+    """Plan-wide decode KV-cache section (schema v2).
+
+    Attributes:
+      bits:  cache-wide default word-length; None leaves layers without
+             an own ``kv_bits`` entry at full precision.
+      k:     digit-plane slice width of the packed cache (the effective
+             slice of a layer is ``min(bits, k)``).
+      store: 'packed' (uint8 digit-plane cache) or 'qdq' (bf16 layout,
+             writes round-trip the quantization grid — the oracle mode).
+    """
+
+    bits: Optional[int] = None
+    k: int = 4
+    store: str = "packed"
+
+    def __post_init__(self):
+        if self.bits is not None and self.bits not in VALID_KV_BITS:
+            raise ValueError(f"kv bits must be in {VALID_KV_BITS}, "
+                             f"got {self.bits}")
+        if self.k not in VALID_SLICES:
+            raise ValueError(f"kv k must be in {VALID_SLICES}, got {self.k}")
+        if self.store not in VALID_KV_STORES:
+            raise ValueError(f"kv store must be in {VALID_KV_STORES}, "
+                             f"got {self.store!r}")
+
+    def to_json(self) -> Dict[str, object]:
+        out: Dict[str, object] = {"k": self.k, "store": self.store}
+        if self.bits is not None:
+            out["bits"] = self.bits
+        return out
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, object]) -> "KVCachePlan":
+        extra = set(obj) - {"bits", "k", "store"}
+        if extra:
+            raise ValueError(f"unknown kv-section keys: {sorted(extra)}")
+        bits = obj.get("bits")
+        return cls(bits=None if bits is None else int(bits),
+                   k=int(obj.get("k", 4)),
+                   store=str(obj.get("store", "packed")))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,12 +207,18 @@ class PrecisionPlan:
     quantize: bool = True
     name: str = ""
     arch: str = ""   # optional: the architecture this plan targets (CI gate)
+    kv: Optional[KVCachePlan] = None
 
     def __post_init__(self):
         if self.variant not in ("st", "sa"):
             raise ValueError("variant must be 'st' or 'sa'")
         if self.boundary_bits not in VALID_WBITS:
             raise ValueError(f"boundary_bits must be in {VALID_WBITS}")
+        if self.default.kv_bits is not None:
+            raise ValueError(
+                "the plan default may not carry kv_bits (it would claim a "
+                "KV cache for every layer); set the plan-level 'kv' "
+                "section for a cache-wide word-length")
         names = [n for n, _ in self.layers]
         if len(set(names)) != len(names):
             dupes = sorted({n for n in names if names.count(n) > 1})
@@ -202,6 +286,59 @@ class PrecisionPlan:
     def dataflow_for(self, name: str) -> str:
         return self.layer(name).dataflow
 
+    # --- decode KV cache (schema v2) ---------------------------------------
+
+    def kv_enabled(self) -> bool:
+        """True when the plan quantizes the decode KV cache at all."""
+        if self.kv is not None and self.kv.bits is not None:
+            return True
+        return any(lp.kv_bits is not None for _, lp in self.layers)
+
+    def kv_bits_for(self, name: str) -> Optional[int]:
+        """Cache word-length of one cached tensor (``k``/``v``/scoped
+        form), through the same hierarchical funnel as ``layer()``;
+        None = keep that tensor full precision."""
+        lp = self.layer(name)
+        if lp.kv_bits is not None:
+            return lp.kv_bits
+        return self.kv.bits if self.kv is not None else None
+
+    def kv_store(self) -> str:
+        return self.kv.store if self.kv is not None else "packed"
+
+    def kv_slice(self, bits: int) -> int:
+        """Digit-plane slice of a cache tensor at ``bits``."""
+        return min(bits, self.kv.k if self.kv is not None else 4)
+
+    def distinct_kvbits(self) -> Tuple[int, ...]:
+        bits = {lp.kv_bits for _, lp in self.layers
+                if lp.kv_bits is not None}
+        if self.kv is not None and self.kv.bits is not None:
+            bits.add(self.kv.bits)
+        return tuple(sorted(bits))
+
+    def validate_kv(self, kv_names: Iterable[str], arch: str = "") -> None:
+        """Reject kv word-lengths that name layers with no decode cache.
+
+        ``kv_names`` is the model's cacheable-tensor namespace (empty for
+        models with no KV cache at all — CNNs, MLA latents).
+        """
+        if not self.kv_enabled():
+            return
+        kv_set = set(kv_names)
+        if not kv_set:
+            raise ValueError(
+                f"plan {self.name or '<unnamed>'!r} sets KV-cache "
+                f"word-lengths (kv section / kv_bits) but "
+                f"{arch or 'this model'} has no decode KV cache; "
+                f"remove the kv keys")
+        bad = [n for n, lp in self.layers
+               if lp.kv_bits is not None and n not in kv_set]
+        if bad:
+            raise ValueError(
+                f"kv_bits set on layers with no KV cache: {bad}; "
+                f"cacheable tensors: {sorted(kv_set)}")
+
     # --- introspection -----------------------------------------------------
 
     @property
@@ -224,8 +361,14 @@ class PrecisionPlan:
     # --- serialization -----------------------------------------------------
 
     def to_json(self) -> Dict[str, object]:
+        # Stamp the MINIMUM version the plan's features need: kv-less
+        # plans keep the frozen v1 serialization byte-identical (golden
+        # fixtures, old tooling), kv plans require v2.
+        version = 2 if (self.kv is not None
+                        or any(lp.kv_bits is not None
+                               for _, lp in self.layers)) else 1
         out: Dict[str, object] = {
-            "version": PLAN_VERSION,
+            "version": version,
             "name": self.name,
             "a_bits": self.a_bits,
             "boundary_bits": self.boundary_bits,
@@ -236,6 +379,8 @@ class PrecisionPlan:
         }
         if self.arch:
             out["arch"] = self.arch
+        if self.kv is not None:
+            out["kv"] = self.kv.to_json()
         return out
 
     @classmethod
@@ -243,16 +388,31 @@ class PrecisionPlan:
         if not isinstance(obj, Mapping):
             raise ValueError(f"plan JSON must be an object, got {type(obj)}")
         version = obj.get("version", PLAN_VERSION)
-        if version != PLAN_VERSION:
+        if version not in SUPPORTED_PLAN_VERSIONS:
             raise ValueError(f"unsupported plan version {version}")
         known = {"version", "name", "arch", "a_bits", "boundary_bits",
-                 "variant", "quantize", "default", "layers"}
+                 "variant", "quantize", "default", "layers", "kv"}
         extra = set(obj) - known
         if extra:
             raise ValueError(f"unknown plan keys: {sorted(extra)}")
         layers_obj = obj.get("layers", {})
         if not isinstance(layers_obj, Mapping):
             raise ValueError("'layers' must map layer name -> entry")
+        if version < 2:
+            # a v1 reader would silently drop these keys; refuse loudly
+            # so nobody serves a full-precision cache thinking it's w4.
+            kv_carriers = [n for n, e in layers_obj.items()
+                           if isinstance(e, Mapping) and "kv_bits" in e]
+            dflt = obj.get("default", {})
+            if isinstance(dflt, Mapping) and "kv_bits" in dflt:
+                kv_carriers.append("default")
+            if "kv" in obj or kv_carriers:
+                raise ValueError(
+                    f"KV-cache word-lengths (kv section"
+                    f"{', kv_bits on ' + str(sorted(kv_carriers)) if kv_carriers else ''}) "
+                    f"require plan version 2; this file says version "
+                    f"{version} — bump the 'version' key")
+        kv_obj = obj.get("kv")
         return cls(
             layers=tuple((str(n), LayerPlan.from_json(e))
                          for n, e in layers_obj.items()),
@@ -263,6 +423,7 @@ class PrecisionPlan:
             quantize=bool(obj.get("quantize", True)),
             name=str(obj.get("name", "")),
             arch=str(obj.get("arch", "")),
+            kv=None if kv_obj is None else KVCachePlan.from_json(kv_obj),
         )
 
     def dumps(self) -> str:
@@ -506,22 +667,80 @@ def resolve_dataflow(policy: PolicyOrPlan, layer_name: str,
     return "auto"
 
 
+def resolve_kv_bits(policy: PolicyOrPlan, layer_name: str) -> Optional[int]:
+    """Cache word-length of one cached tensor under a policy-or-plan.
+
+    Uniform policies (and plans without kv keys) resolve to None — the
+    full-precision bf16 cache every existing call site already runs.
+    """
+    if isinstance(policy, PrecisionPlan):
+        return policy.kv_bits_for(layer_name)
+    return None
+
+
+def strip_kv(policy: PolicyOrPlan) -> PolicyOrPlan:
+    """The same plan with its KV-cache keys removed (fp bf16 cache).
+
+    Benchmarks that isolate weight-format effects, and the scheduler's
+    fp-equivalent footprint accounting, compare against this.
+    """
+    if not isinstance(policy, PrecisionPlan) or not policy.kv_enabled():
+        return policy
+    layers = tuple((n, dataclasses.replace(lp, kv_bits=None))
+                   for n, lp in policy.layers)
+    return dataclasses.replace(policy, layers=layers, kv=None)
+
+
 # --- footprint accounting (Table III, per-layer) ---------------------------
+
+
+def kv_cache_token_bytes(bits: Optional[int], heads: int, head_dim: int,
+                         slice_k: int = 4) -> float:
+    """Bytes ONE token of one cached K or V tensor occupies.
+
+    ``bits=None`` is the bf16 cache (2 B/element); a quantized tensor
+    holds ``ceil(head_dim * bits / 8)`` code bytes (digit planes pack
+    densely) plus 4 B of bf16 scale+zero, per head.  Mirrors
+    ``nn.kvcache.kv_token_bytes`` without importing jax.
+    """
+    if bits is None:
+        return heads * head_dim * 2.0
+    k = min(bits, slice_k)
+    planes = -(-bits // k)
+    packed_d = -(-head_dim // (8 // k))
+    return float(heads * (planes * packed_d + 4))
 
 
 def plan_footprint_report(
     layer_params: Mapping[str, int],
     layer_classes: Mapping[str, str],
     plan: PolicyOrPlan,
+    *,
+    kv_layers: Optional[Mapping[str, Tuple[int, int]]] = None,
+    kv_tokens: int = 0,
 ) -> Dict[str, float]:
     """Table III accounting at per-layer word-lengths.
 
     layer_params:  {layer_name: n_weights}.
     layer_classes: {layer_name: 'inner' | 'boundary'}.
+    kv_layers:     {cached tensor name: (kv_heads, head_dim)} — the
+                   model's decode-cache workload (e.g. from
+                   ``transformer.kv_cache_workload``); None/empty means
+                   the model has no KV cache.
+    kv_tokens:     resident context length the cache bytes are quoted
+                   at (per sequence).
     Returns the same keys as ``precision.footprint_report`` so existing
-    consumers (tab3 benchmark) can switch over without reshaping.
+    consumers (tab3 benchmark) can switch over without reshaping; with
+    ``kv_layers`` it adds ``kv_fp16_bytes`` / ``kv_quant_bytes`` /
+    ``kv_compression`` and ``total_*`` keys that include the cache.
     """
     p = as_plan(plan)
+    if p.kv_enabled() and not kv_layers:
+        raise ValueError(
+            f"plan {p.name or '<unnamed>'!r} sets KV-cache word-lengths "
+            f"but this workload has no KV cache (pass kv_layers for "
+            f"models with a decode cache; CNN plans must not carry kv "
+            f"keys)")
     fp_bytes = 4.0 * sum(layer_params.values())
     q_bytes = 0.0
     n_inner = n_bound = 0
@@ -534,13 +753,30 @@ def plan_footprint_report(
             n_bound += count
         else:
             n_inner += count
-    return {
+    out = {
         "fp32_bytes": fp_bytes,
         "quant_bytes": q_bytes,
         "compression": fp_bytes / max(q_bytes, 1.0),
         "inner_params": float(n_inner),
         "boundary_params": float(n_bound),
     }
+    if kv_layers:
+        tokens = max(int(kv_tokens), 1)
+        kv_fp = kv_q = 0.0
+        for name, (heads, head_dim) in kv_layers.items():
+            bits = p.kv_bits_for(name)
+            kv_fp += tokens * kv_cache_token_bytes(None, heads, head_dim)
+            kv_q += tokens * kv_cache_token_bytes(
+                bits, heads, head_dim, p.kv_slice(bits or 8))
+        out.update({
+            "kv_tokens": float(tokens),
+            "kv_fp16_bytes": kv_fp,
+            "kv_quant_bytes": kv_q,
+            "kv_compression": kv_fp / max(kv_q, 1.0),
+            "total_fp_bytes": fp_bytes + kv_fp,
+            "total_quant_bytes": q_bytes + kv_q,
+        })
+    return out
 
 
 # --- schema validation CLI (CI hook) ---------------------------------------
@@ -557,6 +793,7 @@ def validate_plan_json(path, arch: Optional[str] = None) -> PrecisionPlan:
         from repro import configs  # late import: configs pulls model deps
         api = configs.get(arch)
         plan.validate_layers(api.plan_layer_names())
+        plan.validate_kv(api.kv_layer_names(), arch=arch)
     return plan
 
 
@@ -651,6 +888,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"[plan] ok {path}: {len(plan.layers)} named layers, "
               f"w_bits {plan.distinct_wbits()}, default "
               f"w{plan.default.w_bits}k{plan.default.k}"
+              + (f", kv_bits {plan.distinct_kvbits()} "
+                 f"({plan.kv_store()})" if plan.kv_enabled() else "")
               + (f", arch {args.arch or plan.arch}"
                  if (args.arch or plan.arch) else ""))
     return rc

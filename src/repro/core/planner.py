@@ -48,14 +48,19 @@ __all__ = [
     "default_k",
     "weight_ptq_sensitivity",
     "calibration_sensitivity",
+    "kv_cache_sensitivity",
     "layer_latency_table",
+    "kv_decode_latency_table",
     "plan_latency",
     "greedy_bit_descent",
+    "greedy_joint_descent",
     "pareto_front",
     "plan_search",
 ]
 
 BIT_OPTIONS = (8, 4, 2, 1)
+# KV-cache word-length ladder; 16 means "keep the fp16 cache" (no kv entry).
+KV_BIT_OPTIONS = (16, 8, 4, 2)
 
 
 def default_k(w_bits: int) -> int:
@@ -146,6 +151,70 @@ def calibration_sensitivity(
     return out
 
 
+def _round_bf16(x: np.ndarray) -> np.ndarray:
+    """Round f32 values to the nearest bf16 (ties to even), as f64.
+
+    Mirrors the stored-grid contract of nn/kvcache.py without importing
+    jax — the planner stays numpy-only.
+    """
+    a = np.ascontiguousarray(np.asarray(x, np.float32)).view(np.uint32)
+    r = (a + np.uint32(0x7FFF) + ((a >> np.uint32(16)) & np.uint32(1))) \
+        & np.uint32(0xFFFF0000)
+    return r.view(np.float32).astype(np.float64)
+
+
+def kv_cache_sensitivity(
+    kv_values: Mapping[str, np.ndarray],
+    *,
+    bit_options: Sequence[int] = KV_BIT_OPTIONS,
+    weights: Optional[Mapping[str, float]] = None,
+) -> Dict[str, Dict[int, float]]:
+    """{cached tensor: {kv_bits: error}} — per-(token, head) affine PTQ MSE.
+
+    ``kv_values`` maps cached-tensor name -> sample rows ``(..., head_dim)``
+    of what the serve path would cache (post-rope K, the V projections).
+    Each candidate word-length replays EXACTLY the nn/kvcache.py grid —
+    bf16-rounded scale/zero, unsigned codes — so the proxy measures the
+    same values the packed cache dequantizes to.  16 bits means keep fp
+    (zero error); ``weights`` optionally scales each tensor's MSE (e.g.
+    by its attention read volume), defaulting to the sample size.
+    """
+    out: Dict[str, Dict[int, float]] = {}
+    for name, x in kv_values.items():
+        flat = np.asarray(x, np.float64).reshape(-1, np.shape(x)[-1])
+        scale_w = float(weights[name]) if weights is not None \
+            else float(flat.size)
+        row: Dict[int, float] = {}
+        for b in bit_options:
+            if b >= 16:
+                row[b] = 0.0
+                continue
+            levels = (1 << b) - 1
+            mx, mn = flat.max(axis=-1), flat.min(axis=-1)
+            s = _round_bf16((mx - mn) / levels)
+            z = _round_bf16(mn)
+            sf = np.maximum(s, 1e-20)
+            codes = np.clip(
+                np.round((flat - z[:, None]) / sf[:, None]), 0, levels)
+            deq = codes * s[:, None] + z[:, None]
+            row[b] = float(np.mean((flat - deq) ** 2)) * scale_w
+        out[name] = row
+    return out
+
+
+def _kv_proxy_sensitivity(
+    kv_workload: Mapping[str, Tuple[int, int]],
+    bit_options: Sequence[int],
+) -> Dict[str, Dict[int, float]]:
+    """Calibration-free fallback: uniform-quantizer noise power 4^-b
+    scaled by the tensor's read width (heads * head_dim)."""
+    return {
+        name: {b: 0.0 if b >= 16 else float(heads * hd) * 4.0 ** (-b)
+               for b in bit_options}
+        for name, (heads, hd) in kv_workload.items()
+    }
+
+
 # --- latency model ---------------------------------------------------------
 
 
@@ -175,6 +244,36 @@ def layer_latency_table(
             c, m = gemm_time(g, tile, fmt, hw, variant)
             row[b] = max(c, m)
         out[g.name] = row
+    return out
+
+
+def kv_decode_latency_table(
+    kv_workload: Mapping[str, Tuple[int, int]],
+    *,
+    tokens: int,
+    batch: int = 1,
+    bit_options: Sequence[int] = KV_BIT_OPTIONS,
+    slice_k: int = 4,
+    hw: HW = TPU_V5E,
+) -> Dict[str, Dict[int, float]]:
+    """{cached tensor: {kv_bits: decode_s}} — the decode-bandwidth term.
+
+    A decode step streams every resident cache row once, so its roofline
+    time is pure HBM bandwidth over the *stored* bytes: packed digit
+    planes + scale/zero at ``kv_bits``, bf16 rows at 16.  ``tokens`` is
+    the context length the plan is being tuned for (the paper's
+    per-operating-point workload), ``batch`` the concurrent decodes.
+    """
+    from repro.core.plan import kv_cache_token_bytes
+    out: Dict[str, Dict[int, float]] = {}
+    for name, (heads, head_dim) in kv_workload.items():
+        row: Dict[int, float] = {}
+        for b in bit_options:
+            bits = None if b >= 16 else b
+            per_tok = kv_cache_token_bytes(bits, heads, head_dim,
+                                           slice_k=slice_k)
+            row[b] = batch * tokens * per_tok / hw.hbm_bw
+        out[name] = row
     return out
 
 
@@ -225,6 +324,7 @@ class PlanPoint:
             "fps": self.fps,
             "footprint_bytes": self.footprint_bytes,
             "distinct_wbits": list(self.plan.distinct_wbits()),
+            "distinct_kv_bits": list(self.plan.distinct_kvbits()),
         }
 
 
@@ -271,15 +371,33 @@ def _mk_plan(
     variant: str,
     channel_wise: bool,
     name: str,
+    kv_bits: Optional[Mapping[str, Optional[int]]] = None,
+    kv_slice: int = 4,
 ) -> PrecisionPlan:
     layers = {
         n: LayerPlan(w_bits=b, k=k_for_bits(b), channel_wise=channel_wise)
         for n, b in bits.items()
     }
-    return PrecisionPlan.build(
+    enabled = False
+    if kv_bits:
+        for n, b in kv_bits.items():
+            if b is None:
+                continue
+            enabled = True
+            if n in layers:  # cached-tensor name coincides with a weight
+                layers[n] = dataclasses.replace(layers[n], kv_bits=b)
+            else:
+                layers[n] = LayerPlan(w_bits=8, k=k_for_bits(8),
+                                      channel_wise=channel_wise, kv_bits=b)
+    plan = PrecisionPlan.build(
         layers, default=LayerPlan(w_bits=8, k=k_for_bits(8),
                                   channel_wise=channel_wise),
         variant=variant, name=name)
+    if enabled:
+        from repro.core.plan import KVCachePlan
+        plan = dataclasses.replace(
+            plan, kv=KVCachePlan(bits=None, k=min(kv_slice, 4)))
+    return plan
 
 
 def greedy_bit_descent(
@@ -338,6 +456,88 @@ def greedy_bit_descent(
     return trajectory
 
 
+def greedy_joint_descent(
+    inner_layers: Sequence[str],
+    sensitivity: Mapping[str, Mapping[int, float]],
+    latency: Mapping[str, Mapping[int, float]],
+    kv_names: Sequence[str],
+    kv_sensitivity: Mapping[str, Mapping[int, float]],
+    kv_latency: Mapping[str, Mapping[int, float]],
+    *,
+    bit_options: Sequence[int] = BIT_OPTIONS,
+    kv_bit_options: Sequence[int] = KV_BIT_OPTIONS,
+    k_for_bits: Callable[[int], int] = default_k,
+    variant: str = "st",
+    channel_wise: bool = False,
+    min_bits: int = 1,
+    kv_slice: int = 4,
+) -> List[PlanPoint]:
+    """Greedy descent over weight AND KV-cache word-lengths jointly.
+
+    Same ratio rule as :func:`greedy_bit_descent`, but each step's
+    candidate moves include dropping one cached tensor down the KV
+    ladder (16 -> 8 -> 4 -> 2): the weight moves gain compute/weight-
+    roofline time, the KV moves gain decode-bandwidth time, and both
+    compete on latency-gain per unit sensitivity-cost — so the search
+    spends its error budget wherever a byte buys the most decode time.
+    """
+    opts = sorted(set(bit_options), reverse=True)
+    kv_opts = sorted(set(kv_bit_options), reverse=True)
+    bits = {n: opts[0] for n in inner_layers}
+    kv_bits = {n: kv_opts[0] for n in kv_names}
+    eps = 1e-30
+
+    def point(tag: str) -> PlanPoint:
+        assign = {n: (None if b >= 16 else b) for n, b in kv_bits.items()}
+        plan = _mk_plan(bits, k_for_bits=k_for_bits, variant=variant,
+                        channel_wise=channel_wise, name=tag,
+                        kv_bits=assign, kv_slice=kv_slice)
+        err = sum(sensitivity[n][b] for n, b in bits.items()) \
+            + sum(kv_sensitivity[n][b] for n, b in kv_bits.items())
+        lat = plan_latency(latency, bits) \
+            + sum(kv_latency[n][b] for n, b in kv_bits.items())
+        return PlanPoint(name=tag, plan=plan,
+                         bits=tuple(sorted(bits.items())),
+                         error=err, latency_s=lat)
+
+    trajectory = [point("joint_step0")]
+    step = 0
+    while True:
+        best: Optional[Tuple[float, str, str, int]] = None
+        for n in inner_layers:
+            idx = opts.index(bits[n])
+            if idx + 1 >= len(opts) or opts[idx + 1] < min_bits:
+                continue
+            nb = opts[idx + 1]
+            gain = latency[n][bits[n]] - latency[n][nb]
+            if gain <= 0:
+                continue
+            cost = max(sensitivity[n][nb] - sensitivity[n][bits[n]], 0.0)
+            ratio = gain / (cost + eps)
+            if best is None or ratio > best[0]:
+                best = (ratio, "w", n, nb)
+        for n in kv_names:
+            idx = kv_opts.index(kv_bits[n])
+            if idx + 1 >= len(kv_opts):
+                continue
+            nb = kv_opts[idx + 1]
+            gain = kv_latency[n][kv_bits[n]] - kv_latency[n][nb]
+            if gain <= 0:
+                continue
+            cost = max(kv_sensitivity[n][nb] - kv_sensitivity[n][kv_bits[n]],
+                       0.0)
+            ratio = gain / (cost + eps)
+            if best is None or ratio > best[0]:
+                best = (ratio, "kv", n, nb)
+        if best is None:
+            break
+        _, kind, n, nb = best
+        (bits if kind == "w" else kv_bits)[n] = nb
+        step += 1
+        trajectory.append(point(f"joint_step{step}"))
+    return trajectory
+
+
 def plan_search(
     gemms: Sequence[Gemm],
     sensitivity: Mapping[str, Mapping[int, float]],
@@ -350,6 +550,12 @@ def plan_search(
     layer_params: Optional[Mapping[str, int]] = None,
     budget_bytes: Optional[float] = None,
     budget_error: Optional[float] = None,
+    kv_workload: Optional[Mapping[str, Tuple[int, int]]] = None,
+    kv_sensitivity: Optional[Mapping[str, Mapping[int, float]]] = None,
+    kv_tokens: int = 4096,
+    kv_batch: int = 1,
+    kv_bit_options: Sequence[int] = KV_BIT_OPTIONS,
+    kv_slice: int = 4,
 ) -> PlanSearchResult:
     """The full sensitivity-guided DSE: greedy trajectory + uniform plans
     -> Pareto front -> budgeted choice.
@@ -361,6 +567,15 @@ def plan_search(
     operating points), breaking error ties toward the faster plan and
     falling back to the smallest-footprint frontier point when none
     qualifies.
+
+    Passing ``kv_workload`` (``api.kv_cache_workload()``) turns on joint
+    weight + KV-cache descent: every plan point gains a decode-bandwidth
+    roofline term (:func:`kv_decode_latency_table` at ``kv_tokens`` x
+    ``kv_batch``), the greedy search may spend steps dropping a cached
+    tensor down the KV ladder instead of a weight layer, and emitted
+    plans carry the version-2 ``kv_bits`` assignment.  ``kv_sensitivity``
+    (from :func:`kv_cache_sensitivity` on calibration activations)
+    defaults to an analytic 4^-b noise proxy.
     """
     inner = [g.name for g in gemms if g.layer_class != "boundary"]
     missing = [n for n in inner if n not in sensitivity]
@@ -374,10 +589,34 @@ def plan_search(
         gemms, bit_options=bit_options, k_for_bits=k_for_bits, hw=hw,
         variant=variant)
 
-    points = greedy_bit_descent(
-        inner, sensitivity, latency, bit_options=bit_options,
-        k_for_bits=k_for_bits, variant=variant, channel_wise=channel_wise)
+    kv_names: List[str] = []
+    kv_latency: Dict[str, Dict[int, float]] = {}
+    if kv_workload:
+        kv_names = sorted(kv_workload)
+        kv_latency = kv_decode_latency_table(
+            kv_workload, tokens=kv_tokens, batch=kv_batch,
+            bit_options=kv_bit_options, slice_k=kv_slice, hw=hw)
+        if kv_sensitivity is None:
+            kv_sensitivity = _kv_proxy_sensitivity(kv_workload,
+                                                   kv_bit_options)
+        missing_kv = [n for n in kv_names if n not in kv_sensitivity]
+        if missing_kv:
+            raise ValueError(
+                f"kv_sensitivity missing cached tensors: {missing_kv}")
+        points = greedy_joint_descent(
+            inner, sensitivity, latency, kv_names, kv_sensitivity,
+            kv_latency, bit_options=bit_options,
+            kv_bit_options=kv_bit_options, k_for_bits=k_for_bits,
+            variant=variant, channel_wise=channel_wise, kv_slice=kv_slice)
+    else:
+        points = greedy_bit_descent(
+            inner, sensitivity, latency, bit_options=bit_options,
+            k_for_bits=k_for_bits, variant=variant,
+            channel_wise=channel_wise)
     # Uniform plans: the paper's Table III/IV rows, always in the scatter.
+    # Under joint search they keep the fp16 cache, so the scatter shows
+    # what weight-only quantization leaves on the decode-bandwidth table.
+    kv_fp = sum(kv_latency[n][max(kv_bit_options)] for n in kv_names)
     for b in sorted(set(bit_options), reverse=True):
         bits = {n: b for n in inner}
         plan = _mk_plan(bits, k_for_bits=k_for_bits, variant=variant,
@@ -385,16 +624,23 @@ def plan_search(
         points.append(PlanPoint(
             name=f"uniform_w{b}", plan=plan, bits=tuple(sorted(bits.items())),
             error=sum(sensitivity[n][b] for n in inner),
-            latency_s=plan_latency(latency, bits)))
+            latency_s=plan_latency(latency, bits) + kv_fp))
 
     if layer_params is not None:
         from repro.core.plan import plan_footprint_report
         classes = {g.name: g.layer_class for g in gemms}
-        points = [
-            dataclasses.replace(p, footprint_bytes=plan_footprint_report(
-                layer_params, classes, p.plan)["quant_bytes"])
-            for p in points
-        ]
+
+        def fp_bytes(p: PlanPoint) -> float:
+            # Under joint search EVERY point counts its resident cache
+            # (fp16 for non-kv plans) so footprints compare like-with-like.
+            rep = plan_footprint_report(
+                layer_params, classes, p.plan,
+                kv_layers=kv_workload or None,
+                kv_tokens=kv_tokens * kv_batch)
+            return rep.get("total_quant_bytes", rep["quant_bytes"])
+
+        points = [dataclasses.replace(p, footprint_bytes=fp_bytes(p))
+                  for p in points]
 
     frontier = pareto_front(points)
     feasible = [

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core import flags
 from repro.kernels.flashattn import kernel as _kernel
 
-__all__ = ["flash_attention"]
+__all__ = ["flash_attention", "flash_attention_packed"]
 
 
 def flash_attention(
@@ -61,6 +61,74 @@ def flash_attention(
         q_offset=q_offset, softmax_scale=softmax_scale,
         block_q=bq, block_k=bk, interpret=interp)
     return out[:, :sq]
+
+
+def flash_attention_packed(
+    q: jax.Array,            # (B, Sq, H, D)
+    kq: dict,                # {"p": (Pk, B, Sk, KV, pd) u8, "s"/"z": (B, Sk, KV)}
+    vq: dict,                # same layout for V
+    fmt_k,                   # nn.kvcache.KVFormat of K
+    fmt_v,                   # nn.kvcache.KVFormat of V
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash attention reading K/V straight from the packed cache layout.
+
+    ``kq``/``vq`` are the digit-plane cache leaf dicts that
+    ``nn.kvcache.pack_kv`` writes (and the decode cache stores): uint8
+    planes packed 8//k digits per byte along head_dim plus bf16
+    per-(token, head) scale/zero.  The kernel never materializes
+    dequantized K/V — digits are unpacked and contracted in VMEM, so HBM
+    reads are the *packed* bytes (the decode-bandwidth win).
+    """
+    b, sq, h, d = q.shape
+    sk, kvh = kq["p"].shape[2], kq["p"].shape[3]
+    assert fmt_k.d == d and fmt_v.d == d, (fmt_k, fmt_v, d)
+    interp = flags.default_interpret() if interpret is None else interpret
+
+    kp, ks, kz = kq["p"], kq["s"], kq["z"]
+    vp, vs, vz = vq["p"], vq["s"], vq["z"]
+    if kvh != h:  # GQA: replicate kv heads over their q-head groups
+        head_map = jnp.arange(h) // (h // kvh)
+        kp = jnp.take(kp, head_map, axis=3)
+        vp = jnp.take(vp, head_map, axis=3)
+        ks, kz, vs, vz = (jnp.take(t, head_map, axis=2)
+                          for t in (ks, kz, vs, vz))
+
+    # kernel layout: planes (B, H, P, S, pd); scales (B, H, S) f32
+    kp = jnp.transpose(kp, (1, 3, 0, 2, 4))
+    vp = jnp.transpose(vp, (1, 3, 0, 2, 4))
+    ks, kz, vs, vz = (jnp.transpose(t, (0, 2, 1)).astype(jnp.float32)
+                      for t in (ks, kz, vs, vz))
+    qt = jnp.swapaxes(q, 1, 2)
+
+    bq = min(block_q, _round_pow2(sq))
+    bk = min(block_k, _round_pow2(sk))
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # zero planes/scales/zeros dequantize to 0; the rows are hidden
+        # from every real q row by the same treat-pad-as-future causal
+        # trick flash_attention uses.
+        kp = jnp.pad(kp, ((0, 0), (0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vp = jnp.pad(vp, ((0, 0), (0, 0), (0, 0), (0, pad_k), (0, 0)))
+        ks, kz, vs, vz = (jnp.pad(t, ((0, 0), (0, 0), (0, pad_k)))
+                          for t in (ks, kz, vs, vz))
+    out = _kernel.flash_fwd_packed(
+        qt, kp, ks, kz, vp, vs, vz,
+        k_slice=fmt_k.k, v_slice=fmt_v.k,
+        causal=causal or pad_k > 0, window=window, q_offset=q_offset,
+        softmax_scale=softmax_scale, block_q=bq, block_k=bk,
+        interpret=interp)
+    return jnp.swapaxes(out, 1, 2)[:, :sq]
 
 
 def _round_pow2(n: int) -> int:

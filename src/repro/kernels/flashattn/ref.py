@@ -36,3 +36,64 @@ def attention_ref(
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def _expand_kv_heads(x: jax.Array, h: int, axis: int) -> jax.Array:
+    kvh = x.shape[axis]
+    if kvh == h:
+        return x
+    head_map = jnp.arange(h) // (h // kvh)
+    return jnp.take(x, head_map, axis=axis)
+
+
+def attention_qdq_ref(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, KV, D)
+    v: jax.Array,            # (B, Sk, KV, D)
+    fmt_k,                   # nn.kvcache.KVFormat or None (keep fp)
+    fmt_v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Quantize-then-dequantize oracle: what a low-bit KV cache *means*.
+
+    K/V pass through the per-(token, head) affine grid of nn/kvcache.py
+    and attention runs on the recovered bf16 values — the semantics every
+    packed path (XLA recombined and the Pallas kernel) must reproduce.
+    """
+    from repro.nn import kvcache
+    kd = kvcache.qdq_kv(k, fmt_k) if fmt_k is not None else k
+    vd = kvcache.qdq_kv(v, fmt_v) if fmt_v is not None else v
+    h = q.shape[2]
+    return attention_ref(
+        _expand_kv_heads(q, h, 2), _expand_kv_heads(kd, h, 2),
+        _expand_kv_heads(vd, h, 2), causal=causal, window=window,
+        q_offset=q_offset, softmax_scale=softmax_scale)
+
+
+def attention_packed_ref(
+    q: jax.Array,            # (B, Sq, H, D)
+    kq: dict,                # pack_kv leaf: {"p": (P,B,Sk,KV,pd), "s", "z"}
+    vq: dict,
+    fmt_k,
+    fmt_v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """XLA recombined-integer oracle for the packed flash kernel: unpack
+    bytes -> digits -> codes -> bf16 (bit-identical to qdq_kv), then run
+    the materialized-softmax reference."""
+    from repro.nn import kvcache
+    kd = kvcache.unpack_kv(kq, fmt_k)
+    vd = kvcache.unpack_kv(vq, fmt_v)
+    h = q.shape[2]
+    return attention_ref(
+        q, _expand_kv_heads(kd, h, 2), _expand_kv_heads(vd, h, 2),
+        causal=causal, window=window, q_offset=q_offset,
+        softmax_scale=softmax_scale)

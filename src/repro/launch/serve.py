@@ -198,11 +198,22 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=None,
                     help="force N host CPU devices (placeholder topology; "
                          "must run before the first jax computation)")
+    ap.add_argument("--xla-serving-flags", action="store_true",
+                    help="apply the latency-hiding/async-collective "
+                         "XLA_FLAGS set (core.flags.SERVING_XLA_FLAGS) "
+                         "before backend init; flags already present in "
+                         "the environment are left untouched")
     ap.add_argument("--mesh", default=None,
                     help="serve mesh 'DATAxMODEL' (e.g. 8x1): shard the "
                          "packed tree + batch across local devices")
     args = ap.parse_args(argv)
 
+    if args.xla_serving_flags:
+        # Must run before the first backend initialization, same as
+        # --devices below: XLA flags lock with the backend.
+        from repro.core import flags as _flags
+        os.environ["XLA_FLAGS"] = _flags.serving_xla_flags()
+        print(f"[serve] XLA_FLAGS = {os.environ['XLA_FLAGS']}")
     if args.devices:
         # Device count locks at the first backend initialization; jax is
         # imported but nothing has touched devices yet at this point.

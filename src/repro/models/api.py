@@ -7,6 +7,7 @@ ModelAPI.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -16,6 +17,13 @@ from repro.core.precision import PrecisionPolicy
 from repro.nn import param as nnp
 
 __all__ = ["ModelAPI"]
+
+
+def _takes_policy(fn: Callable) -> bool:
+    try:
+        return "policy" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
 
 
 @dataclasses.dataclass
@@ -62,9 +70,16 @@ class ModelAPI:
                                     self.policy, mode=mode, impl=impl)
 
     def cache_specs(self, batch: int, max_len: int):
+        # kv-aware families lay the cache out per plan (packed digit
+        # planes); the rest keep their policy-free signature.
+        if _takes_policy(self.mod.cache_specs):
+            return self.mod.cache_specs(self.cfg, batch, max_len,
+                                        policy=self.policy)
         return self.mod.cache_specs(self.cfg, batch, max_len)
 
     def cache_axes(self):
+        if _takes_policy(self.mod.cache_axes):
+            return self.mod.cache_axes(self.cfg, policy=self.policy)
         return self.mod.cache_axes(self.cfg)
 
     # --- analysis ----------------------------------------------------------
@@ -81,6 +96,19 @@ class ModelAPI:
         if fn is not None:
             return fn(self.cfg)
         return [g.name for g in self.gemm_workload(1)]
+
+    def kv_layer_names(self):
+        """Cached-tensor names a plan may bind ``kv_bits`` to; empty for
+        models with no decode KV cache (CNNs, recurrent states, MLA
+        latents)."""
+        fn = getattr(self.mod, "kv_layer_names", None)
+        return fn(self.cfg) if fn is not None else []
+
+    def kv_cache_workload(self):
+        """{cached tensor name: (kv_heads, head_dim)} for footprint and
+        planner accounting; empty when the model has no KV cache."""
+        fn = getattr(self.mod, "kv_cache_workload", None)
+        return fn(self.cfg) if fn is not None else {}
 
     def model_flops(self, *, tokens: int, step: str) -> float:
         return self.mod.model_flops(self.cfg, tokens=tokens, step=step)

@@ -38,6 +38,7 @@ from repro.core import plan as plan_lib
 from repro.core.dse import Gemm
 from repro.core.precision import PrecisionPolicy
 from repro.nn import attention as attn
+from repro.nn import kvcache
 from repro.nn import layers as nnl
 from repro.nn import moe as nnmoe
 from repro.nn import quantized as Q
@@ -47,7 +48,8 @@ from repro.nn.partitioning import constrain
 
 __all__ = ["MLAConfig", "TransformerConfig", "specs", "forward", "prefill",
            "decode_step", "cache_specs", "gemm_workload", "model_flops",
-           "plan_layer_names", "scan_format_groups", "regroup_layers"]
+           "plan_layer_names", "kv_layer_names", "kv_cache_workload",
+           "scan_format_groups", "regroup_layers"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,10 +124,66 @@ def plan_layer_names(cfg: TransformerConfig) -> List[str]:
     return sorted(names)
 
 
+def kv_layer_names(cfg: TransformerConfig) -> List[str]:
+    """Cached-tensor names a plan may bind ``kv_bits`` to: the decode
+    cache holds one K and one V tensor per GQA layer.  Empty for MLA —
+    the latent ``c_kv`` cache is not a per-head tensor and stays bf16."""
+    if cfg.mla is not None:
+        return []
+    names = {"k", "v"}
+    for i in range(cfg.n_layers):
+        names.update((f"l{i}.k", f"l{i}.v"))
+    return sorted(names)
+
+
+def kv_cache_workload(cfg: TransformerConfig) -> Dict[str, Tuple[int, int]]:
+    """{cached tensor name: (kv_heads, head_dim)} — the decode-cache
+    analogue of ``gemm_workload`` for footprint/planner accounting."""
+    if cfg.mla is not None:
+        return {}
+    return {f"l{i}.{t}": (cfg.n_kv, cfg.hd)
+            for i in range(cfg.n_layers) for t in ("k", "v")}
+
+
+def _kv_fmt(cfg, policy, name: str) -> Optional[kvcache.KVFormat]:
+    bits = plan_lib.resolve_kv_bits(policy, name)
+    if bits is None:
+        return None
+    return kvcache.KVFormat(bits, policy.kv_slice(bits), cfg.hd)
+
+
+def _kv_formats(cfg, policy):
+    """None for fp caches, else ``(store, [(fmt_k, fmt_v)] per depth)``.
+
+    The single gate every cache-shaped code path asks; a plan whose kv
+    keys never resolve onto this config's layers degenerates to None.
+    """
+    if not isinstance(policy, plan_lib.PrecisionPlan) \
+            or not policy.kv_enabled():
+        return None
+    fmts = [(_kv_fmt(cfg, policy, f"l{i}.k"), _kv_fmt(cfg, policy, f"l{i}.v"))
+            for i in range(cfg.n_layers)]
+    if all(fk is None and fv is None for fk, fv in fmts):
+        return None
+    if cfg.mla is not None:
+        raise ValueError(
+            f"plan {policy.name or '<unnamed>'!r} sets KV-cache "
+            f"word-lengths but {cfg.name} uses MLA latent caches, which "
+            f"have no per-head K/V tensors to quantize")
+    if cfg.dense_first_n:
+        raise ValueError("KV-cache quantization does not support "
+                         "dense-prefix (unrolled) layer stacks")
+    return policy.kv_store(), fmts
+
+
 def _layer_signature(cfg, policy, i: int):
     """The format tuple that decides scan-group membership of depth i."""
-    return tuple(plan_lib.resolve_policy(policy, f"l{i}.{b}")
-                 for b in _layer_bases(cfg, dense_mlp=False))
+    sig = tuple(plan_lib.resolve_policy(policy, f"l{i}.{b}")
+                for b in _layer_bases(cfg, dense_mlp=False))
+    # cache formats live in the scanned cache leaves, so they gate group
+    # membership exactly like weight formats do
+    return sig + (plan_lib.resolve_kv_bits(policy, f"l{i}.k"),
+                  plan_lib.resolve_kv_bits(policy, f"l{i}.v"))
 
 
 def scan_format_groups(cfg: TransformerConfig, policy) -> List[Tuple[int, int]]:
@@ -338,7 +396,7 @@ def _apply_mlp(cfg, p, x, policy, serve, impl, dense_mlp=False, lname=""):
 
 
 def _layer_fwd(cfg, p, x, policy, sin, cos, *, serve, impl, dense_mlp=False,
-               lname=""):
+               lname="", kv_fmts=None, kv_store="packed"):
     """Pre-norm block; returns (x, kv_cache_of_layer)."""
     _, napply = cfg.norm_fns
     h = napply(p["ln1"], x)
@@ -353,7 +411,8 @@ def _layer_fwd(cfg, p, x, policy, sin, cos, *, serve, impl, dense_mlp=False,
         o, cache = attn.gqa_prefill(
             p["attn"], h, policy, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
             head_dim=cfg.hd, sin=sin, cos=cos, serve=serve, impl=impl,
-            chunk=cfg.attn_chunk, attn_impl=cfg.attn_impl, lname=lname)
+            chunk=cfg.attn_chunk, attn_impl=cfg.attn_impl, lname=lname,
+            kv_fmts=kv_fmts, kv_store=kv_store)
     x = x + o
     x = constrain(x, ("batch", "seq", "act_embed"))
     h = napply(p["ln2"], x)
@@ -408,6 +467,9 @@ def _run_layers(cfg, params, x, policy, sin, cos, *, serve, impl,
     """Dense-prefix layers unrolled, the remainder scanned — one scan per
     format group (heterogeneous plans), order-preserving."""
     params = regroup_layers(cfg, params, policy)
+    kv_info = _kv_formats(cfg, policy)
+    kv_store = kv_info[0] if kv_info is not None else "packed"
+    kv_packed = kv_info is not None and kv_store == "packed"
     cache_parts = []
     for i in range(cfg.dense_first_n):
         x, cache_i = _layer_fwd(cfg, params[f"dense_layer_{i}"], x, policy,
@@ -420,10 +482,13 @@ def _run_layers(cfg, params, x, policy, sin, cos, *, serve, impl,
            if cfg.remat_policy == "dots" else None)
     for lname, lp_group, _s, _n in _layer_groups(cfg, params["layers"],
                                                  policy):
-        def body(carry, lp, _lname=lname):
+        fmts_g = kv_info[1][_s] if kv_info is not None else None
+
+        def body(carry, lp, _lname=lname, _fmts=fmts_g):
             lp = _body_constrain(cfg, lp, serve, policy, _lname)
             y, cache = _layer_fwd(cfg, lp, carry, policy, sin, cos,
-                                  serve=serve, impl=impl, lname=_lname)
+                                  serve=serve, impl=impl, lname=_lname,
+                                  kv_fmts=_fmts, kv_store=kv_store)
             return y, cache if collect_cache else None
 
         fn = jax.checkpoint(body, policy=pol) if cfg.remat else body
@@ -433,6 +498,10 @@ def _run_layers(cfg, params, x, policy, sin, cos, *, serve, impl,
             cache_parts.append(caches)
     if not collect_cache:
         return x, None
+    if kv_packed:
+        # packed caches stay group-keyed: per-group leaf shapes differ
+        # (plane counts), so there is no cross-group stack to rebuild
+        return x, {f"g{j}": part for j, part in enumerate(cache_parts)}
     caches = (cache_parts[0] if len(cache_parts) == 1 else
               jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                            *cache_parts))
@@ -471,25 +540,67 @@ def prefill(cfg: TransformerConfig, params, tokens: jax.Array,
     return logits[:, 0, :], caches
 
 
-def cache_specs(cfg: TransformerConfig, batch: int, max_len: int):
-    """ShapeDtypeStructs of the decode cache (stacked over layers)."""
+def cache_specs(cfg: TransformerConfig, batch: int, max_len: int,
+                policy=None):
+    """ShapeDtypeStructs of the decode cache (stacked over layers).
+
+    A kv-carrying plan with ``store='packed'`` swaps the bf16 (K, V)
+    tuple for a group-keyed tree of digit-plane uint8 codes plus bf16
+    scale/zero per (token, head); 'qdq' and fp plans keep the legacy
+    bf16 tuple layout exactly.
+    """
     l = cfg.n_layers
     if cfg.mla is not None:
+        _kv_formats(cfg, policy)  # raises on kv-carrying plans
         return (
             jax.ShapeDtypeStruct((l, batch, max_len, cfg.mla.kv_lora), jnp.bfloat16),
             jax.ShapeDtypeStruct((l, batch, max_len, cfg.mla.qk_rope), jnp.bfloat16),
         )
+    kv_info = _kv_formats(cfg, policy)
+    if kv_info is not None and kv_info[0] == "packed":
+        store, fmts = kv_info
+        sds = jax.ShapeDtypeStruct
+
+        def tensor_spec(fmt, n):
+            if fmt is None:
+                return sds((n, batch, max_len, cfg.n_kv, cfg.hd),
+                           jnp.bfloat16)
+            return {
+                "p": sds((n, fmt.planes, batch, max_len, cfg.n_kv,
+                          fmt.packed_d), jnp.uint8),
+                "s": sds((n, batch, max_len, cfg.n_kv), jnp.bfloat16),
+                "z": sds((n, batch, max_len, cfg.n_kv), jnp.bfloat16),
+            }
+
+        return {f"g{j}": {"k": tensor_spec(fmts[s][0], n),
+                          "v": tensor_spec(fmts[s][1], n)}
+                for j, (s, n) in enumerate(scan_format_groups(cfg, policy))}
     return (
         jax.ShapeDtypeStruct((l, batch, max_len, cfg.n_kv, cfg.hd), jnp.bfloat16),
         jax.ShapeDtypeStruct((l, batch, max_len, cfg.n_kv, cfg.hd), jnp.bfloat16),
     )
 
 
-def cache_axes(cfg: TransformerConfig):
+def cache_axes(cfg: TransformerConfig, policy=None):
     """Logical axes of the cache (for sharding)."""
     if cfg.mla is not None:
         return (("layers", "batch", "kv_seq", None),
                 ("layers", "batch", "kv_seq", None))
+    kv_info = _kv_formats(cfg, policy)
+    if kv_info is not None and kv_info[0] == "packed":
+        store, fmts = kv_info
+
+        def tensor_axes(fmt):
+            if fmt is None:
+                return ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+            return {"p": ("layers", None, "batch", "kv_seq", "kv_heads",
+                          None),
+                    "s": ("layers", "batch", "kv_seq", "kv_heads"),
+                    "z": ("layers", "batch", "kv_seq", "kv_heads")}
+
+        return {f"g{j}": {"k": tensor_axes(fmts[s][0]),
+                          "v": tensor_axes(fmts[s][1])}
+                for j, (s, _n) in enumerate(scan_format_groups(cfg, policy))}
     return (("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
             ("layers", "batch", "kv_seq", "kv_heads", "head_dim"))
 
@@ -503,6 +614,8 @@ def decode_step(cfg: TransformerConfig, params, cache, tokens: jax.Array,
     """
     serve = mode == "serve"
     params = regroup_layers(cfg, params, policy)
+    kv_info = _kv_formats(cfg, policy)
+    kv_store = kv_info[0] if kv_info is not None else "packed"
     b = tokens.shape[0]
     x = _embed(cfg, params, tokens, serve)
     pos = jnp.broadcast_to(length[None, None] if length.ndim == 0 else length,
@@ -510,33 +623,54 @@ def decode_step(cfg: TransformerConfig, params, cache, tokens: jax.Array,
     rope_dim = cfg.mla.qk_rope if cfg.mla is not None else cfg.hd
     sin, cos = nnl.rotary_cache(pos, rope_dim, cfg.rope_base)
 
-    def one_layer(x, lp, c1, c2, dense_mlp=False, lname=""):
+    def one_layer(x, lp, c, dense_mlp=False, lname="", fmts=None):
         _, napply = cfg.norm_fns
         h = napply(lp["ln1"], x)
         if cfg.mla is not None:
-            o, (c1, c2) = attn.mla_decode(
-                lp["attn"], h, (c1, c2), length, policy,
+            o, c = attn.mla_decode(
+                lp["attn"], h, c, length, policy,
                 n_heads=cfg.n_heads, kv_lora=cfg.mla.kv_lora,
                 qk_nope=cfg.mla.qk_nope, qk_rope=cfg.mla.qk_rope,
                 v_head=cfg.mla.v_head, sin=sin, cos=cos, serve=serve,
                 impl=impl, lname=lname)
         else:
-            o, (c1, c2) = attn.gqa_decode(
-                lp["attn"], h, (c1, c2), length, policy,
+            o, c = attn.gqa_decode(
+                lp["attn"], h, c, length, policy,
                 n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
-                sin=sin, cos=cos, serve=serve, impl=impl, lname=lname)
+                sin=sin, cos=cos, serve=serve, impl=impl, lname=lname,
+                kv_fmts=fmts, kv_store=kv_store)
         x = x + o
         h = napply(lp["ln2"], x)
         x = x + _apply_mlp(cfg, lp, h, policy, serve, impl, dense_mlp, lname)
-        return x, c1, c2
+        return x, c
+
+    if kv_info is not None and kv_store == "packed":
+        # group-keyed packed cache: no cross-group stacking — each scan
+        # updates its own group subtree in place (appends stay packed)
+        new_cache = {}
+        for j, (lname, lp_group, start, n) in enumerate(
+                _layer_groups(cfg, params["layers"], policy)):
+            fmts_g = kv_info[1][start]
+
+            def body(carry, xs, _lname=lname, _fmts=fmts_g):
+                lp, cg = xs
+                y, cg = one_layer(carry, lp, cg, lname=_lname, fmts=_fmts)
+                return y, cg
+
+            x, cg_new = jax.lax.scan(
+                body, x, (lp_group, cache[f"g{j}"]),
+                unroll=True if cfg.scan_unroll else 1)
+            new_cache[f"g{j}"] = cg_new
+        logits = _head(cfg, params, x, policy, serve, impl)
+        return logits[:, 0, :], new_cache
 
     c1_all, c2_all = cache
     nd = cfg.dense_first_n
     c1_parts, c2_parts = [], []
     for i in range(nd):
-        x, c1_i, c2_i = one_layer(x, params[f"dense_layer_{i}"],
-                                  c1_all[i], c2_all[i], dense_mlp=True,
-                                  lname=f"l{i}.")
+        x, (c1_i, c2_i) = one_layer(x, params[f"dense_layer_{i}"],
+                                    (c1_all[i], c2_all[i]), dense_mlp=True,
+                                    lname=f"l{i}.")
         c1_parts.append(c1_i[None])
         c2_parts.append(c2_i[None])
 
@@ -544,9 +678,12 @@ def decode_step(cfg: TransformerConfig, params, cache, tokens: jax.Array,
     # stack sliced to the group's depth range.
     for lname, lp_group, start, n in _layer_groups(cfg, params["layers"],
                                                    policy):
-        def body(carry, xs, _lname=lname):
+        fmts_g = kv_info[1][start] if kv_info is not None else None
+
+        def body(carry, xs, _lname=lname, _fmts=fmts_g):
             lp, c1, c2 = xs
-            y, c1, c2 = one_layer(carry, lp, c1, c2, lname=_lname)
+            y, (c1, c2) = one_layer(carry, lp, (c1, c2), lname=_lname,
+                                    fmts=_fmts)
             return y, (c1, c2)
 
         x, (c1_g, c2_g) = jax.lax.scan(

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import flags
 from repro.core.precision import PrecisionPolicy
+from repro.nn import kvcache
 from repro.nn import partitioning as part
 from repro.nn import layers, quantized
 from repro.nn.param import ParamSpec
@@ -24,7 +25,7 @@ from repro.nn.param import ParamSpec
 __all__ = [
     "gqa_spec", "gqa_serve_spec", "gqa_prefill", "gqa_decode",
     "mla_spec", "mla_serve_spec", "mla_prefill", "mla_decode",
-    "chunked_attention", "decode_attention",
+    "chunked_attention", "decode_attention", "decode_attention_streamed",
 ]
 
 NEG_INF = -1e30
@@ -135,6 +136,86 @@ def decode_attention(
     return o.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
 
 
+def _kv_chunk(cache, fmt, start, c: int) -> jax.Array:
+    """One seq-chunk of a decode cache tensor as bf16 (B, c, KVH, D).
+
+    ``cache`` is either a bf16 array (fmt None) or a packed leaf dict:
+    planes (P, B, Smax, KVH, pd) / scale / zero — only the chunk's packed
+    bytes are sliced out of HBM before dequantizing."""
+    if fmt is None:
+        return jax.lax.dynamic_slice_in_dim(cache, start, c, axis=1)
+    return kvcache.unpack_kv({
+        "p": jax.lax.dynamic_slice_in_dim(cache["p"], start, c, axis=2),
+        "s": jax.lax.dynamic_slice_in_dim(cache["s"], start, c, axis=1),
+        "z": jax.lax.dynamic_slice_in_dim(cache["z"], start, c, axis=1),
+    }, fmt)
+
+
+def decode_attention_streamed(
+    q: jax.Array,          # (B, 1, H, D)
+    ck, cv,                # cache tensors: bf16 array or packed leaf dict
+    fmt_k, fmt_v,          # kvcache.KVFormat per tensor (None = bf16)
+    length: jax.Array,     # scalar int32: valid cache length incl. new token
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Single-token attention STREAMING the cache in seq chunks.
+
+    The online-softmax scan reads one chunk of cache per step — for a
+    packed cache that is the digit-plane bytes, dequantized in-flight —
+    so decode HBM traffic is proportional to the *stored* cache bytes
+    (the w4 cache streams 4/16 the bf16 bytes), instead of materializing
+    a full-length bf16 copy first.
+
+    Bit-identity contract: a packed cache chunk dequantizes to exactly
+    the values a 'qdq' bf16 cache holds (``unpack_kv == qdq_kv``), and
+    both stores run THIS routine with the same chunking — so packed and
+    qdq decode agree bit-for-bit, whatever mix of quantized/fp tensors
+    the plan assigns.
+    """
+    smax = ck["p"].shape[2] if fmt_k is not None else ck.shape[1]
+    kvh = ck["s"].shape[2] if fmt_k is not None else ck.shape[2]
+    b, _, h, d = q.shape
+    groups = h // kvh
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    c = min(chunk, smax)
+    if smax % c:
+        c = smax  # ragged max_len: degenerate to one full-cache chunk
+    n = smax // c
+    qg = (q[:, 0] * scale).astype(jnp.bfloat16).reshape(b, kvh, groups, d)
+
+    def step(carry, i):
+        acc, m, l = carry
+        start = i * c
+        kc = _kv_chunk(ck, fmt_k, start, c).astype(jnp.bfloat16)
+        vc = _kv_chunk(cv, fmt_v, start, c).astype(jnp.bfloat16)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, kc,
+                       preferred_element_type=jnp.float32)
+        pos = start + jnp.arange(c)
+        mask = pos < length
+        if window is not None:
+            mask = mask & (pos > length - 1 - window)
+        s = s + jnp.where(mask, 0.0, NEG_INF)[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(pexp, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgs,bskd->bkgd", pexp.astype(jnp.bfloat16), vc,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kvh, groups, d), jnp.float32)
+    m0 = jnp.full((b, kvh, groups), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, groups), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.arange(n),
+                                  unroll=flags.scan_unroll_arg())
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # GQA block (granite / nemotron / yi / chameleon / olmoe / whisper / rg).
 # ---------------------------------------------------------------------------
@@ -243,8 +324,18 @@ def gqa_prefill(
     serve: bool = False, rope: bool = True, chunk: int = 1024,
     impl: str = "xla", attn_impl: str = "xla",
     lname: str = "", names: Optional[Dict[str, str]] = None,
-) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Returns (out (B,S,D), (k_cache, v_cache) at (B,S,KVH,Dh))."""
+    kv_fmts=None, kv_store: str = "packed",
+):
+    """Returns (out (B,S,D), cache).
+
+    With ``kv_fmts=None`` the cache is the classic bf16
+    ``(k, v)`` tuple at (B,S,KVH,Dh).  A kv-quantizing layer passes
+    ``kv_fmts=(fmt_k, fmt_v)`` (either may be None = keep that tensor
+    fp): attention then CONSUMES the quantization-grid values — so
+    prefill logits match decode against the quantized cache — and the
+    returned cache is packed digit-plane leaf dicts (``store='packed'``)
+    or grid-value bf16 tensors (``store='qdq'``, the oracle layout).
+    """
     b, s, _ = x.shape
     kw = {"impl": impl} if serve else {}
     nm = _gqa_names(lname, names)
@@ -254,10 +345,32 @@ def gqa_prefill(
     if rope:
         q = layers.apply_rotary(q, sin, cos)
         k = layers.apply_rotary(k, sin, cos)
+    fmt_k, fmt_v = kv_fmts if kv_fmts is not None else (None, None)
+    packed = kv_fmts is not None and kv_store == "packed"
+    kq = vq = None
+    if fmt_k is not None:
+        if packed:
+            kq = kvcache.pack_kv(k, fmt_k)
+            k = kvcache.unpack_kv(kq, fmt_k)  # == qdq_kv(k) bit-for-bit
+        else:
+            k = kvcache.qdq_kv(k, fmt_k)
+    if fmt_v is not None:
+        if packed:
+            vq = kvcache.pack_kv(v, fmt_v)
+            v = kvcache.unpack_kv(vq, fmt_v)
+        else:
+            v = kvcache.qdq_kv(v, fmt_v)
     mesh = getattr(part._local, "mesh", None)
     use_flash = (serve and attn_impl == "flash"
                  and _flash_ok(mesh, part.current_rules(), b, s, n_heads))
-    if use_flash:
+    if use_flash and mesh is None and kq is not None and vq is not None \
+            and kv_store == "packed":
+        # in-kernel plane decode: codes travel to VMEM, never bf16 K/V
+        from repro.kernels.flashattn import ops as flash_ops
+        o = flash_ops.flash_attention_packed(
+            q, kq, vq, fmt_k, fmt_v, causal=causal, window=window,
+            block_k=chunk)
+    elif use_flash:
         # Pallas kernel: scores never touch HBM (EXPERIMENTS.md §Perf).
         o = _flash_sharded(q, k, v, n_heads=n_heads, n_kv=n_kv,
                            causal=causal, window=window, chunk=chunk)
@@ -267,19 +380,42 @@ def gqa_prefill(
         o = chunked_attention(q, kx, vx, causal=causal, window=window,
                               chunk=chunk)
     o = o.reshape(b, s, n_heads * head_dim)
-    return _proj(p["o"], o, policy, serve, nm["o"], **kw), (k, v)
+    out = _proj(p["o"], o, policy, serve, nm["o"], **kw)
+    if kv_fmts is None:
+        return out, (k, v)
+    if kv_store == "packed":
+        return out, {"k": kq if fmt_k is not None else k,
+                     "v": vq if fmt_v is not None else v}
+    return out, (k, v)  # qdq: bf16 layout holding the grid values
+
+
+def _append_packed(cache: Dict, new: Dict, length) -> Dict:
+    """Write one packed token at ``length``: planes at seq axis 1 (after
+    the plane-major axis 0), scale/zero at seq axis 1 — no float
+    round-trip of the resident cache."""
+    return {
+        "p": jax.lax.dynamic_update_slice(
+            cache["p"], new["p"], (0, 0, length, 0, 0)),
+        "s": jax.lax.dynamic_update_slice(
+            cache["s"], new["s"], (0, length, 0)),
+        "z": jax.lax.dynamic_update_slice(
+            cache["z"], new["z"], (0, length, 0)),
+    }
 
 
 def gqa_decode(
-    p: Dict, x: jax.Array, cache: Tuple[jax.Array, jax.Array], length: jax.Array,
+    p: Dict, x: jax.Array, cache, length: jax.Array,
     policy: PrecisionPolicy,
     *, n_heads: int, n_kv: int, head_dim: int,
     sin: jax.Array, cos: jax.Array, window: Optional[int] = None,
     serve: bool = True, rope: bool = True, impl: str = "xla",
     lname: str = "", names: Optional[Dict[str, str]] = None,
-) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """One-token step. x: (B, 1, D); cache (B,Smax,KVH,Dh); length = tokens
-    already in cache (the new token is written at index `length`)."""
+    kv_fmts=None, kv_store: str = "packed",
+):
+    """One-token step. x: (B, 1, D); cache (B,Smax,KVH,Dh) bf16 tuple, or
+    the ``{"k": ..., "v": ...}`` packed tree from a kv-quantizing
+    prefill; length = tokens already in cache (the new token is written
+    at index `length`)."""
     b = x.shape[0]
     kw = {"impl": impl} if serve else {}
     nm = _gqa_names(lname, names)
@@ -289,12 +425,42 @@ def gqa_decode(
     if rope:
         q = layers.apply_rotary(q, sin, cos)
         k = layers.apply_rotary(k, sin, cos)
+    fmt_k, fmt_v = kv_fmts if kv_fmts is not None else (None, None)
+    if kv_fmts is not None and kv_store == "packed":
+        ck, cv = cache["k"], cache["v"]
+        if fmt_k is not None:
+            ck = _append_packed(ck, kvcache.pack_kv(k, fmt_k), length)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, length, 0, 0))
+        if fmt_v is not None:
+            cv = _append_packed(cv, kvcache.pack_kv(v, fmt_v), length)
+        else:
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, length, 0, 0))
+        # Stream the packed cache — attention reads packed bytes, never a
+        # materialized full-length bf16 copy.
+        o = decode_attention_streamed(q, ck, cv, fmt_k, fmt_v, length + 1,
+                                      window=window)
+        o = o.reshape(b, 1, n_heads * head_dim)
+        return _proj(p["o"], o, policy, serve, nm["o"], **kw), \
+            {"k": ck, "v": cv}
+    if fmt_k is not None:
+        k = kvcache.qdq_kv(k, fmt_k)  # qdq store: grid values, bf16 layout
+    if fmt_v is not None:
+        v = kvcache.qdq_kv(v, fmt_v)
     k_cache, v_cache = cache
     k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
                                            (0, length, 0, 0))
     v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
                                            (0, length, 0, 0))
-    o = decode_attention(q, k_cache, v_cache, length + 1, window=window)
+    if kv_fmts is not None:
+        # qdq store runs the SAME streamed routine (same chunking, same
+        # accumulation order) so packed and qdq decode stay bit-identical.
+        o = decode_attention_streamed(q, k_cache, v_cache, None, None,
+                                      length + 1, window=window)
+    else:
+        o = decode_attention(q, k_cache, v_cache, length + 1, window=window)
     o = o.reshape(b, 1, n_heads * head_dim)
     return _proj(p["o"], o, policy, serve, nm["o"], **kw), (k_cache, v_cache)
 

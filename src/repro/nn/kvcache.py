@@ -1,0 +1,173 @@
+"""Mixed-precision decode KV cache: digit-plane packed low-bit K/V.
+
+The paper quantizes weights *and activations* per layer; this module
+extends the digit-plane machinery (core/packing.py) to the decode KV
+cache — the dominant memory traffic of the memory-bound decode step.
+Each cached K/V row is quantized **per (token, head)** with a dynamic
+asymmetric affine grid,
+
+    scale = (max - min) / (2^bits - 1)      zero = min
+    code  = clip(round((x - zero) / scale), 0, 2^bits - 1)
+
+so new tokens append in packed form without touching (or re-scaling)
+earlier cache rows — the streaming property a decode cache needs.
+Codes are UNSIGNED (no sign plane), split into ``P = ceil(bits / k)``
+k-bit digit planes and packed 8//k digits per byte along head_dim, so a
+w4 cache holds 4/16 the bf16 bytes (+4 B/token-head of bf16 scale+zero).
+
+Determinism contract (the serve-path oracle): ``unpack_kv(pack_kv(x))``
+is bit-identical to ``qdq_kv(x)`` — packing/unpacking is exact integer
+plumbing and dequantization is one f32 fma per element — so a packed
+cache attends to EXACTLY the values a quantize-then-dequantize bf16
+cache holds.  ``scale``/``zero`` are stored (and rounded) in bf16
+before use, so both paths quantize against the same stored grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import _unpack_bits, pack_bits
+from repro.core.plan import VALID_KV_BITS
+
+__all__ = [
+    "VALID_KV_BITS",
+    "KVFormat",
+    "quantize_kv",
+    "dequantize_kv",
+    "qdq_kv",
+    "split_codes",
+    "combine_codes",
+    "pack_kv",
+    "unpack_codes",
+    "unpack_kv",
+    "kv_token_bytes",
+]
+
+# bf16 scale + bf16 zero per (token, head)
+SCALE_ZERO_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class KVFormat:
+    """Storage format of one cached K or V tensor.
+
+    Attributes:
+      bits: word-length of the cache codes (2/4/8).
+      k:    digit-plane slice width (divides 8, <= bits).
+      d:    head_dim — the packed axis length.
+    """
+
+    bits: int
+    k: int
+    d: int
+
+    def __post_init__(self):
+        if self.bits not in VALID_KV_BITS:
+            raise ValueError(f"kv bits must be in {VALID_KV_BITS}, "
+                             f"got {self.bits}")
+        if self.k not in (1, 2, 4, 8) or 8 % self.k:
+            raise ValueError(f"kv slice k={self.k} must divide 8")
+        if self.k > self.bits:
+            raise ValueError(f"kv slice k={self.k} exceeds bits={self.bits}")
+
+    @property
+    def planes(self) -> int:
+        return -(-self.bits // self.k)
+
+    @property
+    def digits_per_byte(self) -> int:
+        return 8 // self.k
+
+    @property
+    def packed_d(self) -> int:
+        return -(-self.d // self.digits_per_byte)
+
+    @property
+    def levels(self) -> int:
+        return (1 << self.bits) - 1
+
+
+def quantize_kv(x: jax.Array, fmt: KVFormat):
+    """(..., D) values -> (codes int32 (..., D), scale bf16, zero bf16).
+
+    The affine grid is computed per leading index (per token, per head)
+    over the last axis, then ROUNDED TO bf16 — the stored form — before
+    codes are computed, so quantization and dequantization always agree
+    on the grid regardless of storage layout.
+    """
+    xf = x.astype(jnp.float32)
+    mx = jnp.max(xf, axis=-1)
+    mn = jnp.min(xf, axis=-1)
+    scale = ((mx - mn) / fmt.levels).astype(jnp.bfloat16)
+    zero = mn.astype(jnp.bfloat16)
+    # A constant row quantizes to scale 0: every code dequantizes to
+    # `zero`, which IS the row value — guard only the division.
+    sf = jnp.maximum(scale.astype(jnp.float32), 1e-20)
+    codes = jnp.clip(
+        jnp.round((xf - zero.astype(jnp.float32)[..., None]) / sf[..., None]),
+        0, fmt.levels).astype(jnp.int32)
+    return codes, scale, zero
+
+
+def dequantize_kv(codes: jax.Array, scale: jax.Array,
+                  zero: jax.Array) -> jax.Array:
+    """codes (..., D) + per-row scale/zero -> bf16 values (..., D)."""
+    out = (codes.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+           + zero.astype(jnp.float32)[..., None])
+    return out.astype(jnp.bfloat16)
+
+
+def qdq_kv(x: jax.Array, fmt: KVFormat) -> jax.Array:
+    """Quantize-then-dequantize: the fp-layout oracle write."""
+    return dequantize_kv(*quantize_kv(x, fmt))
+
+
+def split_codes(codes: jax.Array, fmt: KVFormat) -> jax.Array:
+    """Unsigned codes (..., D) -> k-bit digit planes (P, ..., D) int32."""
+    mask = (1 << fmt.k) - 1
+    return jnp.stack([(codes >> (fmt.k * i)) & mask
+                      for i in range(fmt.planes)], axis=0)
+
+
+def combine_codes(planes: jax.Array, fmt: KVFormat) -> jax.Array:
+    """Inverse of :func:`split_codes` (exact integer recombination)."""
+    w = (2 ** (fmt.k * jnp.arange(fmt.planes, dtype=jnp.int32))).reshape(
+        (fmt.planes,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * w, axis=0)
+
+
+def pack_kv(x: jax.Array, fmt: KVFormat) -> Dict[str, jax.Array]:
+    """(..., D) values -> the packed cache leaf dict.
+
+    Returns ``{"p": uint8 (P, ..., packed_d), "s": bf16 (...),
+    "z": bf16 (...)}`` — plane-major so a kernel streams one plane at a
+    time, digits packed 8//k per byte along head_dim.
+    """
+    codes, scale, zero = quantize_kv(x, fmt)
+    digits = split_codes(codes, fmt)
+    return {"p": pack_bits(digits, fmt.k, axis=-1), "s": scale, "z": zero}
+
+
+def unpack_codes(packed: jax.Array, fmt: KVFormat) -> jax.Array:
+    """uint8 planes (P, ..., packed_d) -> unsigned codes (..., D) int32.
+
+    This is the XLA "recombined" path: unpack bytes to digits, then one
+    shift-add over the plane axis — all exact integer ops.
+    """
+    digits = _unpack_bits(packed, fmt.k, fmt.d, axis=-1)
+    return combine_codes(digits, fmt)
+
+
+def unpack_kv(packed: Dict[str, jax.Array], fmt: KVFormat) -> jax.Array:
+    """Packed leaf dict -> bf16 values; bit-identical to ``qdq_kv``."""
+    return dequantize_kv(unpack_codes(packed["p"], fmt),
+                         packed["s"], packed["z"])
+
+
+def kv_token_bytes(fmt: KVFormat, heads: int) -> int:
+    """Cache bytes of ONE token of one packed K or V tensor."""
+    return heads * (fmt.planes * fmt.packed_d + SCALE_ZERO_BYTES)

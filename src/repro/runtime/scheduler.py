@@ -500,6 +500,22 @@ class GenerateScheduler(_SchedulerBase):
         self.decode_buckets = rnd(decode_buckets)
         self._slots: List[Optional[_Slot]] = [None] * self.n_slots
         self._batch_axes = _cache_batch_axes(self.api, self.max_len)
+        # Resident-cache accounting (stats()): bytes of one slot's cache
+        # under the serving plan (packed digit planes for kv plans) and
+        # under the same plan with the fp16 cache — the quotient is the
+        # deployed KV compression, reported live per step.
+        from repro.core.plan import strip_kv
+
+        def tree_bytes(specs) -> int:
+            return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+                       for l in jax.tree.leaves(specs))
+
+        self.cache_bytes_per_slot = tree_bytes(
+            self.api.cache_specs(1, self.max_len))
+        fp_api = dataclasses.replace(self.api,
+                                     policy=strip_kv(self.api.policy))
+        self.cache_fp_bytes_per_slot = tree_bytes(
+            fp_api.cache_specs(1, self.max_len))
 
     # --- slot cache plumbing (family-agnostic via the axis probe) ----------
 
@@ -653,6 +669,21 @@ class GenerateScheduler(_SchedulerBase):
         err = super()._fail_pending(op, max_steps)
         self._slots = [None] * self.n_slots  # in-flight caches released
         return err
+
+    def stats(self) -> Dict[str, float]:
+        """Base accounting plus live resident-cache bytes: what the
+        in-flight slots hold right now under the serving plan, next to
+        what the same occupancy would hold with an fp16 cache."""
+        st = super().stats()
+        st["cache_bytes_per_slot"] = float(self.cache_bytes_per_slot)
+        st["resident_cache_bytes"] = float(
+            self.cache_bytes_per_slot * self.active)
+        st["resident_cache_fp_bytes"] = float(
+            self.cache_fp_bytes_per_slot * self.active)
+        st["kv_cache_compression"] = (
+            self.cache_fp_bytes_per_slot / self.cache_bytes_per_slot
+            if self.cache_bytes_per_slot else 1.0)
+        return st
 
     def run_until_idle(self, max_steps: int = 100_000) -> int:
         """Serve until queue and slots are empty (flushing the admission

@@ -92,6 +92,121 @@ def test_flash_property(b, sq, h, kv, d, seed):
                                rtol=3e-5, atol=3e-5)
 
 
+class TestFlashEdges:
+    """Ragged / padded edge coverage for the base kernel."""
+
+    @pytest.mark.parametrize("sk", [21, 37, 200])
+    def test_nonpow2_sk_decode_steps(self, rng, sk):
+        """Single-row continuation at non-pow2 cache lengths: the padded
+        KV tail must be masked, not attended."""
+        q, k, v = _case(rng, 1, 1, sk, 4, 4, 64)
+        for off in (sk - 1, sk // 2):
+            out = fo.flash_attention(q, k, v, q_offset=off,
+                                     block_q=64, block_k=64)
+            want = fr.attention_ref(q, k, v, q_offset=off)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                       rtol=3e-5, atol=3e-5)
+
+    def test_gqa_head_map_with_window(self, rng):
+        """8:2 GQA sharing + local window must compose: each q head
+        reads its OWN group's KV inside the band."""
+        q, k, v = _case(rng, 2, 192, 192, 8, 2, 32)
+        out = fo.flash_attention(q, k, v, window=48,
+                                 block_q=64, block_k=64)
+        want = fr.attention_ref(q, _expand(k, 8), _expand(v, 8), window=48)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_pad_rows_do_not_leak(self, rng):
+        """Garbage beyond a ragged Sq/Sk must not change valid rows:
+        compare the ragged call against a hand-padded equivalent."""
+        sq = sk = 100
+        q, k, v = _case(rng, 1, sq, sk, 2, 2, 32)
+        out = fo.flash_attention(q, k, v, block_q=64, block_k=64)
+        pad = 28  # -> 128
+        big = 1e3
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=big)
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=big)
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=big)
+        # Causality hides the k/v tail from valid rows; the q tail is
+        # sliced off.  Any leak shows up as ~1e3-scale garbage.
+        outp = fo.flash_attention(qp, kp, vp,
+                                  block_q=64, block_k=64)[:, :sq]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(outp),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestFlashPacked:
+    """Digit-plane packed KV flash kernel vs the qdq oracle."""
+
+    @staticmethod
+    def _packed_case(rng, b, sq, sk, h, kv, d, fmts):
+        from repro.nn import kvcache
+        fmt_k, fmt_v = fmts
+        q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, sk, kv, d)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(b, sk, kv, d)), jnp.bfloat16)
+        kq = kvcache.pack_kv(k, fmt_k)
+        vq = kvcache.pack_kv(v, fmt_v)
+        return q, k, v, kq, vq
+
+    @pytest.mark.parametrize("bits", [(8, 4, 4, 4), (4, 2, 4, 2),
+                                      (2, 8, 2, 4)])
+    def test_packed_matches_qdq_ref(self, rng, bits):
+        from repro.nn import kvcache
+        bk, bv, kk, kv_ = bits
+        d = 64
+        fmts = (kvcache.KVFormat(bk, kk, d), kvcache.KVFormat(bv, kv_, d))
+        q, k, v, kq, vq = self._packed_case(rng, 2, 128, 128, 4, 2, d,
+                                            fmts)
+        out = fo.flash_attention_packed(q, kq, vq, *fmts,
+                                        block_q=64, block_k=64)
+        want = fr.attention_qdq_ref(q, k, v, *fmts)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_packed_ref_equals_qdq_ref(self, rng):
+        """unpack_kv(pack_kv(x)) == qdq_kv(x) through full attention —
+        the packed oracle IS the qdq oracle, bitwise."""
+        from repro.nn import kvcache
+        d = 32
+        fmts = (kvcache.KVFormat(4, 4, d), kvcache.KVFormat(2, 2, d))
+        q, k, v, kq, vq = self._packed_case(rng, 1, 24, 24, 4, 2, d, fmts)
+        a = fr.attention_packed_ref(q, kq, vq, *fmts)
+        b = fr.attention_qdq_ref(q, k, v, *fmts)
+        assert bool(jnp.all(a == b))
+
+    def test_packed_window_and_ragged(self, rng):
+        from repro.nn import kvcache
+        d = 32
+        fmts = (kvcache.KVFormat(4, 4, d), kvcache.KVFormat(4, 4, d))
+        q, k, v, kq, vq = self._packed_case(rng, 1, 24, 24, 8, 2, d, fmts)
+        out = fo.flash_attention_packed(q, kq, vq, *fmts, window=9,
+                                        block_q=16, block_k=16)
+        want = fr.attention_qdq_ref(q, k, v, *fmts, window=9)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_packed_decode_shape(self, rng):
+        """Sq=1 with q_offset at the cache tip — the decode step shape."""
+        from repro.nn import kvcache
+        d = 32
+        sk = 21
+        fmts = (kvcache.KVFormat(8, 4, d), kvcache.KVFormat(2, 2, d))
+        q, k, v, kq, vq = self._packed_case(rng, 2, 1, sk, 4, 4, d, fmts)
+        out = fo.flash_attention_packed(q, kq, vq, *fmts, q_offset=sk - 1,
+                                        block_q=16, block_k=16)
+        want = fr.attention_qdq_ref(q, k, v, *fmts, q_offset=sk - 1)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
 def test_model_flash_serve_matches_xla(rng, key):
     """granite-8b reduced: serve prefill with flash == chunked XLA."""
     import dataclasses

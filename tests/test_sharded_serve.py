@@ -154,6 +154,40 @@ class TestShardedGenerator:
         np.testing.assert_array_equal(one.generate(toks, 5),
                                       par.generate(toks, 5))
 
+    def test_packed_kv_cache_meshed_bit_equal(self, eight_devices):
+        """Digit-plane packed decode caches under a data-parallel mesh:
+        the packed cache tree (uint8 planes + bf16 scale/zero leaves)
+        shards over 'data' like the bf16 tuple cache did, and the meshed
+        run stays bit-equal to single-device AND to the qdq oracle."""
+        import dataclasses
+        from repro.core.plan import KVCachePlan
+        kv_plan = PrecisionPlan.build(
+            {"k": LayerPlan(w_bits=8, kv_bits=4),
+             "v": LayerPlan(w_bits=8, kv_bits=2),
+             "l1.k": LayerPlan(w_bits=8, kv_bits=8)},
+            default=LayerPlan(w_bits=8, k=4), name="test_kv_mesh",
+            arch="granite-8b")
+        kv_plan = dataclasses.replace(kv_plan,
+                                      kv=KVCachePlan(k=4, store="packed"))
+        train = configs.get("granite-8b", reduced=True).init_params(
+            jax.random.PRNGKey(0), "train")
+        toks = np.asarray(np.random.default_rng(5).integers(
+            0, 256, (8, 8)), np.int32)
+        mesh = make_serve_mesh(8, 1)
+        outs = {}
+        for store in ("packed", "qdq"):
+            api = configs.get("granite-8b", reduced=True,
+                              policy=dataclasses.replace(
+                                  kv_plan, kv=KVCachePlan(k=4, store=store)))
+            one = Generator(api=api, params=pack_for_serving(api, train))
+            par = Generator(api=api,
+                            params=pack_for_serving(api, train, mesh=mesh),
+                            mesh=mesh)
+            outs[store] = one.generate(toks, 5)
+            np.testing.assert_array_equal(outs[store],
+                                          par.generate(toks, 5))
+        np.testing.assert_array_equal(outs["packed"], outs["qdq"])
+
     def test_scheduler_over_meshed_generator_bit_equal(self, lm_packed):
         """The continuous-batching front end drives a mesh-sharded
         Generator: buckets round up to the data axis, merged slot groups
