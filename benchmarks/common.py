@@ -10,6 +10,9 @@ joules are not graded quantities.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
 from typing import Callable, Dict, Iterable, List
 
@@ -33,6 +36,49 @@ def time_call(fn: Callable, *args, n: int = 10, warmup: int = 2) -> float:
         ts.append(time.perf_counter() - t0)
     ts.sort()
     return ts[len(ts) // 2] * 1e6
+
+
+def provenance() -> Dict:
+    """Environment stamp carried by every BENCH_*.json record: a number
+    without its software/topology context is not comparable PR over PR.
+    Never raises — fields degrade to None when unavailable."""
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except Exception:
+        jaxlib_version = None
+    try:
+        backend = jax.default_backend()
+        n_dev = jax.device_count()
+    except Exception:
+        backend, n_dev = None, None
+    try:
+        git_rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except Exception:
+        git_rev = None
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib_version,
+        "backend": backend,
+        "device_count": n_dev,
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "git_rev": git_rev,
+    }
+
+
+def write_record(path, record: Dict) -> None:
+    """Write a benchmark JSON record stamped with ``provenance()``.
+
+    ``path`` is a ``pathlib.Path`` or str; the record's own keys win on
+    collision (a benchmark may pin its own provenance for replay)."""
+    stamped = {"provenance": provenance()}
+    stamped.update(record)
+    with open(path, "w") as f:
+        f.write(json.dumps(stamped, indent=2))
 
 
 def emit(rows: Iterable[Dict], header: bool = False) -> None:

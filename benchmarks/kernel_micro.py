@@ -18,7 +18,6 @@ trajectory is tracked PR over PR.
 """
 from __future__ import annotations
 
-import json
 import platform
 from pathlib import Path
 
@@ -26,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_record
 from repro.core import packing
 from repro.core.packing import PlaneFormat
 from repro.kernels.mpmm import ops
@@ -155,13 +154,13 @@ def rows():
     record["epilogue_unfused_w4_k2_us"] = us_u
 
     try:
-        BENCH_JSON.write_text(json.dumps({
+        write_record(BENCH_JSON, {
             "bench": "kernel_micro",
             "shape": {"m": M, "k": K, "n": N},
             "host": platform.machine(),
             "backend": jax.default_backend(),
             "metrics": record,
-        }, indent=2) + "\n")
+        })
     except OSError:  # read-only checkout: CSV rows still printed
         pass
     return out

@@ -27,14 +27,13 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_call
+from benchmarks.common import time_call, write_record
 from repro import configs
 from repro.core.plan import PrecisionPlan, LayerPlan, KVCachePlan
 from repro.nn import attention as attn
@@ -156,7 +155,7 @@ def _run(args):
         "smoke": bool(args.smoke),
     }
     path = BENCH_SMOKE_JSON if args.smoke else BENCH_JSON
-    path.write_text(json.dumps(out, indent=2))
+    write_record(path, out)
     print(f"# wrote {path}")
     return rows
 

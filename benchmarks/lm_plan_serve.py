@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import platform
 from pathlib import Path
 
@@ -38,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_record
 from repro import configs
 from repro.core import plan as plan_lib
 from repro.core.plan import PrecisionPlan
@@ -194,7 +193,7 @@ def _run(args):
 
     out_json = BENCH_SMOKE_JSON if args.smoke else BENCH_JSON
     try:
-        out_json.write_text(json.dumps({
+        write_record(out_json, {
             "bench": "lm_plan_serve",
             "model": api.cfg.name,
             "shape": {"batch": batch, "max_len": max_len,
@@ -206,7 +205,7 @@ def _run(args):
             "mixed_vs_w8_speedup": speedup,
             "timed": timed,
             "mixed_plan": mixed.to_json(),
-        }, indent=2) + "\n")
+        })
     except OSError:  # read-only checkout: CSV rows still printed
         pass
     return rows

@@ -28,7 +28,6 @@ shape).
 from __future__ import annotations
 
 import argparse
-import json
 import platform
 from pathlib import Path
 
@@ -36,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_record
 from repro.core import planner
 from repro.core.plan import PrecisionPlan, plan_footprint_report
 from repro.core.precision import PrecisionPolicy
@@ -206,7 +205,7 @@ def _run(args):
 
     out_json = BENCH_SMOKE_JSON if args.smoke else BENCH_JSON
     try:
-        out_json.write_text(json.dumps({
+        write_record(out_json, {
             "bench": "pareto_serve",
             "model": cfg.name,
             "shape": {"batch": batch, "img": cfg.img_size,
@@ -218,7 +217,7 @@ def _run(args):
             "frontier": frontier_rows,
             "mixed_plan": mixed.plan.to_json(),
             "footprints": [r["name"] + ":" + r["derived"] for r in fp_rows],
-        }, indent=2) + "\n")
+        })
     except OSError:  # read-only checkout: CSV rows still printed
         pass
     return rows

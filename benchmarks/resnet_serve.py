@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import platform
 from pathlib import Path
 
@@ -38,11 +37,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_record
 from repro.core.precision import PrecisionPolicy
 from repro.models import resnet as R
 from repro.models.resnet import ResNetConfig
 from repro.nn import param as nnp
+from repro.runtime.telemetry import NULL_TRACER, Tracer, device_timed
 
 _ROOT = Path(__file__).resolve().parent.parent
 BENCH_JSON = _ROOT / "BENCH_resnet.json"
@@ -85,6 +85,50 @@ def bench_dataflows(cfg, policy, packed, batch, iters):
     return rows, rec
 
 
+def bench_tracing_overhead(cfg, policy, packed, batch, iters,
+                           budget_pct: float = 3.0, attempts: int = 5):
+    """The telemetry cost gate: the SAME jitted serve forward timed
+    bare vs wrapped in ``device_timed`` with a live tracer.
+
+    Two invariants are enforced here so they regress loudly:
+      * disabled tracing is FREE — ``device_timed`` on the null tracer
+        must return the original function object, not a wrapper;
+      * enabled tracing is CHEAP — <``budget_pct``% throughput cost.
+    Wall-noise on smoke shapes can fake an overhead spike, so the gate
+    re-measures up to ``attempts`` times and gates on the BEST
+    observation (a true cost shows up in every attempt; noise doesn't).
+    """
+    x = jnp.asarray(
+        np.random.default_rng(1).normal(0.4, 0.5,
+                                        (batch, cfg.img_size, cfg.img_size, 3)),
+        jnp.float32)
+    fwd = jax.jit(lambda p, im: R.serve_forward(
+        cfg, p, im, policy, impl="xla", dataflow="implicit"))
+
+    assert device_timed(NULL_TRACER, "predict", fwd) is fwd, \
+        "disabled tracing must be the identity, not a wrapper"
+
+    tracer = Tracer()
+    traced = device_timed(tracer, "predict", fwd)
+    best = None
+    for _ in range(attempts):
+        bare_us = time_call(fwd, packed, x, n=iters, warmup=1)
+        traced_us = time_call(traced, packed, x, n=iters, warmup=1)
+        overhead = 100.0 * (traced_us - bare_us) / bare_us
+        best = overhead if best is None else min(best, overhead)
+        if best < budget_pct:
+            break
+    assert best < budget_pct, (
+        f"tracing overhead {best:.2f}% over {attempts} attempts exceeds "
+        f"the {budget_pct}% budget (bare {bare_us:.1f}us)")
+    assert len(tracer.events) > 0, "traced calls must emit device spans"
+    rec = {"tracing_overhead_pct": best, "tracing_budget_pct": budget_pct}
+    row = {"name": f"resnet_serve/{cfg.name}_tracing_overhead",
+           "us_per_call": traced_us,
+           "derived": f"overhead_pct={best:.2f};budget_pct={budget_pct}"}
+    return [row], rec
+
+
 def _smoke_cfg(depth: int = 18) -> ResNetConfig:
     """Tiny 2-block net — the CI smoke shape here and in sharded_serve."""
     return ResNetConfig(name=f"resnet{depth}-smoke", depth=depth,
@@ -99,7 +143,8 @@ def rows():
     packed = build_packed(cfg, policy)
     out, rec = bench_dataflows(cfg, policy, packed, batch=4, iters=3)
     assert rec["speedup_implicit_vs_im2col"] >= 1.2, rec
-    return out
+    t_rows, _ = bench_tracing_overhead(cfg, policy, packed, batch=4, iters=5)
+    return out + t_rows
 
 
 def run(argv=None):
@@ -127,11 +172,13 @@ def run(argv=None):
 
     packed = build_packed(cfg, policy)
     rows, rec = bench_dataflows(cfg, policy, packed, batch, iters)
+    t_rows, t_rec = bench_tracing_overhead(cfg, policy, packed, batch, iters)
+    rows += t_rows
     emit(rows)
 
     out_json = BENCH_SMOKE_JSON if args.smoke else BENCH_JSON
     try:
-        out_json.write_text(json.dumps({
+        write_record(out_json, {
             "bench": "resnet_serve",
             "model": cfg.name,
             "shape": {"batch": batch, "img": cfg.img_size,
@@ -140,7 +187,8 @@ def run(argv=None):
             "host": platform.machine(),
             "backend": jax.default_backend(),
             "metrics": rec,
-        }, indent=2) + "\n")
+            "telemetry": t_rec,
+        })
     except OSError:  # read-only checkout: CSV rows still printed
         pass
 

@@ -47,7 +47,6 @@ shape).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import platform
 import time
@@ -64,13 +63,17 @@ if "--xla_force_host_platform_device_count" not in os.environ.get(
 import jax
 import numpy as np
 
-from benchmarks.common import time_call
+from benchmarks.common import time_call, write_record
 from benchmarks.resnet_serve import _smoke_cfg, build_packed
 from repro.core.precision import PrecisionPolicy
+from repro.core.roofline import roofline_from_compiled
 from repro.launch.mesh import make_serve_mesh
+from repro.models import resnet as R
 from repro.models.resnet import ResNetConfig
 from repro.runtime.scheduler import ImageScheduler
 from repro.runtime.serve import ImageServer
+from repro.runtime.telemetry import Tracer, device_time_split, \
+    layer_attribution
 
 _ROOT = Path(__file__).resolve().parent.parent
 BENCH_JSON = _ROOT / "BENCH_sharded.json"
@@ -164,6 +167,78 @@ def bench_paths(api_like, cfg, per_device, iters):
     return rows, rec
 
 
+def bench_telemetry(api_like, cfg, policy, per_device, iters,
+                    trace_path=None):
+    """Traced re-run of the mesh sweep: what the speedup table can't
+    show, made attributable.
+
+    Per mesh width the section records (a) the MEASURED host/device
+    split from traced ``ImageServer.predict`` spans (dispatch =
+    call-return before block_until_ready, device = the blocking
+    remainder) and (b) the compiled-artifact roofline terms
+    (compute/memory/collective seconds from per-device HLO cost
+    analysis + wire-byte parsing), so a flat strong-scaling curve can
+    be read directly: dispatch-bound, collective-bound, or genuinely
+    compute-limited.  The widest width additionally carries the
+    per-layer achieved-vs-roofline attribution against the planner's
+    latency model.
+    """
+    points = _mesh_points()
+    packed = api_like.packed
+    tracer = Tracer()
+    widths = {}
+    for d in points:
+        batch = per_device * d
+        srv = ImageServer(api=api_like, params=packed,
+                          batch_buckets=(batch,),
+                          mesh=make_serve_mesh(d, 1), tracer=tracer)
+        sub = np.asarray(
+            np.random.default_rng(0).normal(
+                0.4, 0.5, (batch, cfg.img_size, cfg.img_size, 3)),
+            np.float32)
+        srv.predict(sub)  # compile + warm outside the measured window
+        n0 = len(tracer.events)
+        for _ in range(iters):
+            srv.predict(sub)
+        split = device_time_split(tracer, since=n0)
+
+        gemms = R.gemm_workload(cfg, batch=batch)
+        import jax.numpy as jnp
+        compiled = srv._fn(batch).lower(
+            srv.params, jnp.asarray(sub)).compile()
+        rep = roofline_from_compiled(
+            compiled, arch=cfg.name, shape=f"b{batch}",
+            mesh_axes=(("data", d), ("model", 1)),
+            model_flops=sum(2.0 * g.macs for g in gemms))
+        widths[f"mesh{d}x1"] = {
+            "calls": split["calls"],
+            "dispatch_s_per_call": split["dispatch_s"] / iters,
+            "device_s_per_call": split["device_s"] / iters,
+            "compute_s": rep.compute_s,
+            "memory_s": rep.memory_s,
+            "collective_s": rep.collective_s,
+            "wire_bytes_per_device": rep.wire_bytes_per_device,
+        }
+        if d == points[-1]:
+            attribution = layer_attribution(
+                gemms, policy, split["device_s"] / iters)
+
+    if trace_path:
+        tracer.export(trace_path)
+        print(f"# trace -> {trace_path} ({len(tracer.events)} events)")
+    return {
+        "mesh_widths": widths,
+        "attribution": {
+            "measured_s": attribution["measured_s"],
+            "roofline_s": attribution["roofline_s"],
+            "roofline_fraction": attribution["roofline_fraction"],
+            "achieved_tops": attribution["achieved_tops"],
+            "roofline_tops": attribution["roofline_tops"],
+            "layers": attribution["layers"],
+        },
+    }
+
+
 class _ApiLike:
     """The slice of ModelAPI that ImageServer consumes (family/mod/cfg)."""
 
@@ -204,6 +279,8 @@ def run(argv=None):
     ap.add_argument("--img", type=int, default=32)
     ap.add_argument("--per-device", type=int, default=None)
     ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export the telemetry sweep's Chrome trace")
     args = ap.parse_args(argv)
 
     api, cfg, policy, per_device, iters = _build(args.smoke, args.img)
@@ -221,9 +298,20 @@ def run(argv=None):
     for r in rws:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
 
+    telemetry = bench_telemetry(api, cfg, policy, per_device, iters,
+                                trace_path=args.trace)
+    wide = f"mesh{rec['mesh_points'][-1]}x1"
+    tw = telemetry["mesh_widths"][wide]
+    print(f"# {wide} per call: dispatch {tw['dispatch_s_per_call']*1e3:.2f}ms"
+          f" + device {tw['device_s_per_call']*1e3:.2f}ms; roofline terms "
+          f"compute {tw['compute_s']*1e6:.1f}us / memory "
+          f"{tw['memory_s']*1e6:.1f}us / collective "
+          f"{tw['collective_s']*1e6:.1f}us "
+          f"({tw['wire_bytes_per_device']:.0f} wire B/device)")
+
     out_json = BENCH_SMOKE_JSON if args.smoke else BENCH_JSON
     try:
-        out_json.write_text(json.dumps({
+        write_record(out_json, {
             "bench": "sharded_serve",
             "model": cfg.name,
             "shape": {"per_device_batch": per_device,
@@ -235,7 +323,8 @@ def run(argv=None):
             "devices": jax.device_count(),
             "backend": jax.default_backend(),
             "metrics": rec,
-        }, indent=2) + "\n")
+            "telemetry": telemetry,
+        })
     except OSError:  # read-only checkout: CSV rows still printed
         pass
 

@@ -42,7 +42,6 @@ from __future__ import annotations
 import argparse
 import collections
 import dataclasses
-import json
 import os
 import platform
 import time
@@ -52,6 +51,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from benchmarks.common import write_record
 from benchmarks.resnet_serve import _smoke_cfg
 from repro.core.precision import PrecisionPolicy
 from repro.models import resnet as R
@@ -60,6 +60,7 @@ from repro.nn import param as nnp
 from repro.runtime.faults import FaultInjector, FaultSpec
 from repro.runtime.frontier import build_frontier
 from repro.runtime.slo import HysteresisConfig, SLOScheduler
+from repro.runtime.telemetry import MetricsRegistry, Tracer
 
 _ROOT = Path(__file__).resolve().parent.parent
 BENCH_JSON = _ROOT / "BENCH_slo.json"
@@ -181,19 +182,23 @@ def run_burst(frontier, cfg, ests, n_req, *, pinned: bool):
     }
 
 
-def run_chaos(frontier, cfg, ests, n_req, seed):
+def run_chaos(frontier, cfg, ests, n_req, seed, tracer=None, metrics=None):
     """One fault-injected burst: transient step errors + malformed
     payloads from one seeded schedule.  Asserts the zero-lost /
-    zero-double-completed invariants and per-point bit-equality."""
+    zero-double-completed invariants and per-point bit-equality.
+    ``tracer``/``metrics`` (optional) instrument both the injector and
+    the scheduler — the fault schedule is clock-free-traced, so the run
+    replays identically with or without them."""
     spec = FaultSpec(step_error_rate=0.30, malformed_rate=0.08)
-    inj = FaultInjector(spec, seed)
+    inj = FaultInjector(spec, seed).instrument(tracer=tracer,
+                                               metrics=metrics)
     faulty = inj.wrap_frontier(frontier)
     sched = SLOScheduler(
         faulty, slo_s=4 * SLO_BUDGET_BATCHES * ests[0],
         est_serve_s=ests, max_queue=n_req + BATCH,
         hysteresis=HysteresisConfig(up_after=1, down_after=4),
         max_retries=3, backoff_s=1e-4, max_backoff_s=2e-3,
-        history=max(n_req + 64, 1024))
+        history=max(n_req + 64, 1024), tracer=tracer, metrics=metrics)
     tickets, payloads, bounced = [], {}, 0
     for p in _mk_payloads(cfg, n_req, seed=seed):
         p, was_malformed = inj.maybe_malform(p)
@@ -248,11 +253,13 @@ def run_chaos(frontier, cfg, ests, n_req, seed):
     }
 
 
-def bench(smoke: bool, n_seeds: int, burst_batches: int):
+def bench(smoke: bool, n_seeds: int, burst_batches: int, trace_path=None):
     frontier, cfg = build(smoke)
     ests = measure_levels(frontier, cfg)
     n_req = burst_batches * BATCH
 
+    tracer = Tracer() if trace_path else None
+    metrics = MetricsRegistry() if trace_path else None
     rec = {"levels": list(frontier.names),
            "batch": BATCH,
            "est_batch_s": ests,
@@ -261,8 +268,25 @@ def bench(smoke: bool, n_seeds: int, burst_batches: int):
     rec["frontier"] = run_burst(frontier, cfg, ests, n_req, pinned=False)
     rec["baseline"] = run_burst(frontier, cfg, ests, n_req, pinned=True)
     rec["chaos"] = [run_chaos(frontier, cfg, ests,
-                              max(n_req // 2, 2 * BATCH), 101 * (i + 1))
+                              max(n_req // 2, 2 * BATCH), 101 * (i + 1),
+                              tracer=tracer, metrics=metrics)
                    for i in range(n_seeds)]
+    if tracer is not None:
+        # every injected fault must appear in the trace (the chaos-run
+        # observability contract); export + record the roll-up
+        fault_events = sum(1 for e in tracer.events
+                           if e[1].startswith("fault."))
+        injected = sum(sum(c["injected"].values()) for c in rec["chaos"])
+        assert fault_events == injected, (
+            f"{injected} injected faults but {fault_events} trace events")
+        tracer.export(trace_path)
+        print(f"# trace -> {trace_path} ({len(tracer.events)} events, "
+              f"{fault_events} fault instants)")
+        rec["telemetry"] = {"trace_events": len(tracer.events),
+                            "fault_trace_events": fault_events,
+                            "injected_total": injected,
+                            "metric_names": sorted(metrics.names())}
+    bench.last_metrics = metrics  # for --metrics-dump (None untraced)
 
     rows = []
     for tag in ("frontier", "baseline"):
@@ -300,28 +324,41 @@ def run(argv=None):
     ap.add_argument("--seeds", type=int, default=3,
                     help="number of fixed chaos seeds (101, 202, ...)")
     ap.add_argument("--burst-batches", type=int, default=None)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="trace the chaos runs (every injected fault "
+                         "becomes a fault.<kind> instant) and export")
+    ap.add_argument("--metrics-dump", default=None, metavar="OUT.prom",
+                    help="dump the chaos-run metrics registry "
+                         "(requires --trace)")
     args = ap.parse_args(argv)
 
     burst = args.burst_batches or (6 if args.smoke else 32)
-    rws, rec, cfg = bench(args.smoke, args.seeds, burst)
+    rws, rec, cfg = bench(args.smoke, args.seeds, burst,
+                          trace_path=args.trace)
     if not args.smoke and rec["frontier"]["met_frac"] < 0.95:
         # timer noise on shared CI silicon: one re-measure before failing
-        rws, rec, cfg = bench(args.smoke, args.seeds, burst)
+        rws, rec, cfg = bench(args.smoke, args.seeds, burst,
+                              trace_path=args.trace)
 
     print("name,us_per_call,derived")
     for r in rws:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
 
+    if args.metrics_dump and bench.last_metrics is not None:
+        with open(args.metrics_dump, "w") as f:
+            f.write(bench.last_metrics.prometheus_text())
+        print(f"# metrics -> {args.metrics_dump}")
+
     out_json = BENCH_SMOKE_JSON if args.smoke else BENCH_JSON
     try:
-        out_json.write_text(json.dumps({
+        write_record(out_json, {
             "bench": "slo_serve",
             "model": cfg.name,
             "host": platform.machine(),
             "cpu_count": os.cpu_count(),
             "backend": jax.default_backend(),
             "metrics": rec,
-        }, indent=2) + "\n")
+        })
     except OSError:  # read-only checkout: CSV rows still printed
         pass
 

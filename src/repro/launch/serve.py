@@ -61,6 +61,82 @@ from repro.core.plan import FrontierManifest, PrecisionPlan
 from repro.core.precision import PrecisionPolicy
 from repro.launch.mesh import make_serve_mesh, mesh_axes, parse_mesh_spec
 from repro.runtime.serve import Generator, ImageServer, pack_for_serving
+from repro.runtime.telemetry import (NULL_METRICS, NULL_TRACER,
+                                     MetricsRegistry, Tracer,
+                                     device_time_split, layer_attribution)
+
+
+def _mk_telemetry(args):
+    """(tracer, metrics) for this run: live objects only when any
+    telemetry flag is set — otherwise the shared no-op pair, so an
+    untraced serve takes the zero-cost fast path everywhere."""
+    if args.trace or args.metrics_dump or args.profile:
+        return Tracer(), MetricsRegistry()
+    return NULL_TRACER, NULL_METRICS
+
+
+class _Profiled:
+    """Context manager for ``--profile DIR``: a jax.profiler trace of
+    the measured section (host+device timelines, open in Perfetto /
+    TensorBoard), no-op when the flag is absent."""
+
+    def __init__(self, profile_dir):
+        self.dir = profile_dir
+
+    def __enter__(self):
+        if self.dir:
+            jax.profiler.start_trace(self.dir)
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if self.dir:
+            jax.profiler.stop_trace()
+            print(f"[serve] jax profiler trace -> {self.dir}")
+
+
+def _attribution_summary(api, plan_or_policy, measured_s, *, batch=None,
+                         tokens=None):
+    """Per-layer achieved-vs-roofline utilization against the planner's
+    latency model at the resolved per-layer word lengths."""
+    if api.family == "cnn":
+        gemms = api.mod.gemm_workload(api.cfg, batch=batch or 1)
+    else:
+        gemms = api.gemm_workload(tokens or 1)
+    return layer_attribution(gemms, plan_or_policy, measured_s)
+
+
+def _print_attribution(rep) -> None:
+    if not rep.get("layers"):
+        return
+    print(f"[serve] roofline: measured {rep['measured_s']*1e3:.2f}ms vs "
+          f"model {rep['roofline_s']*1e3:.3f}ms -> "
+          f"{100 * rep['roofline_fraction']:.2f}% of roofline "
+          f"({rep['achieved_tops']:.3f} achieved / "
+          f"{rep['roofline_tops']:.1f} roofline TOps/s, "
+          f"peak int8 {rep['peak_int8_tops']:.0f})")
+    top = sorted(rep["layers"], key=lambda l: -l["attributed_s"])[:4]
+    for l in top:
+        print(f"[serve]   {l['name']:<12} w{l['w_bits']}  "
+              f"{l['bound']:<7} share {100 * l['share']:5.1f}%  "
+              f"achieved {l['achieved_tops']:8.3f} / "
+              f"roofline {l['roofline_tops']:6.1f} TOps/s  "
+              f"hbm {l['achieved_hbm_gbps']:7.2f} GB/s")
+
+
+def _export_telemetry(args, tracer, metrics) -> None:
+    if args.trace and tracer.enabled:
+        tracer.export(args.trace)
+        split = device_time_split(tracer)
+        print(f"[serve] trace -> {args.trace} "
+              f"({len(tracer.events)} events, {tracer.dropped} dropped; "
+              f"device calls {split['calls']}: "
+              f"dispatch {split['dispatch_s']*1e3:.1f}ms + "
+              f"device {split['device_s']*1e3:.1f}ms)")
+    if args.metrics_dump and metrics.enabled:
+        with open(args.metrics_dump, "w") as f:
+            f.write(metrics.prometheus_text())
+        print(f"[serve] metrics -> {args.metrics_dump} "
+              f"({len(metrics.names())} metrics)")
 
 
 def _serve_frontier(api, args, mesh) -> int:
@@ -99,19 +175,22 @@ def _serve_frontier(api, args, mesh) -> int:
     for lvl in range(frontier.n_levels):   # warm every level's jit cache
         frontier.serve([frontier.validate(mk())] * args.batch, level=lvl)
 
+    tracer, metrics = _mk_telemetry(args)
     sched = SLOScheduler(frontier, slo_s=args.slo_ms / 1e3,
-                         max_queue=max(4 * args.batch * 8, 256))
+                         max_queue=max(4 * args.batch * 8, 256),
+                         tracer=tracer, metrics=metrics)
     n_req = args.batch * 16                # a burst well past one batch
     t0 = time.perf_counter()
-    tickets = [sched.submit(mk()) for _ in range(n_req)]
-    sched.drain()
-    # Post-burst trickle: one request at a time, so the controller sees
-    # low pressure and climbs back toward the accurate point.
-    for _ in range(16):
-        tickets.append(sched.submit(mk()))
+    with _Profiled(args.profile):
+        tickets = [sched.submit(mk()) for _ in range(n_req)]
         sched.drain()
-        if sched.level == 0:
-            break
+        # Post-burst trickle: one request at a time, so the controller
+        # sees low pressure and climbs back to the accurate point.
+        for _ in range(16):
+            tickets.append(sched.submit(mk()))
+            sched.drain()
+            if sched.level == 0:
+                break
     n_req = len(tickets)
     dt = time.perf_counter() - t0
     st = sched.stats()
@@ -130,6 +209,7 @@ def _serve_frontier(api, args, mesh) -> int:
           f"p99={st['p99_latency_s']*1e3:.1f}ms "
           f"(drained back to level {sched.level}: "
           f"{sched.plan_point})")
+    _export_telemetry(args, tracer, metrics)
     return 0
 
 
@@ -152,19 +232,29 @@ def _serve_cnn(api, policy_or_plan, args, mesh) -> int:
 
     plan = (policy_or_plan if isinstance(policy_or_plan, PrecisionPlan)
             else None)
+    tracer, metrics = _mk_telemetry(args)
     server = ImageServer(api=api, params=packed, plan=plan,
-                         batch_buckets=(args.batch,), mesh=mesh)
+                         batch_buckets=(args.batch,), mesh=mesh,
+                         tracer=tracer, metrics=metrics)
     imgs = np.asarray(
         np.random.default_rng(args.seed).normal(
             0.4, 0.5, (args.batch, cfg.img_size, cfg.img_size, 3)),
         np.float32)
     server.predict(imgs)  # compile
+    n0 = len(tracer.events)
     t0 = time.perf_counter()
-    logits = server.predict(imgs)
+    with _Profiled(args.profile):
+        logits = server.predict(imgs)
     dt = time.perf_counter() - t0
     print(f"[serve] {args.batch} images in {dt:.3f}s -> "
           f"{args.batch/dt:.1f} images/s (img {cfg.img_size}, "
           f"logits {logits.shape})")
+    if tracer.enabled:
+        split = device_time_split(tracer, since=n0)
+        measured = split["device_s"] or dt
+        _print_attribution(_attribution_summary(
+            api, policy_or_plan, measured, batch=args.batch))
+    _export_telemetry(args, tracer, metrics)
     return 0
 
 
@@ -206,6 +296,15 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", default=None,
                     help="serve mesh 'DATAxMODEL' (e.g. 8x1): shard the "
                          "packed tree + batch across local devices")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export a Chrome trace_event JSON of the run "
+                         "(loadable in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-dump", default=None, metavar="OUT.prom",
+                    help="dump the metrics registry in Prometheus text "
+                         "exposition format at exit")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace of the "
+                         "serve loop into DIR (TensorBoard-loadable)")
     args = ap.parse_args(argv)
 
     if args.xla_serving_flags:
@@ -291,7 +390,9 @@ def main(argv=None) -> int:
     print(f"[serve] packed {args.arch} at {tag}: "
           f"{n_bytes/2**20:.1f} MiB in {t_pack:.2f}s")
 
-    gen = Generator(api=api, params=packed, mesh=mesh)
+    tracer, metrics = _mk_telemetry(args)
+    gen = Generator(api=api, params=packed, mesh=mesh,
+                    tracer=tracer, metrics=metrics)
     prompts = np.asarray(
         np.random.default_rng(args.seed).integers(
             0, api.cfg.vocab, (args.batch, args.prompt_len)), np.int32)
@@ -299,13 +400,22 @@ def main(argv=None) -> int:
                        np.float32) if api.needs_frames else None)
 
     gen.generate(prompts, 2, frames=frames)  # compile
+    n0 = len(tracer.events)
     t0 = time.perf_counter()
-    out = gen.generate(prompts, args.new_tokens, frames=frames)
+    with _Profiled(args.profile):
+        out = gen.generate(prompts, args.new_tokens, frames=frames)
     dt = time.perf_counter() - t0
     toks = args.batch * args.new_tokens
     print(f"[serve] {toks} tokens in {dt:.2f}s -> {toks/dt:.1f} tok/s "
           f"(batch {args.batch})")
     print(f"[serve] sample: {out[0, :12].tolist()}")
+    if tracer.enabled:
+        split = device_time_split(tracer, since=n0)
+        measured = split["device_s"] or dt
+        _print_attribution(_attribution_summary(
+            api, api.policy, measured,
+            tokens=args.batch * (args.prompt_len + args.new_tokens)))
+    _export_telemetry(args, tracer, metrics)
     return 0
 
 

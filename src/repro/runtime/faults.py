@@ -31,6 +31,9 @@ from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.runtime.telemetry import NULL_METRICS, NULL_TRACER, as_metrics, \
+    as_tracer
+
 __all__ = [
     "TransientStepError",
     "FaultSpec",
@@ -81,6 +84,21 @@ class FaultInjector:
         self.log: Deque[Tuple[int, str]] = collections.deque(maxlen=history)
         self.counts = collections.Counter()
         self._n = 0
+        self.tracer = NULL_TRACER
+        self.metrics = NULL_METRICS
+        self._m_faults = NULL_METRICS.counter("repro_faults_injected_total")
+
+    def instrument(self, tracer=None, metrics=None) -> "FaultInjector":
+        """Attach telemetry: every fault HIT becomes a trace instant
+        (``fault.<kind>``) and a labeled counter increment, so chaos
+        runs are traceable.  Telemetry never touches ``_rng`` or reads
+        a clock (a clock read could re-enter a skew-wrapped clock and
+        roll again) — the (spec, seed) fault schedule replays
+        bit-identically with or without tracing.  Returns self."""
+        self.tracer = as_tracer(tracer)
+        self.metrics = as_metrics(metrics)
+        self._m_faults = self.metrics.counter("repro_faults_injected_total")
+        return self
 
     def _roll(self, rate: float, kind: str) -> bool:
         self._n += 1
@@ -88,6 +106,14 @@ class FaultInjector:
         if hit:
             self.log.append((self._n, kind))
             self.counts[kind] += 1
+            self._m_faults.inc(kind=kind)
+            if self.tracer.enabled:
+                # clock-free timestamp: anchored to the newest traced
+                # event, so tracing can never perturb the roll stream
+                self.tracer.instant_at(f"fault.{kind}",
+                                       self.tracer.last_ts, cat="fault",
+                                       args={"roll": self._n,
+                                             "seed": self.seed})
         return hit
 
     # --- compute-side faults -----------------------------------------------
@@ -118,7 +144,10 @@ class FaultInjector:
         points = [(name, self.wrap_server(frontier.server(i),
                                           advance=advance))
                   for i, name in enumerate(frontier.names)]
-        return FrontierServer(points, manifest=frontier.manifest)
+        # instrumentation survives wrapping: the chaos frontier traces
+        # exactly like the healthy one
+        return FrontierServer(points, manifest=frontier.manifest) \
+            .instrument(tracer=frontier._tracer, metrics=frontier._metrics)
 
     # --- clock-side faults -------------------------------------------------
 

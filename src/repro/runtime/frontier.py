@@ -38,6 +38,8 @@ import numpy as np
 
 from repro.core.plan import (FrontierManifest, PrecisionPlan, as_plan)
 from repro.runtime.serve import Generator, ImageServer, pack_for_serving
+from repro.runtime.telemetry import NULL_METRICS, NULL_TRACER, as_metrics, \
+    as_tracer
 
 __all__ = [
     "Server",
@@ -216,6 +218,21 @@ class FrontierServer:
                 f"frontier points must share one payload kind, got {kinds}")
         self.kind = kinds.pop()
         self.manifest = manifest
+        self._tracer = NULL_TRACER
+        self._metrics = NULL_METRICS
+        self._m_serve = NULL_METRICS.counter("repro_frontier_serve_total")
+
+    def instrument(self, tracer=None, metrics=None) -> "FrontierServer":
+        """Attach telemetry: every ``serve`` emits one span and one
+        counter increment LABELED BY LEVEL AND POINT NAME, so per-level
+        traffic and latency are separable downstream.  SLOScheduler
+        propagates its own tracer/metrics here automatically; call this
+        directly when driving a frontier without the SLO layer.
+        Returns self (chainable)."""
+        self._tracer = as_tracer(tracer)
+        self._metrics = as_metrics(metrics)
+        self._m_serve = self._metrics.counter("repro_frontier_serve_total")
+        return self
 
     @property
     def names(self) -> Tuple[str, ...]:
@@ -247,12 +264,26 @@ class FrontierServer:
         if not 0 <= level < len(self._points):
             raise IndexError(
                 f"level {level} outside frontier [0, {len(self._points)})")
-        return self._points[level][1].serve(payloads)
+        name, srv = self._points[level]
+        tr = self._tracer
+        if not tr.enabled:
+            self._m_serve.inc(level=level, point=name)
+            return srv.serve(payloads)
+        t0 = tr.clock()
+        results = srv.serve(payloads)
+        tr.span_at("frontier.serve", t0, tr.clock(), cat="dispatch",
+                   args={"level": level, "point": name,
+                         "batch": len(payloads)})
+        self._m_serve.inc(level=level, point=name)
+        return results
 
     def restricted(self, level: int = 0) -> "FrontierServer":
         """A single-point frontier pinned at ``level`` — the fixed-plan
-        baseline the SLO benchmark compares against."""
-        return FrontierServer([self._points[level]], manifest=self.manifest)
+        baseline the SLO benchmark compares against.  Telemetry rides
+        along (the restricted baseline stays comparable in traces)."""
+        return FrontierServer(
+            [self._points[level]], manifest=self.manifest,
+        ).instrument(tracer=self._tracer, metrics=self._metrics)
 
 
 # --- building a frontier from one weight store ------------------------------

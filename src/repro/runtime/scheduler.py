@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.serve import _pad_batch
+from repro.runtime.telemetry import as_metrics, as_tracer, declare_golden
 
 __all__ = ["QueueFull", "Ticket", "ImageScheduler", "GenerateScheduler"]
 
@@ -151,7 +152,8 @@ class _SchedulerBase:
     RESERVOIR_SIZE = 512  # latency quantile sample (O(1) memory forever)
 
     def __init__(self, *, max_queue: int, max_wait_s: float,
-                 clock: Callable[[], float], history: int = 1024):
+                 clock: Callable[[], float], history: int = 1024,
+                 tracer=None, metrics=None):
         self.max_queue = int(max_queue)
         self.max_wait_s = float(max_wait_s)
         self.clock = clock
@@ -165,6 +167,8 @@ class _SchedulerBase:
         self.served: Deque[Ticket] = collections.deque(maxlen=history)
         self.events: Deque[Tuple[int, str, Tuple[int, ...]]] = \
             collections.deque(maxlen=max(4 * history, 4096))
+        self.dropped_events = 0   # oldest entries the bounded deques shed
+        self.dropped_tickets = 0  # (truncation must be visible, not silent)
         self._tick = 0
         self._n_served = 0
         self._lat_sum = self._lat_max = self._qw_sum = 0.0
@@ -174,6 +178,22 @@ class _SchedulerBase:
         self._res: List[float] = []
         self._res_seen = 0
         self._res_rng = random.Random(0x510)
+        # Telemetry: both default to the shared no-op objects, and every
+        # metric handle is cached here so the hot path never does a
+        # registry lookup.  The tracer MUST share this scheduler's clock
+        # (trace timestamps mix span_at(ticket times) with live reads).
+        self.tracer = as_tracer(tracer)
+        self.metrics = declare_golden(as_metrics(metrics))
+        m = self.metrics
+        self._m_submitted = m.counter("repro_requests_submitted_total")
+        self._m_rejected = m.counter("repro_requests_rejected_total")
+        self._m_completed = m.counter("repro_requests_completed_total")
+        self._m_batches = m.counter("repro_batches_total")
+        self._m_qdepth = m.gauge("repro_queue_depth")
+        self._m_latency = m.histogram("repro_request_latency_seconds")
+        self._m_qwait = m.histogram("repro_queue_wait_seconds")
+        self._m_drop_ev = m.counter("repro_dropped_events_total")
+        self._m_drop_tk = m.counter("repro_dropped_tickets_total")
 
     def _retry_after_hint(self) -> float:
         """Suggested client backoff on rejection: the batching window is
@@ -184,15 +204,25 @@ class _SchedulerBase:
     def _enqueue(self, ticket: Ticket) -> Ticket:
         if len(self._queue) >= self.max_queue:
             self.rejected += 1
+            self._m_rejected.inc(reason="queue")
             now = self.clock()
             oldest = now - self._queue[0].t_submit if self._queue else 0.0
             hint = self._retry_after_hint()
+            if self.tracer.enabled:
+                self.tracer.instant("reject", cat="queue",
+                                    args={"depth": len(self._queue),
+                                          "reason": "queue"})
             raise QueueFull(
                 f"admission queue full ({len(self._queue)} waiting, "
                 f"oldest {oldest:.3f}s); retry in {hint:.3f}s",
                 depth=len(self._queue), oldest_wait_s=oldest,
                 retry_after_s=hint)
         self._queue.append(ticket)
+        self._m_submitted.inc()
+        self._m_qdepth.set(len(self._queue))
+        if self.tracer.enabled:
+            self.tracer.instant("submit", cat="request", tid=ticket.id,
+                                args={"tenant": ticket.tenant})
         return ticket
 
     @property
@@ -200,7 +230,48 @@ class _SchedulerBase:
         return len(self._queue)
 
     def _log(self, kind: str, tickets: Sequence[Ticket]) -> None:
+        if len(self.events) == self.events.maxlen:
+            self.dropped_events += 1
+            self._m_drop_ev.inc()
         self.events.append((self._tick, kind, tuple(t.id for t in tickets)))
+        self._m_batches.inc(phase=kind)
+        if self.tracer.enabled:
+            self.tracer.instant(kind, cat="sched",
+                                args={"tick": self._tick,
+                                      "n": len(tickets)})
+
+    def _retire(self, ticket: Ticket) -> None:
+        """Append a terminal ticket to the bounded history, counting the
+        oldest entry it pushes out."""
+        if len(self.served) == self.served.maxlen:
+            self.dropped_tickets += 1
+            self._m_drop_tk.inc()
+        self.served.append(ticket)
+
+    def _trace_terminal(self, ticket: Ticket) -> None:
+        """Retroactive lifecycle spans from the timestamps the ticket
+        already carries (one call at terminal time — the hot path never
+        touches the tracer): an outer ``request`` span enclosing
+        ``queue`` (submit -> admit) and ``serve`` (admit -> done), all
+        on the ticket's own trace track (tid = ticket id)."""
+        tr = self.tracer
+        if not tr.enabled:
+            return
+        tid = ticket.id
+        args = {"outcome": ticket.outcome}
+        if ticket.plan_point:
+            args["plan_point"] = ticket.plan_point
+        if ticket.retries:
+            args["retries"] = ticket.retries
+        if ticket.note:
+            args["note"] = ticket.note
+        tr.span_at("request", ticket.t_submit, ticket.t_done,
+                   cat="request", tid=tid, args=args)
+        if ticket.t_admit is not None:
+            tr.span_at("queue", ticket.t_submit, ticket.t_admit,
+                       cat="request", tid=tid)
+            tr.span_at("serve", ticket.t_admit, ticket.t_done,
+                       cat="request", tid=tid)
 
     def _check_not_terminal(self, ticket: Ticket) -> None:
         """A ticket terminates exactly once — double completion is a
@@ -225,7 +296,12 @@ class _SchedulerBase:
         self._lat_max = max(self._lat_max, ticket.latency_s)
         self._qw_sum += ticket.queue_wait_s
         self._sample_latency(ticket.latency_s)
-        self.served.append(ticket)
+        self._retire(ticket)
+        self._m_completed.inc(outcome=ticket.outcome)
+        self._m_latency.observe(ticket.latency_s)
+        self._m_qwait.observe(ticket.queue_wait_s)
+        self._m_qdepth.set(len(self._queue))
+        self._trace_terminal(ticket)
 
     def _expire(self, ticket: Ticket, note: str = "") -> None:
         """Deadline cancellation: terminal without a result, so an
@@ -237,7 +313,10 @@ class _SchedulerBase:
         ticket.note = note
         ticket.payload = None
         self.expired += 1
-        self.served.append(ticket)
+        self._retire(ticket)
+        self._m_completed.inc(outcome="expired")
+        self._m_qdepth.set(len(self._queue))
+        self._trace_terminal(ticket)
 
     def _fail(self, ticket: Ticket, note: str = "") -> None:
         """Terminal failure (retries exhausted, aborted drive loop)."""
@@ -248,7 +327,10 @@ class _SchedulerBase:
         ticket.note = note
         ticket.payload = None
         self.failed += 1
-        self.served.append(ticket)
+        self._retire(ticket)
+        self._m_completed.inc(outcome="failed")
+        self._m_qdepth.set(len(self._queue))
+        self._trace_terminal(ticket)
 
     # --- non-convergent drive loops ----------------------------------------
 
@@ -297,9 +379,11 @@ class _SchedulerBase:
         """Aggregate latency accounting over completed requests.
 
         Quantiles come from the fixed-size reservoir — a uniform sample
-        of every completion so far, not a sliding window — and the
-        outcome counters surface the SLO machinery (zero on the plain
-        schedulers)."""
+        of every completion so far, not a sliding window.  The key set
+        is IDENTICAL across every scheduler (the schema-parity contract
+        ``tests/test_telemetry.py`` pins): SLO counters are zero on the
+        plain schedulers, cache accounting zero outside the LM front
+        end — dashboards consume any scheduler uniformly."""
         n = self._n_served
         res = sorted(self._res)
         return {
@@ -316,6 +400,18 @@ class _SchedulerBase:
             "p50_latency_s": self._quantile(res, 0.50),
             "p95_latency_s": self._quantile(res, 0.95),
             "p99_latency_s": self._quantile(res, 0.99),
+            # bounded-history truncation (oldest entries shed)
+            "dropped_events": float(self.dropped_events),
+            "dropped_tickets": float(self.dropped_tickets),
+            # SLO machinery (live only on SLOScheduler)
+            "level": 0.0,
+            "throttled": 0.0,
+            "transitions": 0.0,
+            # resident KV-cache accounting (live only on GenerateScheduler)
+            "cache_bytes_per_slot": 0.0,
+            "resident_cache_bytes": 0.0,
+            "resident_cache_fp_bytes": 0.0,
+            "kv_cache_compression": 1.0,
         }
 
 
@@ -340,9 +436,10 @@ class ImageScheduler(_SchedulerBase):
     def __init__(self, server, *, max_queue: int = 256,
                  max_wait_s: float = 0.005,
                  clock: Callable[[], float] = time.monotonic,
-                 history: int = 1024):
+                 history: int = 1024, tracer=None, metrics=None):
         super().__init__(max_queue=max_queue, max_wait_s=max_wait_s,
-                         clock=clock, history=history)
+                         clock=clock, history=history, tracer=tracer,
+                         metrics=metrics)
         self.server = server
         self.buckets = tuple(sorted(server.batch_buckets))
         self.dispatched_batches: Deque[int] = collections.deque(
@@ -479,9 +576,10 @@ class GenerateScheduler(_SchedulerBase):
                  decode_buckets: Tuple[int, ...] = (1, 2, 4, 8),
                  max_queue: int = 256, max_wait_s: float = 0.0,
                  clock: Callable[[], float] = time.monotonic,
-                 history: int = 1024):
+                 history: int = 1024, tracer=None, metrics=None):
         super().__init__(max_queue=max_queue, max_wait_s=max_wait_s,
-                         clock=clock, history=history)
+                         clock=clock, history=history, tracer=tracer,
+                         metrics=metrics)
         if gen.api.needs_frames:
             raise NotImplementedError(
                 "GenerateScheduler does not carry per-request audio frames")

@@ -41,6 +41,7 @@ from repro.nn import param as nnp
 from repro.nn import partitioning as part
 from repro.nn import quantized as Q
 from repro.nn.layers import pack_embed
+from repro.runtime.telemetry import as_metrics, as_tracer, device_timed
 
 __all__ = ["pack_for_serving", "serve_shardings", "Generator", "ImageServer"]
 
@@ -135,6 +136,8 @@ class ImageServer:
     dataflow: str = "auto"
     plan: Any = None
     mesh: Optional[Mesh] = None
+    tracer: Any = None   # telemetry.Tracer; None = the no-op fast path
+    metrics: Any = None  # telemetry.MetricsRegistry; None = no-op
 
     def __post_init__(self):
         if self.api.family != "cnn":
@@ -148,6 +151,9 @@ class ImageServer:
                                          part.replicated(self.mesh))
         self.batch_buckets = tuple(sorted(set(self.batch_buckets)))
         self._fns: Dict[int, Any] = {}
+        self.tracer = as_tracer(self.tracer)
+        self.metrics = as_metrics(self.metrics)
+        self._m_device = self.metrics.histogram("repro_device_time_seconds")
 
     def _fn(self, bucket: int):
         """One jitted serve graph per batch bucket."""
@@ -186,7 +192,24 @@ class ImageServer:
                 pad = np.zeros((bucket - take,) + chunk.shape[1:],
                                chunk.dtype)
                 chunk = np.concatenate([chunk, pad])
-            y = self._fn(bucket)(self.params, jnp.asarray(chunk))
+            tr = self.tracer
+            if tr.enabled:
+                # host dispatch (call returns while the device runs) vs
+                # device remainder (block_until_ready delta).  Blocking
+                # changes when the host waits, never the values — the
+                # bit-neutrality property tests/test_telemetry.py pins.
+                t0 = tr.clock()
+                y = self._fn(bucket)(self.params, jnp.asarray(chunk))
+                t1 = tr.clock()
+                jax.block_until_ready(y)
+                t2 = tr.clock()
+                tr.span_at("predict", t0, t2, cat="device",
+                           args={"bucket": bucket,
+                                 "dispatch_s": t1 - t0,
+                                 "device_s": t2 - t1})
+                self._m_device.observe(t2 - t0, phase="predict")
+            else:
+                y = self._fn(bucket)(self.params, jnp.asarray(chunk))
             outs.append(np.asarray(y[:take]))
             i += take
         return np.concatenate(outs)
@@ -220,10 +243,14 @@ class Generator:
     mode: str = "serve"
     plan: Any = None
     mesh: Optional[Mesh] = None
+    tracer: Any = None   # telemetry.Tracer; None = the no-op fast path
+    metrics: Any = None  # telemetry.MetricsRegistry; None = no-op
 
     def __post_init__(self):
         if self.plan is not None:
             self.api = dataclasses.replace(self.api, policy=self.plan)
+        self.tracer = as_tracer(self.tracer)
+        self.metrics = as_metrics(self.metrics)
         prefill_fn = steps_lib.make_prefill_fn(self.api, mode=self.mode)
         decode_fn = steps_lib.make_decode_fn(self.api, mode=self.mode)
         if self.mesh is None:
@@ -231,6 +258,7 @@ class Generator:
             self._tok_sh = None
             self._prefill = jax.jit(prefill_fn)
             self._decode = jax.jit(decode_fn)
+            self._instrument_steps()
             return
         # Explicit-sharding jits, mirroring launch/dryrun._lower_step:
         # params by SERVE_RULES, batch over 'data', decode cache by
@@ -263,6 +291,20 @@ class Generator:
             self._cache_sh = None
             self._decode = jax.jit(decode_fn)
         self._prefill = jax.jit(prefill_fn, in_shardings=(p_sh, batch_sh))
+        self._instrument_steps()
+
+    def _instrument_steps(self) -> None:
+        """Wrap the jitted prefill/decode with host/device timing when a
+        live tracer is attached — ``device_timed`` returns the original
+        callables untouched on the no-op tracer, so the disabled path
+        is byte-for-byte the old one.  ``GenerateScheduler`` calls
+        ``gen._prefill``/``gen._decode`` directly, so continuous-
+        batching steps inherit the spans with no scheduler changes."""
+        hist = self.metrics.histogram("repro_device_time_seconds")
+        self._prefill = device_timed(self.tracer, "prefill", self._prefill,
+                                     hist)
+        self._decode = device_timed(self.tracer, "decode", self._decode,
+                                    hist)
 
     def generate(self, tokens: np.ndarray, n_new: int,
                  frames: Optional[np.ndarray] = None) -> np.ndarray:

@@ -240,10 +240,18 @@ class SLOScheduler(_SchedulerBase):
                  max_queue: int = 256,
                  max_wait_s: float = 0.0,
                  clock: Callable[[], float] = time.monotonic,
-                 history: int = 1024):
+                 history: int = 1024, tracer=None, metrics=None):
         super().__init__(max_queue=max_queue, max_wait_s=max_wait_s,
-                         clock=clock, history=history)
+                         clock=clock, history=history, tracer=tracer,
+                         metrics=metrics)
         self.frontier = frontier
+        # Frontier-level telemetry handles (base init cached the rest).
+        # The frontier inherits this scheduler's tracer/metrics so its
+        # per-level serve accounting lands in the same registry.
+        self._m_level = self.metrics.gauge("repro_frontier_level")
+        self._m_transitions = self.metrics.counter(
+            "repro_frontier_transitions_total")
+        frontier.instrument(tracer=self.tracer, metrics=self.metrics)
         self.slo_s = float(slo_s)
         self.controller = DegradationController(frontier.n_levels,
                                                 hysteresis, history=history)
@@ -314,6 +322,10 @@ class SLOScheduler(_SchedulerBase):
         if bucket is not None and not bucket.try_take():
             self.rejected += 1
             self.throttled += 1
+            self._m_rejected.inc(reason="tenant")
+            if self.tracer.enabled:
+                self.tracer.instant("throttle", cat="queue",
+                                    args={"tenant": tenant})
             hint = bucket.retry_after_s()
             oldest = (now - self._queue[0].t_submit
                       if self._queue else 0.0)
@@ -384,9 +396,19 @@ class SLOScheduler(_SchedulerBase):
         now = self.clock()
         done = self._expire_due(now)
         before = self.controller.level
-        level = self.controller.observe(self._pressure(now))
+        pressure = self._pressure(now)
+        level = self.controller.observe(pressure)
         if level != before:
-            self._log("shed" if level > before else "recover", [])
+            direction = "shed" if level > before else "recover"
+            self._log(direction, [])
+            self._m_transitions.inc(direction=direction)
+            self._m_level.set(level)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    direction, cat="slo",
+                    args={"from": before, "to": level,
+                          "pressure": pressure,
+                          "point": self.frontier.name(level)})
         if not self._queue:
             return done
         if now < self._not_before and not flush:
@@ -444,6 +466,11 @@ class SLOScheduler(_SchedulerBase):
                 survivors.append(t)
         self._queue.extendleft(reversed(survivors))
         self._log("retry", survivors)
+        if self.tracer.enabled:
+            self.tracer.instant("backoff", cat="slo",
+                                args={"backoff_s": backoff,
+                                      "consecutive": self._consec_failures,
+                                      "requeued": len(survivors)})
         return done
 
     def drain(self, max_steps: int = 10_000) -> int:
