@@ -29,6 +29,7 @@ MODULES = [
     ("pareto", "benchmarks.pareto_serve"),
     ("lm_plan", "benchmarks.lm_plan_serve"),
     ("kv", "benchmarks.kv_decode"),
+    ("specdec", "benchmarks.specdec"),
 ]
 
 

@@ -1,0 +1,197 @@
+"""End-to-end speculative decoding: low-bit draft vs mixed-plan serve.
+
+One float checkpoint, two packed views (runtime/specdec.py): the
+committed granite mixed plan verifies while the committed uniform
+w2/kv2 draft plan proposes k greedy tokens per cycle.  This benchmark
+measures what speculation buys END TO END — tokens/s of
+``SpeculativeGenerator.generate`` against a plain verify-plan
+``Generator`` over the same prompts — at k in {2, 4, 8}.
+
+Acceptance needs a model whose low-bit repack agrees with its mixed
+repack, so the full run first trains the reduced config briefly on a
+deterministic affine next-token task (t_{i+1} = (5 t_i + 7) mod V, the
+same ``make_train_step`` funnel as the trainer); the smoke run skips
+training — random-init acceptance is near zero, so smoke gates
+BIT-IDENTITY only, never speed.
+
+Two guarantees ride along with the timing:
+  * bit-identity: at EVERY k, speculative greedy output must equal the
+    verify-plan-only Generator token-for-token (accepted drafts are, by
+    the acceptance rule, exactly the verify argmaxes — speculation may
+    only change throughput, never output).
+  * the full run asserts >= 1.5x tokens/s over the non-speculative
+    mixed baseline at the best k.
+
+Writes ``BENCH_specdec.json`` at the repo root; ``--smoke`` (CI)
+writes ``BENCH_specdec_smoke.json`` so tiny runs never clobber the
+full-run artifact.
+
+Run:  PYTHONPATH=src python -m benchmarks.specdec [--smoke]
+
+(also registered as ``specdec`` in benchmarks.run.)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_record
+from repro import configs
+from repro.core.plan import PrecisionPlan
+from repro.launch import steps as steps_lib
+from repro.runtime.serve import Generator, pack_for_serving
+from repro.runtime.specdec import SpeculativeGenerator
+
+_ROOT = Path(__file__).resolve().parent.parent
+BENCH_JSON = _ROOT / "BENCH_specdec.json"
+BENCH_SMOKE_JSON = _ROOT / "BENCH_specdec_smoke.json"
+
+VERIFY_PLAN = _ROOT / "examples" / "plans" / "granite_8b_mixed.json"
+DRAFT_PLAN = _ROOT / "examples" / "plans" / "granite_8b_draft_w2.json"
+
+K_SWEEP = (2, 4, 8)
+
+
+def _cyclic_batch(rng, vocab: int, b: int = 16, s: int = 33):
+    """The deterministic affine orbit t_{i+1} = (5 t_i + 7) mod V."""
+    seq = [rng.integers(0, vocab, size=(b, 1))]
+    for _ in range(s):
+        seq.append((seq[-1] * 5 + 7) % vocab)
+    seq = np.concatenate(seq, axis=1).astype(np.int32)
+    return {"tokens": jnp.asarray(seq[:, :-1]),
+            "labels": jnp.asarray(seq[:, 1:])}
+
+
+def _train_checkpoint(api, rng, steps: int):
+    """Brief QAT on the affine task (uniform train policy, the same
+    checkpoint both plan points then re-pack)."""
+    if steps == 0:
+        return api.init_params(jax.random.PRNGKey(0), "train")
+    train_step = jax.jit(steps_lib.make_train_step(
+        api, peak_lr=3e-3, total_steps=steps))
+    state = steps_lib.init_train_state(api, jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        state, m = train_step(state, _cyclic_batch(rng, api.cfg.vocab))
+    print(f"# trained {steps} steps on the affine task in "
+          f"{time.perf_counter() - t0:.1f}s (loss {float(m['loss']):.2e})")
+    return state["params"]
+
+
+def _median_s(fn, iters: int) -> float:
+    fn()  # warm the jit caches (incl. every tail-k_eff draft graph)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _measure(api, params, verify_plan, draft_plan, prompts, n_new,
+             iters, max_len):
+    """Baseline + per-k speculative rows; bit-identity gated at every k."""
+    api_v = dataclasses.replace(api, policy=verify_plan)
+    gen_v = Generator(api_v, pack_for_serving(api_v, params),
+                      max_len=max_len)
+    out_v = np.asarray(gen_v.generate(prompts, n_new))
+    base_s = _median_s(lambda: gen_v.generate(prompts, n_new), iters)
+    n_toks = prompts.shape[0] * n_new
+    base = {"mode": "baseline", "k": 0, "tokens_per_s": n_toks / base_s,
+            "accept_rate": 0.0, "speedup": 1.0}
+    print(f"# baseline (verify plan only): {base['tokens_per_s']:8.1f} tok/s")
+    rows = [base]
+    for k in K_SWEEP:
+        sg = SpeculativeGenerator(api=api, train_params=params,
+                                  draft_plan=draft_plan,
+                                  verify_plan=verify_plan, k=k,
+                                  max_len=max_len)
+        out = np.asarray(sg.generate(prompts, n_new))
+        assert (out == out_v).all(), \
+            f"speculative output diverged from the verify plan at k={k}"
+        sg.drafted_tokens = sg.accepted_tokens = 0  # drop warmup stats
+        spec_s = _median_s(lambda: sg.generate(prompts, n_new), iters)
+        rows.append({"mode": "spec", "k": k,
+                     "tokens_per_s": n_toks / spec_s,
+                     "accept_rate": sg.accept_rate,
+                     "speedup": base_s / spec_s})
+        print(f"# spec k={k}: {rows[-1]['tokens_per_s']:8.1f} tok/s "
+              f"({rows[-1]['speedup']:.2f}x, accept "
+              f"{rows[-1]['accept_rate']:.3f})")
+    print("# bit-identity: spec == verify-plan-only at every k")
+    return rows
+
+
+def _run(args):
+    api = configs.get("granite-8b", reduced=True)
+    verify_plan = PrecisionPlan.load(str(VERIFY_PLAN))
+    draft_plan = PrecisionPlan.load(str(DRAFT_PLAN))
+    rng = np.random.default_rng(0)
+    train_steps = 0 if args.smoke else args.train_steps
+    params = _train_checkpoint(api, rng, train_steps)
+    n_new = 24 if args.smoke else 128
+    prompts = np.asarray(rng.integers(0, api.cfg.vocab, size=(1, 8)),
+                         np.int32)
+    max_len = prompts.shape[1] + n_new + 8
+    rows = _measure(api, params, verify_plan, draft_plan, prompts, n_new,
+                    args.iters, max_len)
+    best = max((r for r in rows if r["mode"] == "spec"),
+               key=lambda r: r["speedup"])
+    if not args.smoke and best["speedup"] < 1.5:
+        # One re-measure absorbs a noisy median before failing hard: a
+        # cycle emitting a+1 tokens costs ~2 dispatches instead of a+1,
+        # so with the trained checkpoint's acceptance the wall clock
+        # must show it.
+        print("# re-measuring (best speedup below the 1.5x gate) ...")
+        rows = _measure(api, params, verify_plan, draft_plan, prompts,
+                        n_new, args.iters, max_len)
+        best = max((r for r in rows if r["mode"] == "spec"),
+                   key=lambda r: r["speedup"])
+        assert best["speedup"] >= 1.5, \
+            f"best speculative speedup {best['speedup']:.2f}x < 1.5x"
+    out = {
+        "backend": jax.default_backend(),
+        "arch": "granite-8b (reduced)",
+        "verify_plan": verify_plan.name,
+        "draft_plan": draft_plan.name,
+        "n_new": n_new, "train_steps": train_steps,
+        "rows": rows,
+        "best_k": best["k"], "best_speedup": best["speedup"],
+        "smoke": bool(args.smoke),
+    }
+    path = BENCH_SMOKE_JSON if args.smoke else BENCH_JSON
+    write_record(path, out)
+    print(f"# wrote {path}")
+    return rows
+
+
+def rows():
+    """CSV rows for benchmarks.run (smoke shapes)."""
+    r = _run(argparse.Namespace(smoke=True, iters=3, train_steps=0))
+    return [{
+        "name": ("specdec_baseline" if x["mode"] == "baseline"
+                 else f"specdec_k{x['k']}"),
+        "us_per_call": 1e6 / x["tokens_per_s"],
+        "derived": (f"{x['tokens_per_s']:.1f} tok/s "
+                    f"accept={x['accept_rate']:.3f}"),
+    } for x in r]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--train-steps", type=int, default=300)
+    _run(ap.parse_args(argv))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -281,6 +281,16 @@ def main(argv=None) -> int:
                     help="per-request deadline budget for --frontier mode "
                          "(default sized for the CPU-emulation demo; real "
                          "accelerator deployments run ms-scale budgets)")
+    ap.add_argument("--spec-decode", type=int, default=None, metavar="K",
+                    help="speculative decoding: draft K tokens per cycle "
+                         "on a low-bit repack of the SAME checkpoint and "
+                         "verify them in one batched forward on the "
+                         "serving plan (LM archs; greedy output is "
+                         "bit-identical to serving the plan alone)")
+    ap.add_argument("--draft-plan", default=None, metavar="PLAN.json",
+                    help="precision plan for the --spec-decode draft "
+                         "point (e.g. examples/plans/"
+                         "granite_8b_draft_w2.json)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
@@ -358,6 +368,12 @@ def main(argv=None) -> int:
     api = configs.get(args.arch, reduced=args.reduced, policy=policy)
     if plan is not None:
         plan.validate_layers(api.plan_layer_names())
+    if args.spec_decode is not None:
+        if args.draft_plan is None:
+            raise SystemExit("--spec-decode requires --draft-plan")
+        if api.family == "cnn" or api.needs_frames:
+            raise SystemExit(
+                "--spec-decode serves autoregressive LM archs only")
     if api.family == "cnn":
         return _serve_cnn(api, api.policy, args, mesh)
 
@@ -376,10 +392,7 @@ def main(argv=None) -> int:
         params = state["params"]
         print(f"[serve] restored params from {args.ckpt_dir}")
 
-    t0 = time.perf_counter()
-    packed = pack_for_serving(api, params, mesh=mesh)
-    t_pack = time.perf_counter() - t0
-    n_bytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(packed))
+    tracer, metrics = _mk_telemetry(args)
     if isinstance(api.policy, PrecisionPlan):
         tag = (f"plan [{api.policy.name or args.plan}] w_bits "
                f"{'/'.join(map(str, api.policy.distinct_wbits()))}")
@@ -387,27 +400,56 @@ def main(argv=None) -> int:
         tag = "w_Q=FP"
     else:
         tag = f"w_Q={api.policy.inner_bits} k={api.policy.k}"
-    print(f"[serve] packed {args.arch} at {tag}: "
-          f"{n_bytes/2**20:.1f} MiB in {t_pack:.2f}s")
-
-    tracer, metrics = _mk_telemetry(args)
-    gen = Generator(api=api, params=packed, mesh=mesh,
-                    tracer=tracer, metrics=metrics)
+    t0 = time.perf_counter()
+    if args.spec_decode is not None:
+        # One float checkpoint, two packed views: the shipped plan
+        # verifies, a uniform low-bit repack drafts (runtime/specdec.py).
+        from repro.runtime.specdec import SpeculativeGenerator
+        dplan = PrecisionPlan.load(args.draft_plan)
+        dplan.validate_layers(api.plan_layer_names())
+        gen = SpeculativeGenerator(
+            api=api, train_params=params, draft_plan=dplan,
+            k=args.spec_decode,
+            max_len=args.prompt_len + args.new_tokens, mesh=mesh,
+            tracer=tracer, metrics=metrics)
+        print(f"[serve] packed {args.arch} at {tag} + draft point "
+              f"[{dplan.name or args.draft_plan}] from one weight store "
+              f"in {time.perf_counter() - t0:.2f}s "
+              f"(spec-decode k={args.spec_decode})")
+        frames = None
+    else:
+        packed = pack_for_serving(api, params, mesh=mesh)
+        t_pack = time.perf_counter() - t0
+        n_bytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(packed))
+        print(f"[serve] packed {args.arch} at {tag}: "
+              f"{n_bytes/2**20:.1f} MiB in {t_pack:.2f}s")
+        gen = Generator(api=api, params=packed, mesh=mesh,
+                        tracer=tracer, metrics=metrics)
+        frames = (np.zeros((args.batch, api.cfg.n_audio, api.cfg.d_model),
+                           np.float32) if api.needs_frames else None)
     prompts = np.asarray(
         np.random.default_rng(args.seed).integers(
             0, api.cfg.vocab, (args.batch, args.prompt_len)), np.int32)
-    frames = (np.zeros((args.batch, api.cfg.n_audio, api.cfg.d_model),
-                       np.float32) if api.needs_frames else None)
+    gen_kw = {} if args.spec_decode is not None else {"frames": frames}
 
-    gen.generate(prompts, 2, frames=frames)  # compile
+    # compile (spec mode needs one full-k cycle to warm the draft scan)
+    warm = (2 if args.spec_decode is None
+            else min(args.new_tokens, args.spec_decode + 2))
+    gen.generate(prompts, warm, **gen_kw)
+    if args.spec_decode is not None:
+        gen.drafted_tokens = gen.accepted_tokens = 0  # drop warmup stats
     n0 = len(tracer.events)
     t0 = time.perf_counter()
     with _Profiled(args.profile):
-        out = gen.generate(prompts, args.new_tokens, frames=frames)
+        out = gen.generate(prompts, args.new_tokens, **gen_kw)
     dt = time.perf_counter() - t0
     toks = args.batch * args.new_tokens
     print(f"[serve] {toks} tokens in {dt:.2f}s -> {toks/dt:.1f} tok/s "
           f"(batch {args.batch})")
+    if args.spec_decode is not None:
+        print(f"[serve] specdec accept rate {gen.accept_rate:.3f} "
+              f"({gen.accepted_tokens}/{gen.drafted_tokens} drafted tokens "
+              f"accepted at k={args.spec_decode})")
     print(f"[serve] sample: {out[0, :12].tolist()}")
     if tracer.enabled:
         split = device_time_split(tracer, since=n0)

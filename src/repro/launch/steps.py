@@ -21,7 +21,7 @@ from repro.optim import (adamw_init, adamw_update, compress_decompress,
 __all__ = [
     "cross_entropy",
     "make_train_step", "train_state_specs", "train_state_axes",
-    "make_prefill_fn", "make_decode_fn",
+    "make_prefill_fn", "make_decode_fn", "make_verify_fn",
     "input_specs", "input_axes", "batch_rules_for",
 ]
 
@@ -144,6 +144,17 @@ def make_decode_fn(api: ModelAPI, *, mode: str = "serve") -> Callable:
     def decode_fn(params, cache, tokens, length):
         return api.decode_step(params, cache, tokens, length, mode=mode)
     return decode_fn
+
+
+def make_verify_fn(api: ModelAPI, *, mode: str = "serve",
+                   attn_impl: str = "xla") -> Callable:
+    """verify_fn(params, cache, tokens (B,T), length) -> (logits (B,T,V),
+    cache) — the batched multi-token step speculative decode verifies
+    drafted tokens with (runtime/specdec.py)."""
+    def verify_fn(params, cache, tokens, length):
+        return api.decode_steps(params, cache, tokens, length, mode=mode,
+                                attn_impl=attn_impl)
+    return verify_fn
 
 
 # --------------------------------------------------------------------------

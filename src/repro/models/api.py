@@ -69,6 +69,17 @@ class ModelAPI:
         return self.mod.decode_step(self.cfg, params, cache, tokens, length,
                                     self.policy, mode=mode, impl=impl)
 
+    def decode_steps(self, params, cache, tokens, length, *, mode="serve",
+                     impl="xla", attn_impl="xla"):
+        """T-token cache extension (speculative verify); LM families
+        only — logits (B, T, V) bit-identical to T decode_step calls."""
+        fn = getattr(self.mod, "decode_steps", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"{self.family} has no multi-token decode_steps")
+        return fn(self.cfg, params, cache, tokens, length, self.policy,
+                  mode=mode, impl=impl, attn_impl=attn_impl)
+
     def cache_specs(self, batch: int, max_len: int):
         # kv-aware families lay the cache out per plan (packed digit
         # planes); the rest keep their policy-free signature.

@@ -47,9 +47,9 @@ from repro.nn.param import ParamSpec
 from repro.nn.partitioning import constrain
 
 __all__ = ["MLAConfig", "TransformerConfig", "specs", "forward", "prefill",
-           "decode_step", "cache_specs", "gemm_workload", "model_flops",
-           "plan_layer_names", "kv_layer_names", "kv_cache_workload",
-           "scan_format_groups", "regroup_layers"]
+           "decode_step", "decode_steps", "cache_specs", "gemm_workload",
+           "model_flops", "plan_layer_names", "kv_layer_names",
+           "kv_cache_workload", "scan_format_groups", "regroup_layers"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -698,6 +698,106 @@ def decode_step(cfg: TransformerConfig, params, cache, tokens: jax.Array,
             else jnp.concatenate(c2_parts, axis=0))
     logits = _head(cfg, params, x, policy, serve, impl)
     return logits[:, 0, :], (c1_s, c2_s)
+
+
+def decode_steps(cfg: TransformerConfig, params, cache, tokens: jax.Array,
+                 length: jax.Array, policy: PrecisionPolicy,
+                 *, impl: str = "xla", mode: str = "serve",
+                 attn_impl: str = "xla"):
+    """T new tokens against the cache in ONE forward — the speculative
+    verify step.  tokens (B, T) are appended at positions
+    ``length .. length+T-1``; returns (logits (B, T, V), new cache)
+    where logits[:, t] is the next-token row after tokens[:, :t+1].
+
+    Bit-identity contract (tests/test_specdec.py): the T logits rows
+    equal T sequential ``decode_step`` calls over the same tokens —
+    weight matmuls accumulate in exact int32 (mpmm), norms/rotary/
+    activation quantization are per-row, KV block packing equals
+    per-token packing, and attention runs the identical single-query
+    routine per position with rows beyond each query's valid length
+    contributing an exact zero.
+    """
+    serve = mode == "serve"
+    params = regroup_layers(cfg, params, policy)
+    kv_info = _kv_formats(cfg, policy)
+    kv_store = kv_info[0] if kv_info is not None else "packed"
+    b, t_new = tokens.shape
+    x = _embed(cfg, params, tokens, serve)
+    lv = jnp.asarray(length)  # length may be a static int (flash verify)
+    pos = jnp.broadcast_to(lv[None, None] if lv.ndim == 0 else lv,
+                           (b, 1)) + jnp.arange(t_new)[None, :]
+    rope_dim = cfg.mla.qk_rope if cfg.mla is not None else cfg.hd
+    sin, cos = nnl.rotary_cache(pos, rope_dim, cfg.rope_base)
+
+    def one_layer(x, lp, c, dense_mlp=False, lname="", fmts=None):
+        _, napply = cfg.norm_fns
+        h = napply(lp["ln1"], x)
+        if cfg.mla is not None:
+            o, c = attn.mla_verify(
+                lp["attn"], h, c, length, policy,
+                n_heads=cfg.n_heads, kv_lora=cfg.mla.kv_lora,
+                qk_nope=cfg.mla.qk_nope, qk_rope=cfg.mla.qk_rope,
+                v_head=cfg.mla.v_head, sin=sin, cos=cos, serve=serve,
+                impl=impl, lname=lname)
+        else:
+            o, c = attn.gqa_verify(
+                lp["attn"], h, c, length, policy,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+                sin=sin, cos=cos, serve=serve, impl=impl,
+                attn_impl=attn_impl, lname=lname,
+                kv_fmts=fmts, kv_store=kv_store)
+        x = x + o
+        h = napply(lp["ln2"], x)
+        x = x + _apply_mlp(cfg, lp, h, policy, serve, impl, dense_mlp, lname)
+        return x, c
+
+    if kv_info is not None and kv_store == "packed":
+        new_cache = {}
+        for j, (lname, lp_group, start, n) in enumerate(
+                _layer_groups(cfg, params["layers"], policy)):
+            fmts_g = kv_info[1][start]
+
+            def body(carry, xs, _lname=lname, _fmts=fmts_g):
+                lp, cg = xs
+                y, cg = one_layer(carry, lp, cg, lname=_lname, fmts=_fmts)
+                return y, cg
+
+            x, cg_new = jax.lax.scan(
+                body, x, (lp_group, cache[f"g{j}"]),
+                unroll=True if cfg.scan_unroll else 1)
+            new_cache[f"g{j}"] = cg_new
+        return _head(cfg, params, x, policy, serve, impl), new_cache
+
+    c1_all, c2_all = cache
+    nd = cfg.dense_first_n
+    c1_parts, c2_parts = [], []
+    for i in range(nd):
+        x, (c1_i, c2_i) = one_layer(x, params[f"dense_layer_{i}"],
+                                    (c1_all[i], c2_all[i]), dense_mlp=True,
+                                    lname=f"l{i}.")
+        c1_parts.append(c1_i[None])
+        c2_parts.append(c2_i[None])
+    for lname, lp_group, start, n in _layer_groups(cfg, params["layers"],
+                                                   policy):
+        fmts_g = kv_info[1][start] if kv_info is not None else None
+
+        def body(carry, xs, _lname=lname, _fmts=fmts_g):
+            lp, c1, c2 = xs
+            y, (c1, c2) = one_layer(carry, lp, (c1, c2), lname=_lname,
+                                    fmts=_fmts)
+            return y, (c1, c2)
+
+        x, (c1_g, c2_g) = jax.lax.scan(
+            body, x, (lp_group, c1_all[start:start + n],
+                      c2_all[start:start + n]),
+            unroll=True if cfg.scan_unroll else 1)
+        c1_parts.append(c1_g)
+        c2_parts.append(c2_g)
+    c1_s = (c1_parts[0] if len(c1_parts) == 1
+            else jnp.concatenate(c1_parts, axis=0))
+    c2_s = (c2_parts[0] if len(c2_parts) == 1
+            else jnp.concatenate(c2_parts, axis=0))
+    return _head(cfg, params, x, policy, serve, impl), (c1_s, c2_s)
 
 
 # --------------------------------------------------------------------------

@@ -23,8 +23,8 @@ from repro.nn import layers, quantized
 from repro.nn.param import ParamSpec
 
 __all__ = [
-    "gqa_spec", "gqa_serve_spec", "gqa_prefill", "gqa_decode",
-    "mla_spec", "mla_serve_spec", "mla_prefill", "mla_decode",
+    "gqa_spec", "gqa_serve_spec", "gqa_prefill", "gqa_decode", "gqa_verify",
+    "mla_spec", "mla_serve_spec", "mla_prefill", "mla_decode", "mla_verify",
     "chunked_attention", "decode_attention", "decode_attention_streamed",
 ]
 
@@ -465,6 +465,101 @@ def gqa_decode(
     return _proj(p["o"], o, policy, serve, nm["o"], **kw), (k_cache, v_cache)
 
 
+def gqa_verify(
+    p: Dict, x: jax.Array, cache, length, policy: PrecisionPolicy,
+    *, n_heads: int, n_kv: int, head_dim: int,
+    sin: jax.Array, cos: jax.Array, window: Optional[int] = None,
+    serve: bool = True, rope: bool = True, impl: str = "xla",
+    attn_impl: str = "xla",
+    lname: str = "", names: Optional[Dict[str, str]] = None,
+    kv_fmts=None, kv_store: str = "packed",
+):
+    """T-token cache extension — the verify step of speculative decode.
+
+    x: (B, T, D); the T candidate tokens land at cache positions
+    ``length .. length+T-1`` in ONE call: a packed cache takes a single
+    block ``dynamic_update_slice`` of the digit planes (``pack_kv`` over
+    a T-block is bit-identical to T per-token packs — the grid is per
+    (token, head)), then every query t runs the SAME single-query
+    attention routine the one-token decode uses, at valid length
+    ``length + 1 + t``.  Cache rows at or beyond a query's valid length
+    contribute an exact f32 zero (additive NEG_INF underflows exp), so
+    the T logits rows are bit-identical to T sequential ``gqa_decode``
+    steps over the same tokens — whatever the rejected rows hold.
+
+    ``attn_impl='flash'`` routes a packed single-device cache through
+    ``flash_attention_packed`` with ``q_offset=length`` (the prefill
+    kernel's cross-chunk causality) — a fast path that needs a STATIC
+    length and is numerically (not bitwise) equivalent; callers that
+    gate on bit-identity keep the default per-query streamed path.
+    """
+    b, t_new = x.shape[0], x.shape[1]
+    kw = {"impl": impl} if serve else {}
+    nm = _gqa_names(lname, names)
+    q = _proj(p["q"], x, policy, serve, nm["q"], **kw).reshape(
+        b, t_new, n_heads, head_dim)
+    k = _proj(p["k"], x, policy, serve, nm["k"], **kw).reshape(
+        b, t_new, n_kv, head_dim)
+    v = _proj(p["v"], x, policy, serve, nm["v"], **kw).reshape(
+        b, t_new, n_kv, head_dim)
+    if rope:
+        q = layers.apply_rotary(q, sin, cos)
+        k = layers.apply_rotary(k, sin, cos)
+    fmt_k, fmt_v = kv_fmts if kv_fmts is not None else (None, None)
+    if kv_fmts is not None and kv_store == "packed":
+        ck, cv = cache["k"], cache["v"]
+        if fmt_k is not None:
+            ck = _append_packed(ck, kvcache.pack_kv(k, fmt_k), length)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, length, 0, 0))
+        if fmt_v is not None:
+            cv = _append_packed(cv, kvcache.pack_kv(v, fmt_v), length)
+        else:
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, length, 0, 0))
+        use_flash = (serve and attn_impl == "flash"
+                     and isinstance(length, int)
+                     and fmt_k is not None and fmt_v is not None
+                     and getattr(part._local, "mesh", None) is None)
+        if use_flash:
+            from repro.kernels.flashattn import ops as flash_ops
+            o = flash_ops.flash_attention_packed(
+                q, ck, cv, fmt_k, fmt_v, causal=True, window=window,
+                q_offset=length)
+        else:
+            o = jnp.concatenate(
+                [decode_attention_streamed(q[:, t:t + 1], ck, cv,
+                                           fmt_k, fmt_v, length + 1 + t,
+                                           window=window)
+                 for t in range(t_new)], axis=1)
+        o = o.reshape(b, t_new, n_heads * head_dim)
+        return _proj(p["o"], o, policy, serve, nm["o"], **kw), \
+            {"k": ck, "v": cv}
+    if fmt_k is not None:
+        k = kvcache.qdq_kv(k, fmt_k)  # qdq store: grid values, bf16 layout
+    if fmt_v is not None:
+        v = kvcache.qdq_kv(v, fmt_v)
+    k_cache, v_cache = cache
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, length, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, length, 0, 0))
+    if kv_fmts is not None:
+        o = jnp.concatenate(
+            [decode_attention_streamed(q[:, t:t + 1], k_cache, v_cache,
+                                       None, None, length + 1 + t,
+                                       window=window)
+             for t in range(t_new)], axis=1)
+    else:
+        o = jnp.concatenate(
+            [decode_attention(q[:, t:t + 1], k_cache, v_cache,
+                              length + 1 + t, window=window)
+             for t in range(t_new)], axis=1)
+    o = o.reshape(b, t_new, n_heads * head_dim)
+    return _proj(p["o"], o, policy, serve, nm["o"], **kw), (k_cache, v_cache)
+
+
 # ---------------------------------------------------------------------------
 # MLA — multi-head latent attention (DeepSeek-V2).  KV cache = compressed
 # latent c_kv (rank r) + shared rope key: the cache-compression technique.
@@ -576,3 +671,41 @@ def mla_decode(p, x, cache, length, policy, *, n_heads, kv_lora, qk_nope,
                          softmax_scale=(qk_nope + qk_rope) ** -0.5)
     o = o.reshape(b, 1, n_heads * v_head)
     return _proj(p["o"], o, policy, serve, lname + "o", **kw), (c_cache, kr_cache)
+
+
+def mla_verify(p, x, cache, length, policy, *, n_heads, kv_lora, qk_nope,
+               qk_rope, v_head, sin, cos, serve=True, impl="xla", lname=""):
+    """T-token latent-cache extension (the MLA analogue of gqa_verify).
+
+    Latents for all T tokens land in one block write; the cached stack
+    is expanded to K/V once (the expansion is per-position, so masked
+    rows can hold anything), then each query t attends at valid length
+    ``length + 1 + t`` with the same single-query routine ``mla_decode``
+    uses — bit-identical to T sequential decode steps.
+    """
+    b, t_new = x.shape[0], x.shape[1]
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(
+        p, x, policy, serve, n_heads, qk_nope, qk_rope, kv_lora, sin, cos,
+        impl, lname)
+    c_cache, kr_cache = cache
+    c_cache = jax.lax.dynamic_update_slice(
+        c_cache, c_new.astype(c_cache.dtype), (0, length, 0))
+    kr_cache = jax.lax.dynamic_update_slice(
+        kr_cache, kr_new.astype(kr_cache.dtype), (0, length, 0))
+    smax = c_cache.shape[1]
+    kw = {"impl": impl} if serve else {}
+    k_nope = _proj(p["uk"], c_cache, policy, serve, lname + "uk",
+                   **kw).reshape(b, smax, n_heads, qk_nope)
+    v = _proj(p["uv"], c_cache, policy, serve, lname + "uv",
+              **kw).reshape(b, smax, n_heads, v_head)
+    k_rope_b = jnp.broadcast_to(kr_cache[:, :, None, :],
+                                (b, smax, n_heads, qk_rope))
+    k = jnp.concatenate([k_nope, k_rope_b.astype(k_nope.dtype)], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope.astype(q_nope.dtype)], axis=-1)
+    o = jnp.concatenate(
+        [decode_attention(q[:, t:t + 1], k, v, length + 1 + t,
+                          softmax_scale=(qk_nope + qk_rope) ** -0.5)
+         for t in range(t_new)], axis=1)
+    o = o.reshape(b, t_new, n_heads * v_head)
+    return _proj(p["o"], o, policy, serve, lname + "o", **kw), \
+        (c_cache, kr_cache)

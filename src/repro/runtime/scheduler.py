@@ -412,6 +412,11 @@ class _SchedulerBase:
             "resident_cache_bytes": 0.0,
             "resident_cache_fp_bytes": 0.0,
             "kv_cache_compression": 1.0,
+            # speculative decode (live only on a spec-decoding
+            # GenerateScheduler; zero-filled on every other path)
+            "accept_rate": 0.0,
+            "drafted_tokens": 0.0,
+            "accepted_tokens": 0.0,
         }
 
 
@@ -584,7 +589,12 @@ class GenerateScheduler(_SchedulerBase):
             raise NotImplementedError(
                 "GenerateScheduler does not carry per-request audio frames")
         self.gen = gen
-        self.api = gen.api
+        # A SpeculativeGenerator carries two packed views of one
+        # checkpoint; slots then hold a {"verify","draft"} cache pair and
+        # decode advances by spec cycles instead of single steps.
+        self._speculative = bool(getattr(gen, "is_speculative", False))
+        self.spec_k = int(gen.k) if self._speculative else 0
+        self.api = gen.api_verify if self._speculative else gen.api
         self.n_slots = int(slots)
         # A meshed Generator jits with explicit shardings: batch shapes
         # must split evenly over 'data', the cache length over 'model'.
@@ -597,7 +607,14 @@ class GenerateScheduler(_SchedulerBase):
         self.prefill_buckets = rnd(prefill_buckets)
         self.decode_buckets = rnd(decode_buckets)
         self._slots: List[Optional[_Slot]] = [None] * self.n_slots
-        self._batch_axes = _cache_batch_axes(self.api, self.max_len)
+        # The axis probe runs per plan point: a speculative slot's cache
+        # is the dict pair and tree.map carries the mirrored structure.
+        if self._speculative:
+            self._batch_axes = {
+                "verify": _cache_batch_axes(gen.api_verify, self.max_len),
+                "draft": _cache_batch_axes(gen.api_draft, self.max_len)}
+        else:
+            self._batch_axes = _cache_batch_axes(self.api, self.max_len)
         # Resident-cache accounting (stats()): bytes of one slot's cache
         # under the serving plan (packed digit planes for kv plans) and
         # under the same plan with the fp16 cache — the quotient is the
@@ -608,12 +625,13 @@ class GenerateScheduler(_SchedulerBase):
             return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
                        for l in jax.tree.leaves(specs))
 
-        self.cache_bytes_per_slot = tree_bytes(
-            self.api.cache_specs(1, self.max_len))
-        fp_api = dataclasses.replace(self.api,
-                                     policy=strip_kv(self.api.policy))
-        self.cache_fp_bytes_per_slot = tree_bytes(
-            fp_api.cache_specs(1, self.max_len))
+        point_apis = ([gen.api_verify, gen.api_draft] if self._speculative
+                      else [self.api])
+        self.cache_bytes_per_slot = sum(
+            tree_bytes(a.cache_specs(1, self.max_len)) for a in point_apis)
+        self.cache_fp_bytes_per_slot = sum(
+            tree_bytes(dataclasses.replace(a, policy=strip_kv(a.policy))
+                       .cache_specs(1, self.max_len)) for a in point_apis)
 
     # --- slot cache plumbing (family-agnostic via the axis probe) ----------
 
@@ -628,7 +646,13 @@ class GenerateScheduler(_SchedulerBase):
             return jnp.take(m, idx, axis=ax) if pad_to != g else m
 
         merged = jax.tree.map(leaf, self._batch_axes, *caches)
-        cache_sh = getattr(self.gen, "_cache_sh", None)
+        if self._speculative:
+            sh_v = getattr(self.gen.gen_verify, "_cache_sh", None)
+            sh_d = getattr(self.gen.gen_draft, "_cache_sh", None)
+            cache_sh = ({"verify": sh_v, "draft": sh_d}
+                        if sh_v is not None and sh_d is not None else None)
+        else:
+            cache_sh = getattr(self.gen, "_cache_sh", None)
         if cache_sh is not None:
             # the meshed decode jit pins its cache in_shardings; slicing/
             # concat left the merged tree on whatever layout jax chose
@@ -690,10 +714,22 @@ class GenerateScheduler(_SchedulerBase):
         for t in group:
             t.t_admit = now
         self._log("prefill", group)
-        logits, pre_cache = self.gen._prefill(self.gen.params,
-                                              {"tokens": jnp.asarray(toks)})
-        cache = self.gen._grow_cache(pre_cache, bucket, plen, self.max_len)
-        first = np.asarray(jnp.argmax(logits, -1), np.int32)
+        if self._speculative:
+            # Prefill BOTH packed views of the checkpoint; the first
+            # emitted token comes from the verify plan (the shipped one).
+            first_tok, pre = self.gen.prefill_slots(jnp.asarray(toks))
+            cache = {
+                "verify": self.gen.gen_verify._grow_cache(
+                    pre["verify"], bucket, plen, self.max_len),
+                "draft": self.gen.gen_draft._grow_cache(
+                    pre["draft"], bucket, plen, self.max_len)}
+            first = np.asarray(first_tok, np.int32)
+        else:
+            logits, pre_cache = self.gen._prefill(
+                self.gen.params, {"tokens": jnp.asarray(toks)})
+            cache = self.gen._grow_cache(pre_cache, bucket, plen,
+                                         self.max_len)
+            first = np.asarray(jnp.argmax(logits, -1), np.int32)
         finished = 0
         for i, t in enumerate(group):
             slot = _Slot(ticket=t, cache=self._extract(cache, i),
@@ -713,9 +749,55 @@ class GenerateScheduler(_SchedulerBase):
         t.result = np.asarray(slot.out, np.int32)
         self._complete(t)
 
+    def _spec_tick(self) -> int:
+        """Advance every in-flight slot one speculative cycle (up to
+        ``spec_k + 1`` tokens); same-position slots share one cycle.
+
+        Acceptance-aware accounting: slot i takes ``min(a_i + 1,
+        remaining_i)`` tokens from the verify argmax rows, so slots in
+        one group diverge in position and regroup on later ticks.  The
+        group's ``k_eff`` is clamped to the smallest remaining budget so
+        no slot's cache is written past its submit-time bound."""
+        groups: Dict[int, List[int]] = collections.defaultdict(list)
+        for i, s in enumerate(self._slots):
+            if s is not None:
+                groups[s.pos].append(i)
+        finished = 0
+        for pos in sorted(groups):
+            idxs = groups[pos]
+            slots = [self._slots[i] for i in idxs]
+            g = len(slots)
+            bucket = next((b for b in self.decode_buckets if b >= g),
+                          self.decode_buckets[-1])
+            if g > bucket:
+                idxs, slots = idxs[:bucket], slots[:bucket]
+                g = bucket
+            cache = self._merge([s.cache for s in slots], bucket)
+            toks = _pad_batch(np.concatenate([s.last_tok for s in slots]),
+                              bucket)
+            k_eff = min(self.spec_k, min(s.remaining for s in slots) - 1)
+            self._log("decode", [s.ticket for s in slots])
+            v_toks, acc, cache = self.gen.spec_cycle(
+                cache, jnp.asarray(toks), pos, k_eff, rows=g)
+            for i, (slot_i, s) in enumerate(zip(idxs, slots)):
+                take = min(int(acc[i]) + 1, s.remaining)
+                s.cache = self._extract(cache, i)
+                s.out.extend(int(x) for x in v_toks[i, :take])
+                s.last_tok = np.asarray(v_toks[i, take - 1],
+                                        np.int32).reshape(1, 1)
+                s.pos += take
+                s.remaining -= take
+                if s.remaining == 0:
+                    self._finish(s)
+                    self._slots[slot_i] = None
+                    finished += 1
+        return finished
+
     def _decode_tick(self) -> int:
         """Advance every in-flight slot one token; same-position slots
         share one decode call (scalar ``length``)."""
+        if self._speculative:
+            return self._spec_tick()
         groups: Dict[int, List[int]] = collections.defaultdict(list)
         for i, s in enumerate(self._slots):
             if s is not None:
@@ -781,6 +863,10 @@ class GenerateScheduler(_SchedulerBase):
         st["kv_cache_compression"] = (
             self.cache_fp_bytes_per_slot / self.cache_bytes_per_slot
             if self.cache_bytes_per_slot else 1.0)
+        if self._speculative:
+            st["accept_rate"] = float(self.gen.accept_rate)
+            st["drafted_tokens"] = float(self.gen.drafted_tokens)
+            st["accepted_tokens"] = float(self.gen.accepted_tokens)
         return st
 
     def run_until_idle(self, max_steps: int = 100_000) -> int:

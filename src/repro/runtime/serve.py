@@ -235,6 +235,14 @@ class Generator:
     batch axis over 'data' (cache kv_seq additionally over 'model' when
     the mesh has one), and the token batch pads up to a multiple of the
     data-axis size.  Outputs are bit-identical to ``mesh=None``.
+
+    ``sample_fn(logits (B, V), key) -> tokens (B,)`` swaps the greedy
+    head for an injectable sampler; ``generate(..., key=...)`` seeds it
+    (default ``PRNGKey(0)``) and splits one subkey per emitted token, so
+    sampled runs replay exactly.  The DEFAULT (``sample_fn=None``) stays
+    pure ``jnp.argmax`` with no key material touched — greedy decode is
+    deterministic and bit-exact, the guarantee every packed-vs-qdq and
+    speculative-decode identity test in this repo is built on.
     """
 
     api: Any
@@ -245,6 +253,7 @@ class Generator:
     mesh: Optional[Mesh] = None
     tracer: Any = None   # telemetry.Tracer; None = the no-op fast path
     metrics: Any = None  # telemetry.MetricsRegistry; None = no-op
+    sample_fn: Any = None  # None = greedy argmax (bit-exact default)
 
     def __post_init__(self):
         if self.plan is not None:
@@ -306,9 +315,18 @@ class Generator:
         self._decode = device_timed(self.tracer, "decode", self._decode,
                                     hist)
 
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        """(B, V) logits -> (B,) token ids through the sampling seam."""
+        if self.sample_fn is None:
+            return jnp.argmax(logits, -1)  # greedy: deterministic, keyless
+        return self.sample_fn(logits, key)
+
     def generate(self, tokens: np.ndarray, n_new: int,
-                 frames: Optional[np.ndarray] = None) -> np.ndarray:
+                 frames: Optional[np.ndarray] = None,
+                 key=None) -> np.ndarray:
         b, s = tokens.shape
+        if self.sample_fn is not None and key is None:
+            key = jax.random.PRNGKey(0)
         n_data = self.mesh.shape.get("data", 1) if self.mesh is not None else 1
         gb = -(-b // n_data) * n_data  # pad batch to an even device split
         tokens = _pad_batch(np.asarray(tokens), gb)
@@ -328,8 +346,11 @@ class Generator:
         cache = self._grow_cache(pre_cache, gb, s, max_len)
         if self._cache_sh is not None:
             cache = jax.device_put(cache, self._cache_sh)
-        out = [np.asarray(jnp.argmax(logits, -1))]
-        tok = jnp.argmax(logits, -1)[:, None]
+        step_key = None
+        if self.sample_fn is not None:
+            key, step_key = jax.random.split(key)
+        tok = self._sample(logits, step_key)[:, None]
+        out = [np.asarray(tok[:, 0])]
         length = jnp.asarray(s, jnp.int32)
         for i in range(n_new - 1):
             if self._tok_sh is not None:
@@ -338,7 +359,9 @@ class Generator:
                 # decode jit was compiled for.
                 tok = jax.device_put(tok, self._tok_sh)
             logits, cache = self._decode(self.params, cache, tok, length + i)
-            tok = jnp.argmax(logits, -1)[:, None]
+            if self.sample_fn is not None:
+                key, step_key = jax.random.split(key)
+            tok = self._sample(logits, step_key)[:, None]
             out.append(np.asarray(tok[:, 0]))
         return np.stack(out, axis=1)[:b]
 

@@ -1,0 +1,277 @@
+"""Speculative decoding from ONE checkpoint: low-bit draft, mixed verify.
+
+The paper's core claim — one set of trained weights serves many
+accuracy/throughput points by re-packing, never retraining — applied to
+autoregressive decode: a uniform low-bit repack (e.g. w2/kv2) of the
+SAME float checkpoint drafts k greedy tokens on its own packed KV
+cache, and the shipped mixed plan verifies all k+1 positions in one
+batched forward (``models.transformer.decode_steps``).  The longest
+prefix of draft tokens matching the verify argmax is accepted, both
+caches roll back rejected positions, and decoding continues from the
+verify model's correction token.
+
+Why the output is BIT-IDENTICAL to verify-plan-only greedy decoding:
+accepted tokens are, by the acceptance rule, exactly the verify
+argmaxes — so every emitted token is a verify-argmax row, and the
+batched verify logits are bit-identical to sequential single-token
+decode (exact int32 mpmm accumulation; per-row norms/rotary; per-query
+attention with masked rows contributing an exact f32 zero — see
+``decode_steps``).  The draft influences WHICH positions get verified
+per cycle (throughput), never the emitted values (correctness).
+
+Rollback is logical truncation: every cache write is a
+``dynamic_update_slice`` at the logical length and every attention mask
+is ``pos < length``, so rejected positions are simply never attended
+and the next cycle overwrites them in place.  For packed digit-plane
+caches this truncation is bit-identical to the qdq oracle
+(tests/test_specdec.py asserts it, single-device and 8-device meshed).
+
+Where the speed comes from: the k draft steps run as ONE fused
+``lax.scan`` (one dispatch per cycle instead of k), the verify step
+reads the mixed-plan weights once for all k+1 rows, and the draft
+point's packed cache streams a fraction of the verify cache's bytes —
+so a cycle emitting a+1 tokens costs ~2 dispatches instead of a+1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.launch import steps as steps_lib
+from repro.runtime.serve import Generator, _pad_batch, pack_for_serving
+from repro.runtime.telemetry import as_metrics, as_tracer, device_timed
+
+__all__ = ["SpeculativeGenerator"]
+
+
+def _leading_matches(drafts: np.ndarray, targets: np.ndarray) -> np.ndarray:
+    """Per-row count of leading positions where drafts == targets."""
+    if drafts.shape[1] == 0:
+        return np.zeros(drafts.shape[0], np.int64)
+    miss = drafts != targets
+    any_miss = miss.any(axis=1)
+    first = miss.argmax(axis=1)
+    return np.where(any_miss, first, drafts.shape[1])
+
+
+@dataclasses.dataclass
+class SpeculativeGenerator:
+    """Two packed views of one float checkpoint: draft k, verify k+1.
+
+    ``train_params`` is the ONE float checkpoint; ``draft_plan`` and
+    ``verify_plan`` (default: ``api.policy``) are the two deployment
+    points, packed ``build_frontier``-style — weights stored once,
+    ``pack_for_serving`` re-packs per point (``regroup_layers`` +
+    ``pack_tree``; no retraining, no second model).
+
+    ``generate`` matches ``Generator.generate``'s contract (greedy,
+    batched, mesh-aware) and emits token-for-token bit-identical output
+    to a verify-plan-only ``Generator`` — at higher tokens/s when the
+    draft agrees with the verify plan often enough.
+
+    Telemetry: one ``specdec.accept`` span per cycle (drafted/accepted
+    counts), a ``specdec.rollback`` instant when positions are rejected,
+    and the PR 8 registry metrics ``repro_specdec_drafted_total`` /
+    ``repro_specdec_accepted_total`` / ``repro_specdec_accept_rate``.
+    """
+
+    api: Any
+    train_params: Any
+    draft_plan: Any
+    k: int = 4
+    verify_plan: Any = None
+    max_len: int = 64
+    mode: str = "serve"
+    mesh: Optional[Mesh] = None
+    tracer: Any = None
+    metrics: Any = None
+
+    is_speculative = True  # GenerateScheduler's dispatch gate
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec-decode k must be >= 1, got {self.k}")
+        self.tracer = as_tracer(self.tracer)
+        self.metrics = as_metrics(self.metrics)
+        api_v = (dataclasses.replace(self.api, policy=self.verify_plan)
+                 if self.verify_plan is not None else self.api)
+        api_d = dataclasses.replace(self.api, policy=self.draft_plan)
+        self.api_verify, self.api_draft = api_v, api_d
+        # One weight store, two packed views (build_frontier-style).
+        packed_v = pack_for_serving(api_v, self.train_params, mesh=self.mesh)
+        packed_d = pack_for_serving(api_d, self.train_params, mesh=self.mesh)
+        self.gen_verify = Generator(api_v, packed_v, max_len=self.max_len,
+                                    mode=self.mode, mesh=self.mesh,
+                                    tracer=self.tracer, metrics=self.metrics)
+        self.gen_draft = Generator(api_d, packed_d, max_len=self.max_len,
+                                   mode=self.mode, mesh=self.mesh,
+                                   tracer=self.tracer, metrics=self.metrics)
+        self._draft_fns: Dict[int, Any] = {}
+        hist = self.metrics.histogram("repro_device_time_seconds")
+        verify_fn = steps_lib.make_verify_fn(api_v, mode=self.mode)
+        self._verify = device_timed(self.tracer, "specdec.verify",
+                                    jax.jit(verify_fn), hist)
+        self._m_drafted = self.metrics.counter("repro_specdec_drafted_total")
+        self._m_accepted = self.metrics.counter("repro_specdec_accepted_total")
+        self._m_rate = self.metrics.gauge("repro_specdec_accept_rate")
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+
+    # -- draft ---------------------------------------------------------------
+
+    def _draft_fn(self, n_steps: int):
+        """Fused greedy draft: ``n_steps`` single-token decode steps in
+        one ``lax.scan`` (one dispatch per cycle).  Step i consumes
+        tok_i, writes its K/V at ``length + i`` and emits tok_{i+1} by
+        argmax — so the cache ends valid through ``length + n_steps``
+        exclusive and the LAST proposal's K/V is already written,
+        leaving no gap for the fully-accepted next cycle."""
+        if n_steps not in self._draft_fns:
+            decode = steps_lib.make_decode_fn(self.api_draft, mode=self.mode)
+
+            def draft_fn(params, cache, tok, length):
+                def body(carry, i):
+                    cache, tok = carry
+                    logits, cache = decode(params, cache, tok, length + i)
+                    nxt = jnp.argmax(logits, -1)
+                    return (cache, nxt[:, None]), nxt
+
+                (cache, _), toks = jax.lax.scan(
+                    body, (cache, tok), jnp.arange(n_steps))
+                return jnp.swapaxes(toks, 0, 1), cache
+
+            hist = self.metrics.histogram("repro_device_time_seconds")
+            self._draft_fns[n_steps] = device_timed(
+                self.tracer, "specdec.draft", jax.jit(draft_fn), hist)
+        return self._draft_fns[n_steps]
+
+    # -- accounting ----------------------------------------------------------
+
+    def _account(self, drafted: int, accepted: int, rejected: int,
+                 t0: float, t1: float) -> None:
+        self.drafted_tokens += drafted
+        self.accepted_tokens += accepted
+        self._m_drafted.inc(drafted)
+        self._m_accepted.inc(accepted)
+        if self.drafted_tokens:
+            self._m_rate.set(self.accepted_tokens / self.drafted_tokens)
+        tr = self.tracer
+        if tr.enabled:
+            tr.span_at("specdec.accept", t0, t1, cat="specdec",
+                       args={"drafted": drafted, "accepted": accepted,
+                             "rejected": rejected})
+            if rejected:
+                tr.instant("specdec.rollback", cat="specdec",
+                           args={"rejected": rejected})
+
+    @property
+    def accept_rate(self) -> float:
+        return (self.accepted_tokens / self.drafted_tokens
+                if self.drafted_tokens else 0.0)
+
+    # -- generate ------------------------------------------------------------
+
+    def generate(self, tokens: np.ndarray, n_new: int) -> np.ndarray:
+        """Greedy speculative generate; output == verify-plan-only
+        ``Generator.generate`` bit-for-bit."""
+        gv, gd = self.gen_verify, self.gen_draft
+        b, s = tokens.shape
+        n_data = self.mesh.shape.get("data", 1) if self.mesh is not None else 1
+        gb = -(-b // n_data) * n_data
+        toks = jnp.asarray(_pad_batch(np.asarray(tokens), gb))
+        logits_v, pre_v = gv._prefill(gv.params, {"tokens": toks})
+        _, pre_d = gd._prefill(gd.params, {"tokens": toks})
+        n_model = (self.mesh.shape.get("model", 1)
+                   if self.mesh is not None else 1)
+        cap = -(-(s + n_new) // n_model) * n_model
+        cache_v = gv._grow_cache(pre_v, gb, s, cap)
+        cache_d = gd._grow_cache(pre_d, gb, s, cap)
+        if gv._cache_sh is not None:
+            cache_v = jax.device_put(cache_v, gv._cache_sh)
+        if gd._cache_sh is not None:
+            cache_d = jax.device_put(cache_d, gd._cache_sh)
+
+        tok = jnp.argmax(logits_v, -1)  # (B,): verify owns every emission
+        out = [np.asarray(tok)]
+        pos = s  # tokens whose K/V both caches hold; `tok` sits at `pos`
+        while len(out) < n_new:
+            remaining = n_new - len(out)
+            k_eff = min(self.k, remaining - 1)
+            t0 = self.tracer.clock() if self.tracer.enabled else 0.0
+            if k_eff > 0:
+                # k_eff+1 fused steps: k_eff proposals + the last
+                # proposal's own K/V write (no cache gap on full accept).
+                props, cache_d = self._draft_fn(k_eff + 1)(
+                    gd.params, cache_d, tok[:, None],
+                    jnp.asarray(pos, jnp.int32))
+                props = props[:, :k_eff]
+                vin = jnp.concatenate([tok[:, None], props], axis=1)
+            else:
+                props = jnp.zeros((gb, 0), tok.dtype)
+                vin = tok[:, None]
+            logits, cache_v = self._verify(
+                gv.params, cache_v, vin, jnp.asarray(pos, jnp.int32))
+            v_toks = jnp.argmax(logits, -1)  # (B, k_eff+1)
+            a = _leading_matches(np.asarray(props), np.asarray(v_toks)[:, :k_eff])
+            e = min(int(a.min()) + 1, remaining)
+            # accepted drafts == verify argmaxes, so emissions are always
+            # verify rows — the bit-identity-by-construction invariant.
+            emit = np.asarray(v_toks)[:, :e]
+            out.extend(emit[:, j] for j in range(e))
+            tok = jnp.asarray(emit[:, e - 1])
+            pos += e
+            t1 = self.tracer.clock() if self.tracer.enabled else 0.0
+            self._account(drafted=k_eff * b, accepted=int(a[:b].sum()),
+                          rejected=int((k_eff - a[:b]).sum()), t0=t0, t1=t1)
+        return np.stack(out, axis=1)[:b]
+
+    # -- scheduler seams (GenerateScheduler drives these per slot group) ----
+
+    def prefill_slots(self, toks: jnp.ndarray):
+        """(B, S) prompt block -> (first tokens (B,), per-point caches).
+
+        Caches come back prefill-sized; the scheduler grows/extracts them
+        per slot with ``cache_specs``-shaped buffers for BOTH points.
+        """
+        gv, gd = self.gen_verify, self.gen_draft
+        logits_v, pre_v = gv._prefill(gv.params, {"tokens": toks})
+        _, pre_d = gd._prefill(gd.params, {"tokens": toks})
+        return jnp.argmax(logits_v, -1), {"verify": pre_v, "draft": pre_d}
+
+    def spec_cycle(self, caches, tok: jnp.ndarray, pos: int, k_eff: int,
+                   rows: Optional[int] = None):
+        """One draft+verify cycle over a same-position slot group.
+
+        caches: ``{"verify": ..., "draft": ...}`` batched over the
+        group's slots; tok (B, 1); pos = tokens resident in both caches;
+        rows = real (non-padded) rows to count in acceptance stats.
+        Returns (verify argmax rows (B, k_eff+1) np, per-row accept
+        counts (B,) np, new caches).  Rollback is the caller keeping its
+        per-slot logical position at ``pos + accepted_i + 1`` — rejected
+        cache rows are never attended and get overwritten in place.
+        """
+        cache_v, cache_d = caches["verify"], caches["draft"]
+        gd, gv = self.gen_draft, self.gen_verify
+        t0 = self.tracer.clock() if self.tracer.enabled else 0.0
+        if k_eff > 0:
+            props, cache_d = self._draft_fn(k_eff + 1)(
+                gd.params, cache_d, tok, jnp.asarray(pos, jnp.int32))
+            props = props[:, :k_eff]
+            vin = jnp.concatenate([tok, props], axis=1)
+        else:
+            props = jnp.zeros((tok.shape[0], 0), tok.dtype)
+            vin = tok
+        logits, cache_v = self._verify(
+            gv.params, cache_v, vin, jnp.asarray(pos, jnp.int32))
+        v_toks = np.asarray(jnp.argmax(logits, -1))
+        a = _leading_matches(np.asarray(props), v_toks[:, :k_eff])
+        b = tok.shape[0] if rows is None else int(rows)
+        t1 = self.tracer.clock() if self.tracer.enabled else 0.0
+        self._account(drafted=k_eff * b, accepted=int(a[:b].sum()),
+                      rejected=int((k_eff - a[:b]).sum()), t0=t0, t1=t1)
+        return v_toks, a, {"verify": cache_v, "draft": cache_d}

@@ -484,6 +484,9 @@ GOLDEN_METRICS = frozenset({
     "repro_faults_injected_total",
     "repro_dropped_events_total",
     "repro_dropped_tickets_total",
+    "repro_specdec_drafted_total",
+    "repro_specdec_accepted_total",
+    "repro_specdec_accept_rate",
 })
 
 _GOLDEN_KINDS = {
@@ -492,6 +495,7 @@ _GOLDEN_KINDS = {
     "repro_device_time_seconds": "histogram",
     "repro_queue_depth": "gauge",
     "repro_frontier_level": "gauge",
+    "repro_specdec_accept_rate": "gauge",
 }
 
 

@@ -1,0 +1,316 @@
+"""Speculative decoding from one checkpoint (runtime/specdec.py).
+
+The contract under test, in order of importance:
+
+  * greedy OUTPUT bit-identity: a ``SpeculativeGenerator`` (low-bit
+    draft point + mixed verify point, both packed from ONE float
+    checkpoint) emits token-for-token exactly what a verify-plan-only
+    ``Generator`` emits — speculation changes throughput, never values;
+  * rollback bit-identity: after rejected positions are logically
+    truncated (never attended, overwritten in place), the packed
+    digit-plane KV cache still decodes bit-identically to the qdq
+    oracle — single device AND 8-device meshed;
+  * ``decode_steps`` (the batched k+1-token verify forward) is
+    bit-identical to sequential ``decode_step`` calls, cache included;
+  * ``regroup_layers`` round-trips between plan points are byte-exact
+    (the one-weight-store re-pack the whole design leans on);
+  * the ``GenerateScheduler`` speculative path (per-slot draft state,
+    acceptance-aware accounting) completes the same results as the
+    non-speculative scheduler;
+  * the ``Generator.sample_fn`` seam defaults to greedy argmax.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.plan import KVCachePlan, LayerPlan, PrecisionPlan
+from repro.launch.mesh import make_serve_mesh
+from repro.models import transformer
+from repro.runtime.scheduler import GenerateScheduler
+from repro.runtime.serve import Generator, pack_for_serving
+from repro.runtime.specdec import SpeculativeGenerator, _leading_matches
+
+
+def mixed_plan(store: str = "packed") -> PrecisionPlan:
+    """Depth- and tensor-heterogeneous verify plan: >= 2 scan-group
+    splits on the reduced granite stack plus mixed KV word lengths."""
+    return PrecisionPlan(layers=(
+        ("q", LayerPlan(w_bits=4)),
+        ("k", LayerPlan(w_bits=8, kv_bits=8)),
+        ("l1.k", LayerPlan(w_bits=8, kv_bits=2)),
+        ("l1.mlp", LayerPlan(w_bits=2, k=2)),
+        ("v", LayerPlan(w_bits=8, kv_bits=4)),
+    ), kv=KVCachePlan(k=4, store=store), name=f"spec-mixed-{store}")
+
+
+def draft_plan(store: str = "packed") -> PrecisionPlan:
+    return PrecisionPlan(layers=(),
+                         default=LayerPlan(w_bits=2, k=2),
+                         kv=KVCachePlan(bits=2, k=2, store=store),
+                         name=f"spec-draft-{store}")
+
+
+@pytest.fixture(scope="module")
+def granite():
+    api = configs.get("granite-8b", reduced=True)
+    train = api.init_params(jax.random.PRNGKey(0), "train")
+    return api, train
+
+
+def _prompts(api, b=2, s=9, seed=1):
+    return np.asarray(np.random.default_rng(seed).integers(
+        0, api.cfg.vocab, size=(b, s)), np.int32)
+
+
+class TestLeadingMatches:
+    def test_rows(self):
+        d = np.array([[1, 2, 3], [4, 9, 9], [7, 7, 7]])
+        t = np.array([[1, 2, 0], [4, 9, 1], [7, 7, 7]])
+        assert _leading_matches(d, t).tolist() == [2, 2, 3]
+
+    def test_empty_k(self):
+        assert _leading_matches(np.zeros((3, 0)), np.zeros((3, 0))).tolist() \
+            == [0, 0, 0]
+
+
+class TestDecodeSteps:
+    """The batched verify forward == sequential single-token decode."""
+
+    def test_bit_identical_logits_and_cache(self, granite):
+        api, train = granite
+        api_v = dataclasses.replace(api, policy=mixed_plan())
+        params = pack_for_serving(api_v, train)
+        toks = jnp.asarray(_prompts(api, b=2, s=6))
+        _, cache = api_v.prefill(params, toks, mode="serve")
+        gen = Generator(api_v, params, max_len=24)
+        cache = gen._grow_cache(cache, 2, 6, 24)
+        new = jnp.asarray(_prompts(api, b=2, s=4, seed=5))
+
+        seq_cache = cache
+        seq_logits = []
+        for t in range(4):
+            lg, seq_cache = api_v.decode_step(
+                params, seq_cache, new[:, t:t + 1], jnp.asarray(6 + t))
+            seq_logits.append(lg[:, None])  # decode_step emits (B, V)
+        seq_logits = jnp.concatenate(seq_logits, axis=1)
+
+        bat_logits, bat_cache = api_v.decode_steps(
+            params, cache, new, jnp.asarray(6))
+        assert (np.asarray(bat_logits) == np.asarray(seq_logits)).all()
+        for a, b in zip(jax.tree.leaves(bat_cache),
+                        jax.tree.leaves(seq_cache)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+
+class TestSpeculativeGenerate:
+    def test_output_bit_identical_to_verify_only(self, granite):
+        api, train = granite
+        api_v = dataclasses.replace(api, policy=mixed_plan())
+        ref = Generator(api_v, pack_for_serving(api_v, train), max_len=32)
+        want = np.asarray(ref.generate(_prompts(api), 10))
+        for k in (1, 8):
+            sg = SpeculativeGenerator(
+                api=api, train_params=train, draft_plan=draft_plan(),
+                verify_plan=mixed_plan(), k=k, max_len=32)
+            got = np.asarray(sg.generate(_prompts(api), 10))
+            assert (got == want).all(), f"diverged at k={k}"
+
+    def test_acceptance_accounting(self, granite):
+        api, train = granite
+        sg = SpeculativeGenerator(
+            api=api, train_params=train, draft_plan=draft_plan(),
+            verify_plan=mixed_plan(), k=4, max_len=32)
+        sg.generate(_prompts(api), 10)
+        assert sg.drafted_tokens > 0
+        assert 0 <= sg.accepted_tokens <= sg.drafted_tokens
+        assert sg.accept_rate == sg.accepted_tokens / sg.drafted_tokens
+
+    def test_self_draft_accepts_everything(self, granite):
+        """Draft plan == verify plan: every proposal is the verify
+        argmax, so acceptance must be total."""
+        api, train = granite
+        sg = SpeculativeGenerator(
+            api=api, train_params=train, draft_plan=mixed_plan(),
+            verify_plan=mixed_plan(), k=4, max_len=32)
+        sg.generate(_prompts(api, b=1), 12)
+        assert sg.accept_rate == 1.0
+
+    def test_rejects_k_below_one(self, granite):
+        api, train = granite
+        with pytest.raises(ValueError, match="spec-decode k"):
+            SpeculativeGenerator(api=api, train_params=train,
+                                 draft_plan=draft_plan(), k=0)
+
+
+class TestRollbackBitIdentity:
+    """Packed digit-plane truncation == the qdq oracle, THROUGH
+    rejection rollbacks: both stores run the same speculative schedule
+    (the draft point shares weights, so accept/reject sequences match)
+    and must emit identical tokens."""
+
+    def test_packed_rollback_matches_qdq_oracle(self, granite):
+        api, train = granite
+        outs = {}
+        for store in ("packed", "qdq"):
+            sg = SpeculativeGenerator(
+                api=api, train_params=train,
+                draft_plan=draft_plan(store),
+                verify_plan=mixed_plan(store), k=4, max_len=48)
+            outs[store] = np.asarray(sg.generate(_prompts(api), 14))
+            assert sg.accepted_tokens < sg.drafted_tokens, \
+                "random-init run must exercise rejection rollback"
+        assert (outs["packed"] == outs["qdq"]).all(), \
+            "packed rollback diverged from the qdq oracle"
+
+    def test_packed_rollback_matches_qdq_oracle_meshed(self, granite,
+                                                      eight_devices):
+        api, train = granite
+        mesh = make_serve_mesh(2, 2)
+        outs = {}
+        for store in ("packed", "qdq"):
+            sg = SpeculativeGenerator(
+                api=api, train_params=train,
+                draft_plan=draft_plan(store),
+                verify_plan=mixed_plan(store), k=3, max_len=48,
+                mesh=mesh)
+            outs[store] = np.asarray(sg.generate(_prompts(api), 12))
+            assert sg.accepted_tokens < sg.drafted_tokens
+        assert (outs["packed"] == outs["qdq"]).all()
+
+    def test_meshed_matches_single_device(self, granite, eight_devices):
+        api, train = granite
+        one = SpeculativeGenerator(
+            api=api, train_params=train, draft_plan=draft_plan(),
+            verify_plan=mixed_plan(), k=3, max_len=48)
+        par = SpeculativeGenerator(
+            api=api, train_params=train, draft_plan=draft_plan(),
+            verify_plan=mixed_plan(), k=3, max_len=48,
+            mesh=make_serve_mesh(2, 2))
+        a = np.asarray(one.generate(_prompts(api), 12))
+        b = np.asarray(par.generate(_prompts(api), 12))
+        assert (a == b).all()
+
+
+class TestRegroupRoundTrip:
+    """Satellite: the one-weight-store re-pack is byte-exact under
+    plan-point round-trips."""
+
+    def _assert_trees_equal(self, a, b):
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            assert x.shape == y.shape and x.dtype == y.dtype
+            assert (np.asarray(x) == np.asarray(y)).all()
+
+    def test_draft_verify_draft_round_trip(self, granite):
+        api, train = granite
+        cfg = api.cfg
+        vplan, dplan = mixed_plan(), draft_plan()
+        assert len(transformer.scan_format_groups(cfg, vplan)) >= 3, \
+            "verify plan must split the stack into >= 2 group boundaries"
+        direct_v = transformer.regroup_layers(cfg, train, vplan)
+        direct_d = transformer.regroup_layers(cfg, train, dplan)
+        # draft -> verify -> draft == direct draft layout
+        rt_d = transformer.regroup_layers(
+            cfg, transformer.regroup_layers(cfg, direct_d, vplan), dplan)
+        self._assert_trees_equal(rt_d, direct_d)
+        # verify -> draft -> verify == direct verify layout
+        rt_v = transformer.regroup_layers(
+            cfg, transformer.regroup_layers(cfg, direct_v, dplan), vplan)
+        self._assert_trees_equal(rt_v, direct_v)
+
+    def test_olmoe_regroup_round_trip(self):
+        api = configs.get("olmoe-1b-7b", reduced=True)
+        train = api.init_params(jax.random.PRNGKey(0), "train")
+        vplan = PrecisionPlan(layers=(
+            ("l1.expert", LayerPlan(w_bits=2, k=2)),
+            ("router", LayerPlan(w_bits=8)),
+        ), kv=KVCachePlan(k=4, store="packed"), name="moe-mixed")
+        dplan = draft_plan()
+        if len(transformer.scan_format_groups(api.cfg, vplan)) < 2:
+            pytest.skip("reduced olmoe stack too shallow to split")
+        direct_v = transformer.regroup_layers(api.cfg, train, vplan)
+        back = transformer.regroup_layers(api.cfg, direct_v, dplan)
+        again = transformer.regroup_layers(api.cfg, back, vplan)
+        la, lb = jax.tree.leaves(direct_v), jax.tree.leaves(again)
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            assert (np.asarray(x) == np.asarray(y)).all()
+
+
+class TestSchedulerSpeculative:
+    def test_scheduler_results_match_non_speculative(self, granite):
+        api, train = granite
+        api_v = dataclasses.replace(api, policy=mixed_plan())
+        gen_v = Generator(api_v, pack_for_serving(api_v, train), max_len=32)
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(0, api.cfg.vocab, size=(L,)).astype(np.int32)
+                   for L in (7, 7, 5, 7)]
+        n_news = [9, 6, 8, 1]
+
+        s0 = GenerateScheduler(gen_v, slots=3, max_len=32)
+        base = [s0.submit(p, n) for p, n in zip(prompts, n_news)]
+        s0.run_until_idle()
+
+        sg = SpeculativeGenerator(api=api, train_params=train,
+                                  draft_plan=draft_plan(),
+                                  verify_plan=mixed_plan(), k=3, max_len=32)
+        s1 = GenerateScheduler(sg, slots=3, max_len=32)
+        spec = [s1.submit(p, n) for p, n in zip(prompts, n_news)]
+        s1.run_until_idle()
+
+        for i, (b, s) in enumerate(zip(base, spec)):
+            assert (b.result == s.result).all(), f"request {i} diverged"
+
+        st = s1.stats()
+        assert st["drafted_tokens"] > 0
+        assert st["accept_rate"] == sg.accept_rate
+        st0 = s0.stats()
+        assert st0["accept_rate"] == 0.0
+        assert st0["drafted_tokens"] == 0.0 and st0["accepted_tokens"] == 0.0
+
+    def test_speculative_slot_accounting_caps_at_remaining(self, granite):
+        """n_new == 2 leaves one post-prefill token: k_eff clamps to 0
+        and the slot still finishes with exactly n_new tokens."""
+        api, train = granite
+        sg = SpeculativeGenerator(api=api, train_params=train,
+                                  draft_plan=draft_plan(),
+                                  verify_plan=mixed_plan(), k=4, max_len=32)
+        sched = GenerateScheduler(sg, slots=2, max_len=32)
+        t = sched.submit(_prompts(api, b=1).ravel(), 2)
+        sched.run_until_idle()
+        assert t.result.shape == (2,)
+
+
+class TestSampleSeam:
+    def test_default_is_greedy_argmax(self, granite):
+        api, train = granite
+        api_v = dataclasses.replace(api, policy=mixed_plan())
+        packed = pack_for_serving(api_v, train)
+        a = Generator(api_v, packed, max_len=32)
+        b = Generator(api_v, packed, max_len=32,
+                      sample_fn=lambda logits, key: jnp.argmax(logits, -1))
+        pa = np.asarray(a.generate(_prompts(api), 8))
+        pb = np.asarray(b.generate(_prompts(api), 8))
+        assert (pa == pb).all()
+
+    def test_injected_sampler_gets_fresh_keys(self, granite):
+        api, train = granite
+        api_v = dataclasses.replace(api, policy=mixed_plan())
+        packed = pack_for_serving(api_v, train)
+        seen = []
+
+        def sampler(logits, key):
+            seen.append(np.asarray(key))
+            return jax.random.categorical(key, logits.astype(jnp.float32))
+
+        g = Generator(api_v, packed, max_len=32, sample_fn=sampler)
+        out = g.generate(_prompts(api, b=1), 6, key=jax.random.PRNGKey(7))
+        assert out.shape == (1, 6)
+        assert len(seen) == 6
+        assert len({k.tobytes() for k in seen}) == 6, \
+            "every sampled step must consume a distinct PRNG key"

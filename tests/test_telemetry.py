@@ -331,6 +331,7 @@ class TestStatsSchemaParity:
         "level", "throttled", "transitions",
         "cache_bytes_per_slot", "resident_cache_bytes",
         "resident_cache_fp_bytes", "kv_cache_compression",
+        "accept_rate", "drafted_tokens", "accepted_tokens",
     }
 
     def test_image_scheduler_keys(self):
